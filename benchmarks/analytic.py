@@ -1,0 +1,269 @@
+"""Analytic per-device FLOP / HBM-byte / collective-byte model.
+
+Why analytic: XLA's ``cost_analysis()`` on the dry-run artifact counts each
+``while`` body **once**, so any scanned program (layer scan, CE chunk scan,
+chunked attention) under-reports by the trip counts.  The collective parse
+has the same issue.  This module computes the exact totals from the model
+configuration -- the same arithmetic the compiled program executes, loop
+trip counts included -- and the roofline table reports both (analytic as
+primary, cost_analysis as the per-trace cross-check).
+
+Conventions (per device, per step):
+  * dense matmul (m,k)x(k,n): 2mkn FLOPs
+  * train multiplier: forward 1x + backward 2x + block-remat re-forward 1x
+    = 4x forward FLOPs (chunked attention adds one more forward of itself:
+    its remat sits inside the block remat)
+  * attention scores+pv: 4 * B * H * Sq * Skv_eff * hd (x2 for fp32
+    accumulate not counted -- FLOPs are dtype-agnostic)
+  * HBM bytes: parameter reads + activation traffic approximated as
+    2 bytes * (reads + writes) of every major tensor; this is a lower
+    bound (no XLA spills)
+  * collective bytes: what actually crosses links, with standard ring
+    factors: all-gather / reduce-scatter of N bytes moves N*(P-1)/P per
+    device; allreduce 2N*(P-1)/P; ppermute N.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+from repro.core.cost_model import TPU_V5E_ICI
+from repro.core.schedule import build_generalized, build_reduce_scatter
+from repro.models.config import ModelConfig, ShapeConfig
+
+BF16 = 2
+F32 = 4
+
+# hardware constants (TPU v5e)
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s
+LINK_BW = 50e9               # B/s per ICI link
+
+
+@dataclass
+class CellModel:
+    flops: float              # per device per step
+    hbm_bytes: float
+    coll_bytes: float         # per device, link-crossing bytes
+    model_flops: float        # 6*N_active*tokens_global / chips
+    detail: Dict[str, float]
+
+    def terms(self, chips_unused=None):
+        return {
+            "compute_s": self.flops / PEAK_FLOPS,
+            "memory_s": self.hbm_bytes / HBM_BW,
+            "collective_s": self.coll_bytes / LINK_BW,
+        }
+
+    @property
+    def dominant(self):
+        t = self.terms()
+        return max(t, key=t.get)
+
+
+def _attn_eff_kv(S, window, causal=True):
+    if window is not None and window < S:
+        return window
+    return S / 2 if causal else S
+
+
+def block_fwd_flops(cfg: ModelConfig, kind: str, B, S, tp, *, moe=True,
+                    decode_kv=None):
+    """Forward FLOPs of one block on one device (B = local batch)."""
+    d = cfg.d_model
+    fl = 0.0
+    if kind in ("attn", "local_attn"):
+        repl = cfg.n_heads % tp != 0
+        hl = cfg.n_heads if repl else cfg.n_heads // tp
+        kvl = cfg.n_kv_heads if repl else max(cfg.n_kv_heads // tp, 1)
+        hd = cfg.hd
+        fl += 2 * B * S * d * (hl * hd)            # q
+        fl += 2 * B * S * d * (kvl * hd) * 2       # k, v
+        kv_eff = decode_kv if decode_kv is not None else \
+            _attn_eff_kv(S, cfg.window if (kind == "local_attn" or
+                                           cfg.window) else None, cfg.causal)
+        fl += 4 * B * hl * S * kv_eff * hd         # scores + pv
+        fl += 2 * B * S * (hl * hd) * d            # out proj
+        if moe and cfg.moe is not None:
+            m = cfg.moe
+            tokens = B * S
+            cap_tokens = tokens * m.top_k * m.capacity_factor
+            fl += 2 * tokens * d * m.n_experts     # router
+            per_tok = 3 * 2 * d * (m.d_expert // tp)
+            fl += cap_tokens * per_tok
+            if m.n_shared:
+                fl += tokens * 3 * 2 * d * (m.d_shared // tp)
+        elif cfg.d_ff:
+            n_mats = 3 if cfg.act in ("swiglu", "geglu") else 2
+            fl += n_mats * 2 * B * S * d * (cfg.d_ff // tp)
+    elif kind == "rglru":
+        w = (cfg.rnn_width or d) // tp
+        fl += 4 * 2 * B * S * d * w                # gate, x, rg, ig projs
+        fl += 2 * B * S * w * cfg.conv_width       # conv
+        fl += 10 * B * S * w                       # scan elementwise
+        fl += 2 * B * S * w * d                    # out proj
+        if cfg.d_ff:
+            n_mats = 3 if cfg.act in ("swiglu", "geglu") else 2
+            fl += n_mats * 2 * B * S * d * (cfg.d_ff // tp)
+    elif kind == "mlstm":
+        wfull = int(d * cfg.mlstm_proj_factor)
+        wl = wfull // tp
+        H = cfg.n_heads
+        dk = wfull // H
+        dv = wl // H
+        fl += 2 * B * S * d * wfull * 2            # q, k (replicated width)
+        fl += 2 * B * S * d * wl * 2               # v, gate
+        fl += 2 * B * S * d * H * 2                # i, f
+        fl += B * S * H * (4 * dv * dk + 4 * dk)   # state update + readout
+        fl += 2 * B * S * wl * d                   # out proj
+    elif kind == "slstm":
+        # replicated across TP (documented inefficiency)
+        fl += 4 * 2 * B * S * d * d
+        hd = d // cfg.n_heads
+        fl += 4 * 2 * B * S * d * hd               # recurrent R mats
+        fl += 2 * B * S * d * d                    # out proj
+    fl += 2 * 8 * B * S * d / tp                   # norms etc (minor)
+    return fl
+
+
+def train_cell(cfg: ModelConfig, shape: ShapeConfig, *, dp: int, tp: int,
+               param_mode: str = "fsdp", pods: int = 1) -> CellModel:
+    B = shape.global_batch // dp                   # local batch
+    S = shape.seq_len
+    d = cfg.d_model
+    detail: Dict[str, float] = {}
+
+    fwd = sum(block_fwd_flops(cfg, k, B, S, tp) for k in cfg.blocks)
+    # lm head + embed
+    fwd += 2 * B * S * d * (cfg.vocab // tp)
+    flops = 4.0 * fwd                              # fwd + remat + bwd(2x)
+    # chunked attention remat: one extra attention forward
+    attn_extra = sum(4 * B * (cfg.n_heads // tp if cfg.n_heads % tp == 0
+                              else cfg.n_heads) * S *
+                     _attn_eff_kv(S, cfg.window, cfg.causal) * cfg.hd
+                     for k in cfg.blocks if k in ("attn", "local_attn"))
+    flops += attn_extra
+    detail["fwd_flops"] = fwd
+
+    # optimizer flops ~ 10 * local params (negligible, included)
+    n_params = cfg.param_count()
+    local_params = n_params / tp / (dp if param_mode == "fsdp" else 1)
+    flops += 10 * local_params
+
+    # ---- HBM bytes (lower bound) -----------------------------------
+    act = B * S * d / tp * BF16                    # one residual tensor
+    hbm = 0.0
+    hbm += len(cfg.blocks) * 14 * act              # per block r/w traffic
+    hbm += 3 * (n_params / tp / (dp if param_mode == "fsdp" else 1)) * F32 \
+        * 3                                        # params+m+v read/write
+    hbm += 2 * (n_params / tp) * BF16 * 2          # gathered use fwd+bwd
+    detail["act_bytes"] = act * len(cfg.blocks) * 14
+
+    # ---- collective bytes -------------------------------------------
+    coll = 0.0
+    ring = lambda n, p: n * (p - 1) / p if p > 1 else 0.0
+    # TP sequence-parallel boundary: per block ag + rs of (B,S,d) bf16,
+    # x2 (fwd) x2 (bwd transpose) [+1 remat re-gather]
+    n_boundary = 0
+    for k in cfg.blocks:
+        full_value = (k == "slstm"
+                      or (k in ("attn", "local_attn")
+                          and cfg.n_heads % tp != 0))
+        per_block = 1 if cfg.parallel_residual else (
+            2 if (k in ("attn", "local_attn", "rglru")
+                  and (cfg.d_ff or cfg.moe)) else 1)
+        # gather always happens; scatter skipped for full-value blocks
+        n_boundary += per_block * (2 if not full_value else 1)
+    tensor = B * S * d * BF16
+    coll += ring(tensor, tp) * n_boundary * 3      # fwd + remat + bwd
+    detail["tp_coll"] = ring(tensor, tp) * n_boundary * 3
+    # CE: gathers hidden chunks (total B*S*d) + per-chunk scalar psums
+    coll += ring(tensor, tp) * 3
+    # embed scatter
+    coll += ring(tensor, tp)
+
+    P_dp = dp
+    if param_mode == "fsdp":
+        # per block: ag params (bf16 use) fwd + remat, rs grads (f32)
+        pbytes = (n_params - cfg.vocab * d * (1 if cfg.tie_embeddings else 2)
+                  ) / tp * F32
+        coll += 2 * ring(pbytes * 0.5, P_dp)       # gather bf16 x2
+        coll += ring(pbytes, P_dp)                 # grad rs f32
+        detail["fsdp_coll"] = 3 * ring(pbytes, P_dp)
+        # replicated-over-dp leaves (norms etc) via generalized allreduce
+        small = 0.05 * pbytes / 50                 # rough
+        coll += 2 * ring(small, P_dp)
+    else:
+        # gradient sync through the paper's schedule
+        sched = build_generalized(P_dp, 0) if param_mode == "dp" else \
+            build_reduce_scatter(P_dp)
+        gbytes = n_params / tp * F32
+        u = gbytes / P_dp
+        coll += sched.units_sent * u
+        if param_mode == "zero1":
+            coll += build_generalized(P_dp, 0).units_sent * u / 2  # ag params
+        detail["grad_coll"] = sched.units_sent * u
+
+    model_flops = 6 * _active_params(cfg) * shape.global_batch * S \
+        / (dp * tp)
+    return CellModel(flops=flops, hbm_bytes=hbm, coll_bytes=coll,
+                     model_flops=model_flops, detail=detail)
+
+
+def _active_params(cfg: ModelConfig) -> float:
+    n = cfg.param_count()
+    if cfg.moe is None:
+        return n
+    m = cfg.moe
+    routed = m.n_experts * 3 * cfg.d_model * m.d_expert * \
+        (len([k for k in cfg.blocks if k in ("attn", "local_attn")])
+         - m.first_dense)
+    active = n - routed * (1 - m.top_k / m.n_experts)
+    return active
+
+
+def serve_cell(cfg: ModelConfig, shape: ShapeConfig, *, dp: int, tp: int,
+               pods: int = 1) -> CellModel:
+    """decode (S_new=1 against a cache) or prefill (S_new=seq_len)."""
+    decode = shape.kind == "decode"
+    B = max(shape.global_batch // dp, 1)
+    S_new = 1 if decode else shape.seq_len
+    kv_len = shape.seq_len
+    d = cfg.d_model
+    eff_kv = min(kv_len, cfg.window) if (cfg.window and decode) else kv_len
+
+    fwd = sum(block_fwd_flops(cfg, k, B, S_new, tp,
+                              decode_kv=eff_kv if decode else None)
+              for k in cfg.blocks)
+    fwd += 2 * B * S_new * d * (cfg.vocab // tp)
+    n_params = cfg.param_count()
+
+    # HBM: every param read once + cache traffic
+    hbm = n_params / tp * BF16
+    cache_bytes = 0.0
+    for k in cfg.blocks:
+        if k in ("attn", "local_attn"):
+            kvl = max(cfg.n_kv_heads // tp, 1) if cfg.n_heads % tp == 0 \
+                else cfg.n_kv_heads
+            cache_bytes += 2 * B * kvl * eff_kv * cfg.hd * BF16
+    hbm += cache_bytes + 6 * B * S_new * d / tp * BF16 * len(cfg.blocks)
+
+    ring = lambda n, p: n * (p - 1) / p if p > 1 else 0.0
+    tensor = B * S_new * d * BF16
+    coll = 0.0
+    for k in cfg.blocks:
+        full_value = (k == "slstm" or (k in ("attn", "local_attn")
+                                       and cfg.n_heads % tp != 0))
+        # decode path: psum costs ~2x ring allreduce
+        per = 2 if (cfg.d_ff or cfg.moe) and k in (
+            "attn", "local_attn", "rglru") else 1
+        if not full_value:
+            coll += 2 * ring(tensor, tp) * per
+    coll += 2 * ring(B * S_new * cfg.vocab / tp * F32, tp)  # logit gather
+
+    # per-device useful flops: B is already dp-local, divide by tp
+    model_flops = 2 * _active_params(cfg) * B * S_new / tp
+    return CellModel(flops=fwd, hbm_bytes=hbm, coll_bytes=coll,
+                     model_flops=model_flops,
+                     detail={"cache_bytes": cache_bytes})

@@ -1,0 +1,168 @@
+"""Benchmark harness: one function per paper figure + microbenchmarks.
+
+Prints ``name,us_per_call,derived`` CSV rows (cost-model times are derived
+quantities; wall-clock rows come from the 8-virtual-device microbench).
+
+Figures reproduced from the paper (all cost-model driven, validated by the
+schedule compiler's exact per-step accounting):
+  fig1   -- ratio tau_proposed / tau_best_sota over (P, m)
+  fig7   -- small messages,  P=127: proposed vs RD / RH / OpenMPI policy
+  fig8   -- large messages,  P=127
+  fig9   -- medium messages, P=127: proposed vs RH
+  fig10  -- proposed r-sweep at P=127 (bw-opt .. lat-opt envelope)
+  fig11  -- vs P at m=425 B (the profiling study's average message)
+  fig12  -- vs P at m=9 KB
+plus:
+  sched  -- compiled-schedule step/traffic counts vs closed forms
+  wall   -- real wall-clock of the JAX executor on 8 host devices
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.core.cost_model import (PAPER_10GE, optimal_r_search,  # noqa: E402
+                                   schedule_cost, tau_best_sota,
+                                   tau_bw_optimal, tau_intermediate,
+                                   tau_latency_optimal, tau_openmpi_policy,
+                                   tau_recursive_doubling,
+                                   tau_recursive_halving, tau_ring)
+from repro.core.schedule import (build_generalized, build_ring,  # noqa: E402
+                                 max_r, n_steps_log, schedule_summary)
+
+F = PAPER_10GE
+
+
+def _row(name, us, derived=1):
+    print(f"{name},{us:.3f},{derived}")
+
+
+def fig1_ratio_heatmap():
+    """Expected tau_proposed / tau_best over P and m (paper Fig. 1)."""
+    for P in [15, 31, 63, 127, 255, 511, 1000]:
+        for m in [64, 425, 4096, 65536, 1 << 20, 1 << 24]:
+            r = optimal_r_search(P, float(m), F)
+            ratio = tau_intermediate(P, float(m), r, F) / \
+                tau_best_sota(P, float(m), F)
+            _row(f"fig1,P={P},m={m},ratio={ratio:.3f}",
+                 tau_intermediate(P, float(m), r, F) * 1e6)
+
+
+def fig7_small_msgs():
+    P = 127
+    for m in [16, 64, 256, 425, 1024, 4096, 10240]:
+        m = float(m)
+        r = optimal_r_search(P, m, F)
+        _row(f"fig7,m={m:.0f},proposed(r={r})",
+             tau_intermediate(P, m, r, F) * 1e6)
+        _row(f"fig7,m={m:.0f},openmpi", tau_openmpi_policy(P, m, F) * 1e6)
+        _row(f"fig7,m={m:.0f},recursive_halving",
+             tau_recursive_halving(P, m, F) * 1e6)
+
+
+def fig8_large_msgs():
+    P = 127
+    for m in [1 << 18, 1 << 20, 1 << 22, 1 << 24, 1 << 26]:
+        m = float(m)
+        r = optimal_r_search(P, m, F)
+        _row(f"fig8,m={m:.0f},proposed(r={r})",
+             tau_intermediate(P, m, r, F) * 1e6)
+        _row(f"fig8,m={m:.0f},ring", tau_ring(P, m, F) * 1e6)
+        _row(f"fig8,m={m:.0f},recursive_halving",
+             tau_recursive_halving(P, m, F) * 1e6)
+
+
+def fig9_medium_msgs():
+    P = 127
+    for m in [16384, 32768, 65536, 131072]:
+        m = float(m)
+        r = optimal_r_search(P, m, F)
+        _row(f"fig9,m={m:.0f},proposed(r={r})",
+             tau_intermediate(P, m, r, F) * 1e6)
+        _row(f"fig9,m={m:.0f},recursive_halving",
+             tau_recursive_halving(P, m, F) * 1e6)
+
+
+def fig10_r_sweep():
+    P = 127
+    for m in [425.0, 8192.0, 131072.0]:
+        for r in range(n_steps_log(P) + 1):
+            _row(f"fig10,m={m:.0f},r={r}",
+                 tau_intermediate(P, m, r, F) * 1e6)
+
+
+def fig11_vs_P_small():
+    m = 425.0
+    for P in [8, 16, 17, 31, 32, 33, 63, 64, 65, 100, 127, 128, 129, 200]:
+        r = optimal_r_search(P, m, F)
+        _row(f"fig11,P={P},proposed(r={r})",
+             tau_intermediate(P, m, r, F) * 1e6)
+        _row(f"fig11,P={P},recursive_doubling",
+             tau_recursive_doubling(P, m, F) * 1e6)
+
+
+def fig12_vs_P_9kb():
+    m = 9.0 * 1024
+    for P in [16, 32, 33, 64, 100, 127, 128, 200, 256, 300]:
+        r = optimal_r_search(P, m, F)
+        _row(f"fig12,P={P},proposed(r={r})",
+             tau_intermediate(P, m, r, F) * 1e6)
+        _row(f"fig12,P={P},ring", tau_ring(P, m, F) * 1e6)
+        _row(f"fig12,P={P},recursive_halving",
+             tau_recursive_halving(P, m, F) * 1e6)
+
+
+def sched_table():
+    """Exact compiled-schedule accounting vs the paper's closed forms."""
+    for P in [7, 8, 12, 127]:
+        for r in range(max_r(P) + 1):
+            s = schedule_summary(build_generalized(P, r))
+            _row(f"sched,P={P},r={r},steps={s['steps']},"
+                 f"sent={s['units_sent']},reduced={s['units_reduced']}",
+                 schedule_cost(build_generalized(P, r), 425.0, F) * 1e6)
+        rg = schedule_summary(build_ring(P))
+        _row(f"sched,P={P},ring,steps={rg['steps']},sent={rg['units_sent']}",
+             schedule_cost(build_ring(P), 425.0, F) * 1e6)
+        from repro.core.schedule import build_bruck_all_gather
+        bk = schedule_summary(build_bruck_all_gather(P))
+        _row(f"sched,P={P},bruck_allgather,steps={bk['steps']},"
+             f"sent={bk['units_sent']}",
+             schedule_cost(build_bruck_all_gather(P), 425.0, F) * 1e6)
+
+
+def wallclock_8dev():
+    """Real wall-clock of the JAX ppermute executor on 8 host devices."""
+    script = os.path.join(os.path.dirname(__file__), "wallclock_worker.py")
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    res = subprocess.run([sys.executable, script], env=env,
+                         capture_output=True, text=True, timeout=900)
+    if res.returncode != 0:
+        print(f"wallclock,ERROR,{res.stderr[-200:]}", file=sys.stderr)
+        return
+    for line in res.stdout.strip().splitlines():
+        if line.startswith("wall,"):
+            print(line)
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    fig1_ratio_heatmap()
+    fig7_small_msgs()
+    fig8_large_msgs()
+    fig9_medium_msgs()
+    fig10_r_sweep()
+    fig11_vs_P_small()
+    fig12_vs_P_9kb()
+    sched_table()
+    if os.environ.get("SKIP_WALLCLOCK") != "1":
+        wallclock_8dev()
+
+
+if __name__ == "__main__":
+    main()

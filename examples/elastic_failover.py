@@ -1,0 +1,64 @@
+"""Elastic failover demo: lose a node mid-training, keep going.
+
+The scenario the paper's algorithm makes cheap: training on dp=8; two
+nodes "fail"; the run resizes to dp=6 -- a non-power-of-two count that
+breaks Recursive Halving/Doubling but is a first-class citizen of the
+generalized allreduce (Z_6 cyclic group, ceil(lg 6)=3-step reduce-scatter,
+zero protocol overhead).  Parameters restore exactly; training continues.
+
+Run:
+  PYTHONPATH=src python examples/elastic_failover.py
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+import shutil
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main():
+    import jax
+    from repro.data.pipeline import DataConfig
+    from repro.models.config import ModelConfig
+    from repro.runtime.elastic import ElasticConfig, ElasticRunner
+    from repro.train.optimizer import OptConfig
+
+    cfg = ModelConfig(name="tiny-lm", family="dense", n_layers=2,
+                      d_model=96, n_heads=4, n_kv_heads=2, d_ff=256,
+                      vocab=384, head_dim=24, act="swiglu")
+    ckpt = "/tmp/repro_elastic_demo"
+    shutil.rmtree(ckpt, ignore_errors=True)
+    runner = ElasticRunner(
+        cfg, OptConfig(lr=1e-3, warmup_steps=5, total_steps=100),
+        ElasticConfig(ckpt_dir=ckpt, ckpt_every=10, param_mode="dp"),
+        DataConfig(seq_len=64, global_batch=24),
+        mesh_shape=(8, 1))
+
+    print("phase 1: dp=8 (power of two)")
+    logs = runner.run(20)
+    print(f"  step {logs[-1]['step']}  loss {logs[-1]['loss']:.4f}")
+
+    print("\n!! simulated failure of 2 nodes -> resize to dp=6 "
+          "(non-power-of-two; Z_6 cyclic schedules)")
+    devices = jax.devices()[:6]
+    runner.resize((6, 1), devices=devices)
+
+    print("phase 2: dp=6, training continues from the same parameters")
+    logs2 = runner.run(20)
+    print(f"  step {logs2[-1]['step']}  loss {logs2[-1]['loss']:.4f}")
+    assert logs2[-1]["loss"] < logs[0]["loss"], "loss should keep improving"
+
+    print("\nphase 3: crash-recovery -- restore the last committed "
+          "checkpoint")
+    runner.ckpt.wait()
+    step = runner.restore_latest()
+    print(f"  restored step {step}; continuing 5 more steps on dp=6")
+    logs3 = runner.run(5)
+    print(f"  step {logs3[-1]['step']}  loss {logs3[-1]['loss']:.4f}")
+    print("\nelastic failover OK: 8 -> 6 devices with exact state carry")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Batched serving demo: chunked prefill + decode with wave batching.
+
+Serves a small decoder with the production serve_step (KV caches, greedy
+or temperature sampling) over more requests than cache slots.
+
+Run:
+  PYTHONPATH=src python examples/serve_demo.py
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+
+def main():
+    import jax
+    from repro.launch.mesh import make_mesh, parallel_config_for
+    from repro.models.config import ModelConfig
+    from repro.models.model import init_params
+    from repro.serve.engine import Engine, Request
+
+    cfg = ModelConfig(name="demo-lm", family="dense", n_layers=3,
+                      d_model=128, n_heads=4, n_kv_heads=2, d_ff=384,
+                      vocab=512, head_dim=32, act="swiglu")
+    mesh = make_mesh((2, 4), ("data", "model"))
+    pc = parallel_config_for(mesh, param_mode="dp")
+    params, _ = init_params(cfg, pc, jax.random.PRNGKey(0))
+
+    eng = Engine(cfg, pc, mesh, params, batch_slots=4, max_len=96,
+                 prefill_chunk=16, temperature=0.7, seed=0)
+    rng = np.random.default_rng(1)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab, rng.integers(4, 24))
+                    .astype(np.int32),
+                    max_new_tokens=int(rng.integers(4, 12)))
+            for _ in range(10)]
+
+    t0 = time.perf_counter()
+    eng.generate(reqs)
+    dt = time.perf_counter() - t0
+    total = sum(len(r.out_tokens) for r in reqs)
+    for i, r in enumerate(reqs):
+        print(f"req {i}: prompt[{len(r.prompt)}] -> {r.out_tokens}")
+    print(f"\n{len(reqs)} requests, {total} tokens in {dt:.1f}s "
+          f"({total/dt:.1f} tok/s, dp=2 x tp=4 mesh, wave batching)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""End-to-end training driver.
+
+Trains a decoder LM with the full production stack -- manual-SPMD model,
+sequence-parallel TP, the paper's generalized allreduce / reduce-scatter
+for gradient sync, AdamW (dp | zero1 | fsdp layouts), synthetic data
+pipeline, async checkpointing, straggler watch.
+
+Presets:
+  tiny  -- ~1M params, runs a few hundred steps in minutes on 1 CPU core
+  100m  -- ~100M-param danube-style model (the assignment's e2e driver);
+           on real hardware: dp x tp mesh of your choice
+
+Examples:
+  PYTHONPATH=src python examples/train_lm.py --preset tiny --steps 40
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src python examples/train_lm.py --preset tiny \
+      --mesh 4x2 --param-mode zero1 --steps 40
+  PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def build_cfg(preset: str):
+    from repro.models.config import ModelConfig
+    if preset == "tiny":
+        return ModelConfig(
+            name="tiny-lm", family="dense", n_layers=4, d_model=128,
+            n_heads=4, n_kv_heads=2, d_ff=352, vocab=512, head_dim=32,
+            act="swiglu"), 128, 8
+    if preset == "100m":
+        # danube-family ~100M: 12L, d=768, GQA 12/4, swiglu
+        return ModelConfig(
+            name="danube-100m", family="dense", n_layers=12, d_model=768,
+            n_heads=12, n_kv_heads=4, d_ff=2048, vocab=32000, head_dim=64,
+            act="swiglu", window=1024), 512, 8
+    raise SystemExit(f"unknown preset {preset}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=["tiny", "100m"])
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--mesh", default="1x1", help="DPxTP, e.g. 4x2")
+    ap.add_argument("--param-mode", default="dp",
+                    choices=["dp", "zero1", "fsdp"])
+    ap.add_argument("--grad-r", type=int, default=None,
+                    help="override allreduce step count (default autotune)")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    import jax
+    from repro.data.pipeline import DataConfig, DataLoader
+    from repro.launch.mesh import make_mesh, parallel_config_for
+    from repro.models.model import init_params
+    from repro.runtime.elastic import ElasticConfig, ElasticRunner
+    from repro.train.optimizer import OptConfig
+
+    cfg, seq, batch = build_cfg(args.preset)
+    dpn, tpn = (int(x) for x in args.mesh.split("x"))
+    assert dpn * tpn <= len(jax.devices()), \
+        f"mesh {args.mesh} needs {dpn*tpn} devices, have {len(jax.devices())}"
+
+    oc = OptConfig(lr=args.lr, warmup_steps=min(50, args.steps // 5 + 1),
+                   total_steps=args.steps)
+    ec = ElasticConfig(ckpt_dir=args.ckpt_dir,
+                       ckpt_every=max(args.steps // 4, 10),
+                       param_mode=args.param_mode)
+    dc = DataConfig(seq_len=seq, global_batch=batch)
+
+    runner = ElasticRunner(cfg, oc, ec, dc, (dpn, tpn))
+    n_params = sum(x.size for x in jax.tree.leaves(runner.params))
+    print(f"model={cfg.name} params={n_params/1e6:.1f}M "
+          f"mesh=dp{dpn}xtp{tpn} mode={args.param_mode}")
+
+    t0 = time.perf_counter()
+    logs = runner.run(args.steps)
+    dt = time.perf_counter() - t0
+    for rec in logs[::args.log_every] + logs[-1:]:
+        print(f"  step {rec['step']:5d}  loss {rec['loss']:.4f}  "
+              f"{rec['dt']*1e3:7.1f} ms")
+    toks = args.steps * batch * seq
+    print(f"done: {args.steps} steps, {toks/dt:.0f} tok/s, "
+          f"final loss {logs[-1]['loss']:.4f} "
+          f"(start {logs[0]['loss']:.4f})")
+    if runner.alerts:
+        print(f"straggler alerts: {runner.alerts}")
+    runner.ckpt.wait()
+
+
+if __name__ == "__main__":
+    main()

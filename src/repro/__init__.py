@@ -1,0 +1,3 @@
+"""repro: production JAX framework around the generalized Allreduce
+(Kolmakov & Zhang, 2020)."""
+__version__ = "1.0.0"

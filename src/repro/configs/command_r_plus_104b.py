@@ -1,0 +1,18 @@
+"""command-r-plus-104b [dense]: GQA, no-bias, parallel residual.
+[hf:CohereForAI/c4ai-command-r-v01; unverified]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="command-r-plus-104b", family="dense",
+    n_layers=64, d_model=12288, n_heads=96, n_kv_heads=8,
+    d_ff=33792, vocab=256000, head_dim=128, act="swiglu",
+    parallel_residual=True, norm="layernorm", rope_theta=75_000_000.0,
+    tie_embeddings=True,
+)
+
+REDUCED = ModelConfig(
+    name="command-r-plus-104b-reduced", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+    d_ff=176, vocab=512, head_dim=16, act="swiglu",
+    parallel_residual=True, norm="layernorm", tie_embeddings=True,
+)

@@ -1,0 +1,15 @@
+"""granite-34b [dense]: llama-arch code model, MQA (kv=1).
+[arXiv:2405.04324; hf]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-34b", family="dense",
+    n_layers=88, d_model=6144, n_heads=48, n_kv_heads=1,
+    d_ff=24576, vocab=49152, head_dim=128, act="swiglu",
+)
+
+REDUCED = ModelConfig(
+    name="granite-34b-reduced", family="dense",
+    n_layers=4, d_model=64, n_heads=4, n_kv_heads=1,
+    d_ff=256, vocab=256, head_dim=16, act="swiglu",
+)

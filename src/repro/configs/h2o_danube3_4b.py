@@ -1,0 +1,18 @@
+"""h2o-danube3-4b [dense]: llama+mistral mix with SWA.
+[arXiv:2401.16818; unverified]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="h2o-danube3-4b", family="dense",
+    n_layers=24, d_model=3840, n_heads=32, n_kv_heads=8,
+    d_ff=10240, vocab=32000, head_dim=120,
+    window=4096, act="swiglu", rope_theta=10_000.0,
+    notes="SWA window 4096; head_dim 120 (3840/32) is not 128-aligned -- "
+          "MXU pads to 128 (documented in roofline).",
+)
+
+REDUCED = ModelConfig(
+    name="h2o-danube3-4b-reduced", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+    d_ff=160, vocab=256, head_dim=16, window=32, act="swiglu",
+)

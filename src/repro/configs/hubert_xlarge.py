@@ -1,0 +1,19 @@
+"""hubert-xlarge [audio]: encoder-only transformer backbone; the conv
+waveform frontend is a stub (input_specs provides frame embeddings).
+[arXiv:2106.07447; unverified]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hubert-xlarge", family="audio",
+    n_layers=48, d_model=1280, n_heads=16, n_kv_heads=16,
+    d_ff=5120, vocab=504, head_dim=80, act="gelu", norm="layernorm",
+    causal=False, frontend="audio",
+    notes="encoder-only: decode shapes skipped (no autoregressive step).",
+)
+
+REDUCED = ModelConfig(
+    name="hubert-xlarge-reduced", family="audio",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+    d_ff=128, vocab=64, head_dim=16, act="gelu", norm="layernorm",
+    causal=False, frontend="audio",
+)

@@ -1,0 +1,17 @@
+"""mixtral-8x7b [moe]: 8 experts top-2, SWA. [arXiv:2401.04088; hf]"""
+from repro.models.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x7b", family="moe",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+    d_ff=14336, vocab=32000, head_dim=128, act="swiglu",
+    window=4096,
+    moe=MoEConfig(n_experts=8, top_k=2, d_expert=14336),
+)
+
+REDUCED = ModelConfig(
+    name="mixtral-8x7b-reduced", family="moe",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+    d_ff=128, vocab=256, head_dim=16, act="swiglu", window=32,
+    moe=MoEConfig(n_experts=4, top_k=2, d_expert=128),
+)

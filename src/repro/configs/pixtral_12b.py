@@ -1,0 +1,18 @@
+"""pixtral-12b [vlm]: mistral-nemo decoder backbone; pixtral-ViT frontend
+is a stub (input_specs provides patch embeddings).
+[hf:mistralai/Pixtral-12B-2409; unverified]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="pixtral-12b", family="vlm",
+    n_layers=40, d_model=5120, n_heads=32, n_kv_heads=8,
+    d_ff=14336, vocab=131072, head_dim=128, act="swiglu",
+    rope_theta=1_000_000.0, frontend="vision", n_patches=256,
+)
+
+REDUCED = ModelConfig(
+    name="pixtral-12b-reduced", family="vlm",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+    d_ff=224, vocab=512, head_dim=16, act="swiglu",
+    frontend="vision", n_patches=8,
+)

@@ -1,0 +1,31 @@
+"""recurrentgemma-2b [hybrid]: RG-LRU + local attention in a 1:2
+attention:recurrent pattern. [arXiv:2402.19427; hf]
+
+The published model has 26 blocks: 8 x (recurrent, recurrent, local-attn)
+followed by 2 recurrent blocks.  We express that exactly as one 26-block
+cycle so the whole depth is still a single scanned unit.
+"""
+from repro.models.config import ModelConfig
+
+# published order: r r a r r a ... r r  (26 blocks).  Expressed as a
+# 2-block prefix (r, r) + 8 scanned cycles of (a, r, r), which preserves
+# the exact block sequence while keeping the scanned body small.
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b", family="hybrid",
+    n_layers=26, d_model=2560, n_heads=10, n_kv_heads=1,
+    d_ff=7680, vocab=256000, head_dim=256, act="geglu",
+    window=2048,
+    prefix=("rglru", "rglru"),
+    cycle=("local_attn", "rglru", "rglru"),
+    rnn_width=2560, conv_width=4, tie_embeddings=True,
+    notes="prefix (r,r) + 8x cycle (a,r,r) == published r r (a r r)x8; "
+          "MQA local attention, window 2048.",
+)
+
+REDUCED = ModelConfig(
+    name="recurrentgemma-2b-reduced", family="hybrid",
+    n_layers=3, d_model=64, n_heads=4, n_kv_heads=1,
+    d_ff=192, vocab=256, head_dim=16, act="geglu", window=32,
+    cycle=("rglru", "rglru", "local_attn"),
+    rnn_width=64, conv_width=4, tie_embeddings=True,
+)

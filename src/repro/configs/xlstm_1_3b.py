@@ -1,0 +1,20 @@
+"""xlstm-1.3b [ssm]: mLSTM + sLSTM blocks, 7:1. [arXiv:2405.04517; unverified]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-1.3b", family="ssm",
+    n_layers=48, d_model=2048, n_heads=4, n_kv_heads=4,
+    d_ff=0, vocab=50304, head_dim=512, act="gelu",
+    cycle=("mlstm", "mlstm", "mlstm", "mlstm",
+           "mlstm", "mlstm", "mlstm", "slstm"),
+    mlstm_proj_factor=2.0,
+    notes="d_ff=0: mLSTM/sLSTM blocks carry their own projections.",
+)
+
+REDUCED = ModelConfig(
+    name="xlstm-1.3b-reduced", family="ssm",
+    n_layers=4, d_model=64, n_heads=4, n_kv_heads=4,
+    d_ff=0, vocab=256, head_dim=16, act="gelu",
+    cycle=("mlstm", "mlstm", "mlstm", "slstm"),
+    mlstm_proj_factor=2.0,
+)

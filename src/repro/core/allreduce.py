@@ -1,0 +1,275 @@
+"""JAX executors for compiled collective schedules.
+
+Maps the paper's permutation-composition communication model onto JAX SPMD:
+
+* every communication operator ``t_g`` is a static ``lax.ppermute``
+  (a cyclic shift for ``CyclicGroup`` -- the native pattern of a TPU ICI
+  ring/torus; a pairwise exchange for ``HypercubeGroup``);
+* every distributed vector is one ``(u,)`` row of per-device state;
+* combines are local adds (optionally the Pallas ``fused_combine`` kernel).
+
+All functions below must be called *inside* ``jax.shard_map`` (manual SPMD)
+over the axis (or tuple of axes) being reduced.  The schedule is compiled
+and verified ahead of trace time (see :mod:`repro.core.schedule`), so the
+traced program is a straight-line sequence of ppermutes and adds that XLA's
+latency-hiding scheduler can overlap with compute.
+
+TPU adaptation note (vs. the paper's 10GE cluster): the cyclic group's
+powers ``t^k`` are *multi-hop* on a physical ring when k > 1.  XLA lowers a
+``collective-permute`` with shift k to k ring hops (or uses the torus'
+wraparound links), so the per-step latency term alpha grows with the hop
+distance.  The schedules still apply unchanged -- only the Fabric
+parameters used by the autotuner change (alpha_step ~ alpha_link * hops).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Callable, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .autotune import Choice, choose, schedule_for
+from .cost_model import Fabric, TPU_V5E_ICI
+from .schedule import (Schedule, build_all_gather, build_generalized,
+                       build_reduce_scatter, build_ring)
+
+AxisName = Union[str, Tuple[str, ...]]
+
+
+def axis_size(axis_name: AxisName) -> int:
+    if isinstance(axis_name, (tuple, list)):
+        return math.prod(lax.axis_size(a) for a in axis_name)
+    return lax.axis_size(axis_name)
+
+
+def _perm_for(sched: Schedule, shift: int):
+    """ppermute pairs (src, dst): device d sends to t_shift(d)."""
+    g = sched.group
+    return [(d, g.apply(shift, d)) for d in range(sched.P)]
+
+
+def _initial_row_table(sched: Schedule) -> np.ndarray:
+    """tbl[row, d] = which local chunk device d puts in initial row."""
+    P = sched.P
+    R = len(sched.initial_slots)
+    tbl = np.zeros((R, P), dtype=np.int32)
+    for k in range(R):
+        for d in range(P):
+            tbl[k, d] = sched.chunk_of_initial_row(k, d)
+    return tbl
+
+
+def _final_row_table(sched: Schedule) -> np.ndarray:
+    """tbl[c, d] = which final row holds reduced chunk c on device d."""
+    P = sched.P
+    tbl = np.full((P, P), -1, dtype=np.int32)
+    for k in range(len(sched.final_slots)):
+        for d in range(P):
+            tbl[sched.final_chunk_index(k, d), d] = k
+    assert (tbl >= 0).all()
+    return tbl
+
+
+def _run_steps(rows, sched: Schedule, axis_name: AxisName,
+               add: Callable = jnp.add):
+    """Replay the compiled steps on a per-device row list."""
+    for st in sched.steps:
+        if st.n_tx:
+            tx = jnp.stack([rows[i] for i in st.tx_rows])
+            rx = lax.ppermute(tx, axis_name, perm=_perm_for(sched, st.shift))
+        new_rows = []
+        for op in st.out:
+            if op.kind == "keep":
+                new_rows.append(rows[op.res])
+            elif op.kind == "recv":
+                new_rows.append(rx[op.arr])
+            else:
+                new_rows.append(add(rows[op.res], rx[op.arr]))
+        rows = new_rows
+    return rows
+
+
+def _pad_to_chunks(x: jnp.ndarray, P: int):
+    m = x.shape[0]
+    u = -(-m // P)
+    pad = u * P - m
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,), x.dtype)])
+    return x.reshape(P, u), m
+
+
+# ---------------------------------------------------------------------------
+#  flat (1-D) collectives; call inside shard_map
+# ---------------------------------------------------------------------------
+
+def allreduce_flat(x: jnp.ndarray, axis_name: AxisName,
+                   sched: Schedule, *, accum_dtype=None,
+                   add: Callable = jnp.add) -> jnp.ndarray:
+    """Generalized allreduce of a flat vector using a compiled schedule."""
+    P = sched.P
+    assert P == axis_size(axis_name), (P, axis_name)
+    if P == 1:
+        return x
+    orig_dtype = x.dtype
+    if accum_dtype is not None:
+        x = x.astype(accum_dtype)
+    chunks, m = _pad_to_chunks(x, P)                       # (P, u)
+    d = _linear_axis_index(axis_name)
+    init_tbl = jnp.asarray(_initial_row_table(sched))      # (R0, P)
+    rows_idx = jnp.take(init_tbl, d, axis=1)               # (R0,)
+    stacked = jnp.take(chunks, rows_idx, axis=0)           # (R0, u)
+    rows = [stacked[i] for i in range(stacked.shape[0])]
+    rows = _run_steps(rows, sched, axis_name, add=add)
+    fin_tbl = jnp.asarray(_final_row_table(sched))         # (P, P)
+    order = jnp.take(fin_tbl, d, axis=1)                   # (P,)
+    out = jnp.take(jnp.stack(rows), order, axis=0)         # (P, u)
+    out = out.reshape(-1)[:m]
+    return out.astype(orig_dtype)
+
+
+def reduce_scatter_flat(x: jnp.ndarray, axis_name: AxisName,
+                        sched: Optional[Schedule] = None, *,
+                        accum_dtype=None,
+                        add: Callable = jnp.add) -> jnp.ndarray:
+    """Reduction phase only: returns this device's fully reduced chunk.
+
+    Device d ends up owning chunk d (canonical place-0 layout).  The input
+    length must already be padded to a multiple of P.
+    """
+    P = axis_size(axis_name)
+    if sched is None:
+        sched = build_reduce_scatter(P)
+    if P == 1:
+        return x
+    orig_dtype = x.dtype
+    if accum_dtype is not None:
+        x = x.astype(accum_dtype)
+    assert x.shape[0] % P == 0, "reduce_scatter_flat needs padded input"
+    chunks = x.reshape(P, -1)
+    d = _linear_axis_index(axis_name)
+    init_tbl = jnp.asarray(_initial_row_table(sched))
+    rows_idx = jnp.take(init_tbl, d, axis=1)
+    stacked = jnp.take(chunks, rows_idx, axis=0)
+    rows = [stacked[i] for i in range(stacked.shape[0])]
+    rows = _run_steps(rows, sched, axis_name, add=add)
+    assert len(rows) == 1
+    # final row place 0 => device d owns chunk d already.
+    return rows[0].astype(orig_dtype)
+
+
+def all_gather_flat(chunk: jnp.ndarray, axis_name: AxisName,
+                    sched: Optional[Schedule] = None) -> jnp.ndarray:
+    """Distribution phase only: device d contributes chunk d, all devices
+    end with the concatenation of all chunks."""
+    P = axis_size(axis_name)
+    if sched is None:
+        sched = build_all_gather(P)
+    if P == 1:
+        return chunk
+    rows = [chunk]
+    rows = _run_steps(rows, sched, axis_name)
+    d = _linear_axis_index(axis_name)
+    fin_tbl = jnp.asarray(_final_row_table(sched))
+    order = jnp.take(fin_tbl, d, axis=1)
+    return jnp.take(jnp.stack(rows), order, axis=0).reshape(-1)
+
+
+def _linear_axis_index(axis_name: AxisName):
+    return lax.axis_index(axis_name)
+
+
+# ---------------------------------------------------------------------------
+#  pytree API with bucketing + autotuned schedule choice
+# ---------------------------------------------------------------------------
+
+def _flatten_tree(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    shapes = [l.shape for l in leaves]
+    sizes = [int(np.prod(s)) if len(s) else 1 for s in shapes]
+    dtypes = [l.dtype for l in leaves]
+    if leaves:
+        common = jnp.result_type(*dtypes)
+        flat = jnp.concatenate([l.reshape(-1).astype(common) for l in leaves])
+    else:
+        flat = jnp.zeros((0,))
+    return flat, (treedef, shapes, sizes, dtypes)
+
+
+def _unflatten_tree(flat, spec):
+    treedef, shapes, sizes, dtypes = spec
+    leaves, off = [], 0
+    for sh, sz, dt in zip(shapes, sizes, dtypes):
+        leaves.append(flat[off:off + sz].reshape(sh).astype(dt))
+        off += sz
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def allreduce_tree(tree, axis_name: AxisName, *,
+                   r: Optional[int] = None,
+                   mean: bool = False,
+                   fabric: Fabric = TPU_V5E_ICI,
+                   accum_dtype=jnp.float32,
+                   add: Callable = jnp.add):
+    """Allreduce (sum or mean) a pytree of arrays over ``axis_name`` using
+    the generalized algorithm.
+
+    If ``r`` is None the step count is autotuned from the fabric parameters
+    via the paper's eq (37) / exact search (section 8).  All leaves are
+    fused into one flat buffer so the whole gradient pays the per-step
+    latency once -- the standard "bucketing" trick.
+    """
+    P = axis_size(axis_name)
+    if P == 1:
+        return tree
+    flat, spec = _flatten_tree(tree)
+    nbytes = flat.size * flat.dtype.itemsize
+    if r is None:
+        ch = choose(P, int(nbytes), fabric)
+        sched = schedule_for(ch, P)
+    else:
+        sched = build_generalized(P, r)
+    out = allreduce_flat(flat, axis_name, sched,
+                         accum_dtype=accum_dtype, add=add)
+    if mean:
+        out = out / P
+    return _unflatten_tree(out, spec)
+
+
+def psum_tree(tree, axis_name: AxisName, *, mean: bool = False):
+    """XLA-native baseline for comparisons."""
+    out = lax.psum(tree, axis_name)
+    if mean:
+        out = jax.tree.map(lambda x: x / axis_size(axis_name), out)
+    return out
+
+
+# ---------------------------------------------------------------------------
+#  ZeRO-style helpers: reduce-scatter grads / all-gather params over DP axis
+# ---------------------------------------------------------------------------
+
+def tree_reduce_scatter(tree, axis_name: AxisName, *, mean: bool = False,
+                        accum_dtype=jnp.float32):
+    """Fuse a pytree into one buffer, reduce-scatter it, and return this
+    device's (padded_size/P,) shard plus the spec needed to reassemble."""
+    P = axis_size(axis_name)
+    flat, spec = _flatten_tree(tree)
+    m = flat.shape[0]
+    u = -(-m // P)
+    pad = u * P - m
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    shard = reduce_scatter_flat(flat, axis_name, accum_dtype=accum_dtype)
+    if mean and P > 1:
+        shard = shard / P
+    return shard, (spec, m)
+
+
+def tree_all_gather(shard, spec_m, axis_name: AxisName):
+    """Inverse of :func:`tree_reduce_scatter`."""
+    spec, m = spec_m
+    flat = all_gather_flat(shard, axis_name)
+    return _unflatten_tree(flat[:m], spec)

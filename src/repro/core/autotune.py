@@ -1,0 +1,48 @@
+"""Algorithm / step-count selection for the generalized allreduce.
+
+Given a fabric description (alpha, beta, gamma) and a message size, pick the
+schedule minimizing the exact schedule-derived cost.  This is what the
+training framework uses per gradient bucket: small buckets get
+latency-leaning schedules (large r), large buckets get the
+bandwidth-optimal r=0 (or Ring on very large, cache-bound buckets).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import lru_cache
+from typing import Optional
+
+from .cost_model import Fabric, TPU_V5E_ICI, optimal_r_search, schedule_cost
+from .schedule import Schedule, build_generalized, build_ring, n_steps_log
+
+
+@dataclass(frozen=True)
+class Choice:
+    kind: str          # "generalized" | "ring"
+    r: int
+    cost: float
+
+
+@lru_cache(maxsize=None)
+def choose(P: int, nbytes: int, fabric: Fabric = TPU_V5E_ICI,
+           allow_ring: bool = True) -> Choice:
+    """Pick (kind, r) minimizing modeled time for an allreduce of
+    ``nbytes`` over ``P`` devices."""
+    if P <= 1:
+        return Choice("generalized", 0, 0.0)
+    best: Optional[Choice] = None
+    for r in range(n_steps_log(P) + 1):
+        c = schedule_cost(build_generalized(P, r), nbytes, fabric)
+        if best is None or c < best.cost:
+            best = Choice("generalized", r, c)
+    if allow_ring:
+        c = schedule_cost(build_ring(P), nbytes, fabric)
+        if c < best.cost:
+            best = Choice("ring", 0, c)
+    return best
+
+
+def schedule_for(choice: Choice, P: int) -> Schedule:
+    if choice.kind == "ring":
+        return build_ring(P)
+    return build_generalized(P, choice.r)

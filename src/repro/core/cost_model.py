@@ -1,0 +1,199 @@
+"""The alpha-beta-gamma communication cost model (paper section 2).
+
+tau_p2p = alpha + beta*m + gamma*m   for a message of m bytes:
+  alpha -- per-message latency [s]
+  beta  -- inverse bandwidth   [s/byte]
+  gamma -- combine (reduction) speed [s/byte]
+
+Closed forms from the paper (u = m / P):
+
+  (15) naive/ring      : 2(P-1) a + 2(P-1) u b + (P-1) u g
+  (25) bandwidth-opt   : 2ceil(lg P) a + 2(P-1) u b + (P-1) u g
+  (36) intermediate(r) : (2ceil(lg P)-r) a
+                         + (2(P-1) + (2^r - 1)(ceil(lg P)-1)) u b
+                         + ((P-1) + (2^r - 1)(2 ceil(lg P)-2)) u g
+  (44) latency-opt     : ceil(lg P) a + P ceil(lg P) u b + P(2 ceil(lg P)-2) u g
+  (37) optimal r       : lg(a / (m (b + 2g))) + lg(P / ((lg P - 1) ln 2))
+
+In addition to the closed forms we provide *exact* schedule-derived costs
+(:func:`schedule_cost`) counting the actual per-step traffic of a compiled
+schedule -- the closed forms are worst-case bounds, the schedule-derived
+cost is what the executor really does.  Tests assert the two agree.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional
+
+from .schedule import (Schedule, build_generalized, build_ring, max_r,
+                       n_steps_log)
+
+
+@dataclass(frozen=True)
+class Fabric:
+    """Point-to-point network/compute parameters."""
+
+    alpha: float          # latency [s]
+    beta: float           # 1/bandwidth [s/B]
+    gamma: float          # combine speed [s/B]
+    name: str = "fabric"
+
+
+# the 10GE cluster of the paper's Table 2
+PAPER_10GE = Fabric(alpha=3e-5, beta=1e-8, gamma=2e-10, name="paper-10GE")
+
+# TPU v5e-like ICI fabric: ~1us latency, ~50 GB/s per link,
+# combine speed bounded by HBM (~819 GB/s, 3 bytes moved per combined byte).
+TPU_V5E_ICI = Fabric(alpha=1e-6, beta=1.0 / 50e9, gamma=3.0 / 819e9,
+                     name="tpu-v5e-ici")
+
+
+def chunk_size(m: float, P: int) -> float:
+    return m / P
+
+
+# ---------------------------------------------------------------------------
+#  closed forms from the paper
+# ---------------------------------------------------------------------------
+
+def tau_ring(P: int, m: float, f: Fabric) -> float:
+    """Eq (15): Ring / naive schedule."""
+    if P == 1:
+        return 0.0
+    u = chunk_size(m, P)
+    return 2 * (P - 1) * f.alpha + 2 * (P - 1) * u * f.beta + (P - 1) * u * f.gamma
+
+
+def tau_bw_optimal(P: int, m: float, f: Fabric) -> float:
+    """Eq (25): bandwidth-optimal generalized algorithm (r=0)."""
+    if P == 1:
+        return 0.0
+    u = chunk_size(m, P)
+    L = n_steps_log(P)
+    return 2 * L * f.alpha + 2 * (P - 1) * u * f.beta + (P - 1) * u * f.gamma
+
+
+def tau_intermediate(P: int, m: float, r: int, f: Fabric) -> float:
+    """Eq (36): r distribution steps removed, 0 <= r < ceil(lg P)."""
+    if P == 1:
+        return 0.0
+    L = n_steps_log(P)
+    if r >= L:
+        return tau_latency_optimal(P, m, f)
+    if r == 0:
+        return tau_bw_optimal(P, m, f)
+    u = chunk_size(m, P)
+    a = (2 * L - r) * f.alpha
+    b = (2 * (P - 1) + (2 ** r - 1) * (L - 1)) * u * f.beta
+    g = ((P - 1) + (2 ** r - 1) * (2 * L - 2)) * u * f.gamma
+    return a + b + g
+
+
+def tau_latency_optimal(P: int, m: float, f: Fabric) -> float:
+    """Eq (44): worst case for the latency-optimal version."""
+    if P == 1:
+        return 0.0
+    u = chunk_size(m, P)
+    L = n_steps_log(P)
+    # the paper's worst-case gamma coefficient P(2L-2) degenerates to 0 at
+    # L=1 (P=2), where each device still performs one add per result copy.
+    g_coeff = P * max(2 * L - 2, L)
+    return L * f.alpha + P * L * u * f.beta + g_coeff * u * f.gamma
+
+
+def tau_recursive_doubling(P: int, m: float, f: Fabric) -> float:
+    """Latency-optimal butterfly; for non-power-of-two P the standard
+    reduce-to-power-of-two workaround adds a preparation + finalization
+    exchange of the full vector (overhead 2m, +2 steps)."""
+    if P == 1:
+        return 0.0
+    L = math.floor(math.log2(P))
+    Pp = 1 << L
+    t = L * f.alpha + L * m * f.beta + L * m * f.gamma
+    if Pp != P:
+        t += 2 * f.alpha + 2 * m * f.beta + m * f.gamma
+    return t
+
+
+def tau_recursive_halving(P: int, m: float, f: Fabric) -> float:
+    """Bandwidth-optimal butterfly with the same power-of-two workaround."""
+    if P == 1:
+        return 0.0
+    L = math.floor(math.log2(P))
+    Pp = 1 << L
+    u = m / Pp
+    t = 2 * L * f.alpha + 2 * (Pp - 1) * u * f.beta + (Pp - 1) * u * f.gamma
+    if Pp != P:
+        t += 2 * f.alpha + 2 * m * f.beta + m * f.gamma
+    return t
+
+
+def tau_best_sota(P: int, m: float, f: Fabric) -> float:
+    """min over Ring / Recursive Halving / Recursive Doubling (Fig. 1)."""
+    return min(tau_ring(P, m, f), tau_recursive_halving(P, m, f),
+               tau_recursive_doubling(P, m, f))
+
+
+def tau_openmpi_policy(P: int, m: float, f: Fabric) -> float:
+    """OpenMPI default: Recursive Doubling below 10 KB, Ring above."""
+    return tau_recursive_doubling(P, m, f) if m < 10 * 1024 else tau_ring(P, m, f)
+
+
+# ---------------------------------------------------------------------------
+#  optimal r
+# ---------------------------------------------------------------------------
+
+def optimal_r_analytic(P: int, m: float, f: Fabric) -> int:
+    """Eq (37), clamped to the valid range [0, ceil(lg P)]."""
+    L = n_steps_log(P)
+    if P <= 2 or m <= 0:
+        return L
+    denom = m * (f.beta + 2 * f.gamma)
+    if denom <= 0:
+        return L
+    lgp = math.log2(P)
+    if lgp <= 1:
+        return L
+    r = math.log2(f.alpha / denom) + math.log2(P / ((lgp - 1) * math.log(2)))
+    return int(min(max(round(r), 0), L))
+
+
+def optimal_r_search(P: int, m: float, f: Fabric) -> int:
+    """argmin over eq (36) -- exact discrete search (cheap: L+1 options)."""
+    L = n_steps_log(P)
+    return min(range(L + 1), key=lambda r: tau_intermediate(P, m, r, f))
+
+
+# ---------------------------------------------------------------------------
+#  exact schedule-derived cost
+# ---------------------------------------------------------------------------
+
+def schedule_cost(sched: Schedule, m: float, f: Fabric) -> float:
+    """Exact alpha-beta-gamma cost of a compiled schedule.
+
+    Counts the real per-device traffic: sum over steps of
+    alpha + (n_tx * u) * beta + (n_adds * u) * gamma.
+    """
+    P = sched.P
+    u = chunk_size(m, P)
+    t = 0.0
+    for st in sched.steps:
+        if st.n_tx == 0 and st.n_adds == 0:
+            continue  # bookkeeping-only step
+        t += f.alpha + st.n_tx * u * f.beta + st.n_adds * u * f.gamma
+    return t
+
+
+def best_schedule(P: int, m: float, f: Fabric,
+                  include_ring: bool = True):
+    """Pick the best compiled schedule (kind, r) for the given message size
+    by exact schedule-derived cost.  Returns (schedule, cost)."""
+    cands = []
+    for r in range(n_steps_log(P) + 1):
+        s = build_generalized(P, r)
+        cands.append((s, schedule_cost(s, m, f)))
+    if include_ring and P > 1:
+        s = build_ring(P)
+        cands.append((s, schedule_cost(s, m, f)))
+    return min(cands, key=lambda c: c[1])

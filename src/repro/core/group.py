@@ -1,0 +1,126 @@
+"""Abelian transitive permutation groups used to describe communication.
+
+The paper ("A Generalization of the Allreduce Operation", Kolmakov & Zhang,
+2020) describes communication between P processes by an abelian permutation
+group T_P = {t_0 .. t_{P-1}} of order P acting transitively on {0..P-1}.
+
+Every finite abelian transitive group of order P acting on P points is (up to
+relabeling) a direct product of cyclic groups Z_{p1} x ... x Z_{pn} with
+P = p1 * ... * pn, acting on the mixed-radix representation of the point
+index.  We therefore implement the whole family with a single `MixedRadixGroup`:
+
+  * ``CyclicGroup(P)``     == MixedRadixGroup([P])          -- Ring-style shifts.
+  * ``HypercubeGroup(2^k)`` == MixedRadixGroup([2]*k)        -- the group H of the
+    paper's Table 1.b, whose elements are self-inverse; with it the
+    bandwidth-optimal / latency-optimal algorithms reduce exactly to
+    Recursive Halving / Recursive Doubling.
+
+Group elements are indexed 0..P-1; index arithmetic is digit-wise modular
+addition over the radix vector.  ``t_0`` is always the identity.
+
+The action on process ranks:  ``apply(g, p)`` = rank reached from ``p`` by the
+permutation ``t_g``.  For the cyclic group this is ``(p + g) % P``.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from functools import lru_cache
+from typing import Sequence, Tuple
+
+
+def _to_digits(x: int, radices: Tuple[int, ...]) -> Tuple[int, ...]:
+    out = []
+    for r in reversed(radices):
+        out.append(x % r)
+        x //= r
+    return tuple(reversed(out))
+
+
+def _from_digits(digits: Sequence[int], radices: Tuple[int, ...]) -> int:
+    x = 0
+    for d, r in zip(digits, radices):
+        x = x * r + d
+    return x
+
+
+@dataclass(frozen=True)
+class MixedRadixGroup:
+    """Direct product of cyclic groups Z_{r0} x Z_{r1} x ... acting on
+    {0 .. prod(r)-1} via digit-wise modular addition.
+
+    This is an abelian, transitive permutation group of order P = prod(r).
+    """
+
+    radices: Tuple[int, ...]
+
+    def __post_init__(self):
+        if not self.radices or any(r < 1 for r in self.radices):
+            raise ValueError(f"invalid radices {self.radices}")
+
+    @property
+    def order(self) -> int:
+        return math.prod(self.radices)
+
+    # --- element arithmetic (elements are indices 0..P-1) -------------
+    def compose(self, a: int, b: int) -> int:
+        """Index of t_a . t_b (abelian, so order does not matter)."""
+        da = _to_digits(a, self.radices)
+        db = _to_digits(b, self.radices)
+        return _from_digits(
+            [(x + y) % r for x, y, r in zip(da, db, self.radices)], self.radices
+        )
+
+    def inverse(self, a: int) -> int:
+        da = _to_digits(a, self.radices)
+        return _from_digits([(-x) % r for x, r in zip(da, self.radices)], self.radices)
+
+    def apply(self, g: int, p: int) -> int:
+        """Rank that the permutation t_g maps rank ``p`` to."""
+        return self.compose(g, p)
+
+    def perm(self, g: int):
+        """Full permutation table of t_g: perm[p] = t_g(p)."""
+        return [self.apply(g, p) for p in range(self.order)]
+
+    @property
+    def is_cyclic(self) -> bool:
+        return len(self.radices) == 1
+
+    def describe(self) -> str:
+        return "Z" + "xZ".join(str(r) for r in self.radices)
+
+    def __repr__(self):  # pragma: no cover - cosmetic
+        return f"MixedRadixGroup({self.describe()})"
+
+
+def CyclicGroup(P: int) -> MixedRadixGroup:
+    """The cyclic group T_P with generator c = (1 2 ... P-1 0).
+
+    Works for every P (including primes); this is the default group of the
+    generalized allreduce and maps directly onto a TPU ICI ring via
+    ``lax.ppermute`` with a constant shift.
+    """
+    return MixedRadixGroup((P,))
+
+
+def HypercubeGroup(P: int) -> MixedRadixGroup:
+    """Elementary abelian 2-group (paper Table 1.b).  Requires P = 2^k.
+
+    With this group the generalized algorithm reproduces Recursive
+    Halving (r=0) / Recursive Doubling (r=log P) exactly: every element is
+    self-inverse so each communication step is a pairwise exchange.
+    """
+    k = P.bit_length() - 1
+    if P != 1 << k:
+        raise ValueError(f"HypercubeGroup needs power-of-two order, got {P}")
+    return MixedRadixGroup(tuple([2] * max(k, 1)))
+
+
+@lru_cache(maxsize=None)
+def default_group(P: int, kind: str = "cyclic") -> MixedRadixGroup:
+    if kind == "cyclic":
+        return CyclicGroup(P)
+    if kind == "hypercube":
+        return HypercubeGroup(P)
+    raise ValueError(f"unknown group kind {kind!r}")

@@ -1,0 +1,147 @@
+"""Pallas TPU kernel: blockwise (flash) attention forward.
+
+TPU-native adaptation: instead of a CUDA warp-level softmax, the kernel
+streams K/V blocks through VMEM with the online-softmax recurrence kept in
+VMEM scratch that persists across the innermost ("arbitrary") grid
+dimension; the (block_q x block_k) logits tile is produced by the MXU and
+never leaves VMEM.  Block sizes default to MXU-aligned 128/512.
+
+Supports causal masking, sliding-window (SWA) masking, decode offsets
+(Sq < Skv with queries at the sequence tail), and GQA via a q-heads-per-kv-
+head grouping handled in the BlockSpec index maps (kv blocks are fetched
+once per q-head group, not repeated in HBM).
+
+The pure-XLA oracle lives in :mod:`repro.kernels.ref`; the jitted wrapper
+with the xla/pallas switch in :mod:`repro.kernels.ops`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = float("-inf")
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, window: Optional[int],
+                  block_q: int, block_k: int, n_kv_blocks: int,
+                  q_offset: int, kv_len: int):
+    jk = pl.program_id(2)
+
+    @pl.when(jk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    iq = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32)                    # (bq, D)
+    k = k_ref[0].astype(jnp.float32)                    # (bk, D)
+    v = v_ref[0].astype(jnp.float32)                    # (bk, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    qpos = iq * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0) + q_offset
+    kpos = jk * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    mask = kpos < kv_len          # exclude zero-padded keys
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev = m_ref[...][:, :1]                           # (bq, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)           # (bq, 1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p = jnp.exp(s - m_safe)                               # masked -> exp(-inf)=0
+    p = jnp.where(mask, p, 0.0)
+    l_cur = jnp.sum(p, axis=-1, keepdims=True)
+    alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+    l_new = alpha * l_ref[...][:, :1] + l_cur
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha + pv
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(jk == n_kv_blocks - 1)
+    def _finish():
+        l = l_ref[...][:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, ...] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "scale", "block_q",
+                              "block_k", "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    scale: Optional[float] = None,
+                    block_q: int = 128, block_k: int = 512,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D); returns (B, Hq, Sq, D).
+
+    Queries occupy the *tail* of the key sequence (prefill: Sq == Skv;
+    decode: Sq == 1 with a long cache).
+    """
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    assert Hq % Hkv == 0
+    group = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    # pad sequences to block multiples
+    pq = (-Sq) % block_q
+    pk = (-Skv) % block_k
+    q_offset = Skv - Sq  # absolute position of query row 0
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    Sqp, Skp = Sq + pq, Skv + pk
+
+    qf = q.reshape(B * Hq, Sqp, D)
+    kf = k.reshape(B * Hkv, Skp, D)
+    vf = v.reshape(B * Hkv, Skp, D)
+    n_q_blocks = Sqp // block_q
+    n_kv_blocks = Skp // block_k
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, n_kv_blocks=n_kv_blocks,
+        q_offset=q_offset, kv_len=Skv)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * Hq, n_q_blocks, n_kv_blocks),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda bh, iq, jk: (bh, iq, 0)),
+            pl.BlockSpec((1, block_k, D),
+                         lambda bh, iq, jk, g=group: (bh // g, jk, 0)),
+            pl.BlockSpec((1, block_k, D),
+                         lambda bh, iq, jk, g=group: (bh // g, jk, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda bh, iq, jk: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Sqp, D), q.dtype),
+        scratch_shapes=[
+            # fp32 online-softmax state, persists across the kv grid dim
+            pltpu.VMEM((block_q, D), jnp.float32),    # acc
+            pltpu.VMEM((block_q, 128), jnp.float32),  # running max m
+            pltpu.VMEM((block_q, 128), jnp.float32),  # running denom l
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    out = out.reshape(B, Hq, Sqp, D)
+    return out[:, :, :Sq, :]

@@ -1,0 +1,71 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels run in ``interpret=True`` mode, which
+executes the kernel body in Python -- bit-accurate for validation against
+the :mod:`repro.kernels.ref` oracles.  On TPU they compile to Mosaic.
+
+``attention`` / ``norm`` expose an ``impl`` switch ("pallas" | "xla") so the
+model stack can pick the XLA path where cost_analysis visibility matters
+(the multi-pod dry-run) and the kernel path on real hardware.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention
+from .fused_combine import combine_n, fused_combine
+from .rmsnorm import rmsnorm
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def combine(a: jnp.ndarray, b: jnp.ndarray, *, impl: str = "pallas"):
+    if impl == "xla" or a.ndim != 1:
+        return ref.fused_combine_ref(a, b)
+    return fused_combine(a, b, interpret=_interpret())
+
+
+def combine_many(stack: jnp.ndarray, *, impl: str = "pallas"):
+    if impl == "xla":
+        return ref.combine_n_ref(stack)
+    return combine_n(stack, interpret=_interpret())
+
+
+def attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+              scale: Optional[float] = None, impl: str = "xla",
+              kv_valid=None, q_positions=None, return_lse: bool = False,
+              block_q: int = 128, block_k: int = 512):
+    if return_lse:
+        return ref.flash_attention_ref(q, k, v, causal=causal,
+                                       window=window, scale=scale,
+                                       kv_valid=kv_valid,
+                                       q_positions=q_positions,
+                                       return_lse=True)
+    if impl == "chunked" and q.shape[2] > 1:
+        return ref.chunked_attention_ref(q, k, v, causal=causal,
+                                         window=window, scale=scale,
+                                         kv_valid=kv_valid,
+                                         q_positions=q_positions)
+    if impl in ("xla", "chunked") or kv_valid is not None \
+            or q_positions is not None:
+        # traced cache lengths / explicit positions run on the XLA path;
+        # a production TPU deployment would use a flash-decode kernel with
+        # scalar prefetch here.
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                       scale=scale, kv_valid=kv_valid,
+                                       q_positions=q_positions)
+    return flash_attention(q, k, v, causal=causal, window=window, scale=scale,
+                           block_q=block_q, block_k=block_k,
+                           interpret=_interpret())
+
+
+def norm(x, w, *, eps: float = 1e-6, impl: str = "xla"):
+    if impl == "xla":
+        return ref.rmsnorm_ref(x, w, eps=eps)
+    return rmsnorm(x, w, eps=eps, interpret=_interpret())

@@ -1,0 +1,314 @@
+import os
+# 512 placeholder devices for the production meshes; LICM disabled because
+# XLA:CPU otherwise hoists a fp32 convert of entire residual stacks out of
+# the backward loop, inflating reported temp memory 2x (CPU-only artifact;
+# the TPU backend keeps the stacks bf16).
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    "--xla_disable_hlo_passes=while-loop-invariant-code-motion")
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input-shape x mesh) cell this lowers and
+compiles the real step function (train_step or serve_step) against
+ShapeDtypeStruct stand-ins on the production mesh -- (16, 16) single-pod
+and (2, 16, 16) multi-pod -- then records:
+
+  * ``compiled.memory_analysis()``  -- proves the cell fits per-device HBM
+  * ``compiled.cost_analysis()``    -- HLO FLOPs / bytes for the roofline
+  * collective ops parsed from the compiled HLO text (type, tensor bytes,
+    and whether they sit inside the layer-scan loop body, whose trip
+    count multiplies their traffic)
+
+Results land in results/dryrun/<cell>.json; benchmarks/roofline.py turns
+them into the EXPERIMENTS.md tables.
+
+Usage:
+  python -m repro.launch.dryrun --arch granite_8b --shape train_4k
+  python -m repro.launch.dryrun --all [--multipod-only|--singlepod-only]
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from functools import partial
+
+
+def _cell_plan(arch: str, shape_name: str):
+    """Static description of what to lower for a cell (incl. skip rules)."""
+    from repro.configs import get_config
+    from repro.models.config import SHAPES, shape_applicable
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    return cfg, shape, ok, why
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: str = "results/dryrun", *,
+             param_mode: str = "fsdp", collective_impl: str = "xla",
+             attn_impl: str = "chunked", tag: str = "",
+             mesh_shape=None, microbatches: int = 1,
+             no_remat: bool = False, cache_seq_shard: bool = False) -> dict:
+    import jax
+    import jax.numpy as jnp
+    from repro.launch.mesh import make_production_mesh, parallel_config_for
+    from repro.models.config import SHAPES
+    from repro.models.model import init_caches
+    from repro.train.optimizer import OptConfig, init_opt_state
+    from repro.train.step import (input_shapes, make_serve_step,
+                                  make_train_step)
+
+    cfg, shape, ok, why = _cell_plan(arch, shape_name)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    cell = f"{arch}__{shape_name}__{mesh_name}" + (f"__{tag}" if tag else "")
+    rec = {"cell": cell, "arch": arch, "shape": shape_name,
+           "mesh": mesh_name, "param_mode": param_mode,
+           "collective_impl": collective_impl, "status": "skipped",
+           "skip_reason": why}
+    os.makedirs(out_dir, exist_ok=True)
+    if not ok:
+        _dump(out_dir, cell, rec)
+        print(f"[dryrun] SKIP {cell}: {why}")
+        return rec
+
+    t0 = time.perf_counter()
+    if mesh_shape is not None:
+        from repro.launch.mesh import make_mesh
+        dims = tuple(int(x) for x in mesh_shape.split("x"))
+        names = ("pod", "data", "model")[-len(dims):]
+        mesh = make_mesh(dims, names)
+        cell = f"{arch}__{shape_name}__{mesh_shape}" + (
+            f"__{tag}" if tag else "")
+        rec["cell"] = rec["mesh"] = mesh_shape
+        rec["cell"] = cell
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    pc = parallel_config_for(mesh, param_mode=param_mode,
+                             collective_impl=collective_impl)
+    if no_remat:
+        from dataclasses import replace as _rp
+        pc = _rp(pc, remat=False)
+    try:
+        if shape.kind == "train" or (shape.kind == "prefill"
+                                     and not cfg.is_decoder):
+            if shape.kind == "train":
+                seq, gb = shape.seq_len, shape.global_batch
+            else:                      # encoder "prefill" = full encode
+                seq, gb = shape.seq_len, shape.global_batch
+            if gb % pc.dp:
+                raise ValueError(f"global batch {gb} % dp {pc.dp}")
+            bundle = make_train_step(
+                cfg, pc, mesh,
+                OptConfig(warmup_steps=10, total_steps=1000),
+                attn_impl=attn_impl, donate=False,
+                microbatches=microbatches)
+            batch = input_shapes(cfg, shape_kind="train", seq_len=seq,
+                                 global_batch=gb)
+            lowered = bundle.train_step.lower(
+                bundle.params_shapes, bundle.opt_shapes, batch)
+        else:
+            # decode / prefill: serve_step against (rolling) caches
+            gb = shape.global_batch
+            shard_batch = gb % pc.dp == 0
+            rolling = (shape.name == "long_500k"
+                       and cfg.window is not None)
+            spc = pc if shard_batch else _replace_dp1(pc)
+            bundle = make_serve_step(cfg, spc, mesh, rolling=rolling,
+                                     seq_shard=cache_seq_shard,
+                                     attn_impl=attn_impl)
+            s_new = 1 if shape.kind == "decode" else shape.seq_len
+            cache_len = shape.seq_len
+            caches = jax.eval_shape(
+                lambda: init_caches(cfg, spc, gb, cache_len,
+                                    rolling=rolling,
+                                    seq_shard=cache_seq_shard))
+            toks = jax.ShapeDtypeStruct((gb, s_new), jnp.int32)
+            pos0 = jax.ShapeDtypeStruct((), jnp.int32)
+            lowered = bundle.serve_step.lower(
+                bundle.params_shapes, toks, caches, pos0)
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+
+        rec.update(status="ok", lower_s=round(t_lower, 1),
+                   compile_s=round(t_compile, 1))
+        rec["memory"] = _memory(compiled)
+        rec["cost"] = _cost(compiled)
+        rec["collectives"] = _collectives(compiled)
+        n_cyc = cfg.n_cycles
+        rec["n_scan_trips"] = n_cyc
+        print(f"[dryrun] OK   {cell}  lower={t_lower:.0f}s "
+              f"compile={t_compile:.0f}s "
+              f"mem/dev={rec['memory'].get('argument_size_gb', '?')}+"
+              f"{rec['memory'].get('temp_size_gb', '?')}GB "
+              f"flops={rec['cost'].get('flops', 0):.3g}")
+    except Exception as e:  # noqa: BLE001 -- record the failure verbatim
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+        print(f"[dryrun] FAIL {cell}: {type(e).__name__}: {e}")
+    _dump(out_dir, cell, rec)
+    return rec
+
+
+def _replace_dp1(pc):
+    """long_500k (global batch 1): batch replicated over the data axes."""
+    from dataclasses import replace
+    return replace(pc, dp=1, dp_axes=("data",))
+
+
+def _memory(compiled) -> dict:
+    out = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            v = getattr(ma, k, None)
+            if v is not None:
+                out[k] = int(v)
+        if "argument_size_in_bytes" in out:
+            out["argument_size_gb"] = round(
+                out["argument_size_in_bytes"] / 2**30, 2)
+        if "temp_size_in_bytes" in out:
+            out["temp_size_gb"] = round(out["temp_size_in_bytes"] / 2**30, 2)
+    except Exception as e:  # pragma: no cover
+        out["error"] = str(e)
+    return out
+
+
+def _cost(compiled) -> dict:
+    out = {}
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        for k, v in (ca or {}).items():
+            if k in ("flops", "bytes accessed", "transcendentals",
+                     "optimal_seconds") or k.startswith("bytes accessed"):
+                out[k] = float(v)
+    except Exception as e:  # pragma: no cover
+        out["error"] = str(e)
+    return out
+
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\()?([a-z0-9]+)\[([0-9,]*)\][^=]*?"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "f64": 8, "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8}
+
+
+def _collectives(compiled) -> dict:
+    """Parse collective ops from the compiled HLO text.
+
+    Ops inside ``while`` loop bodies (the layer scan) are tagged so the
+    roofline can multiply them by the scan trip count.  Detection: HLO
+    prints each computation as a block ``body.N { ... }`` referenced by a
+    while op -- we mark ops whose enclosing computation name contains
+    "body" or "scan".
+    """
+    out = {"ops": [], "error": None}
+    try:
+        txt = compiled.as_text()
+    except Exception as e:  # pragma: no cover
+        out["error"] = str(e)
+        return out
+    current_comp = ""
+    for line in txt.splitlines():
+        stripped = line.strip()
+        if stripped.endswith("{") and ("{" in stripped):
+            head = stripped.split("{")[0].strip().rstrip(" (")
+            if head and not head.startswith(("ROOT", "%")):
+                current_comp = head.split()[0] if head.split() else ""
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+        if "-done(" in line:
+            continue  # counted at -start
+        nelem = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    nelem *= int(d)
+        nbytes = nelem * _DTYPE_BYTES.get(dtype, 4)
+        in_loop = ("body" in current_comp.lower()
+                   or "scan" in current_comp.lower()
+                   or "while" in current_comp.lower())
+        out["ops"].append({"kind": kind, "bytes": nbytes,
+                           "dtype": dtype, "in_loop": bool(in_loop)})
+    # aggregate
+    agg = {}
+    for op in out["ops"]:
+        key = (op["kind"], op["in_loop"])
+        agg.setdefault(key, [0, 0])
+        agg[key][0] += 1
+        agg[key][1] += op["bytes"]
+    out["summary"] = [
+        {"kind": k, "in_loop": il, "count": c, "bytes": b}
+        for (k, il), (c, b) in sorted(agg.items())]
+    del out["ops"]  # keep the json small
+    return out
+
+
+def _dump(out_dir, cell, rec):
+    with open(os.path.join(out_dir, f"{cell}.json"), "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+ALL_SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=ALL_SHAPES + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multipod-only", action="store_true")
+    ap.add_argument("--singlepod-only", action="store_true")
+    ap.add_argument("--param-mode", default="fsdp")
+    ap.add_argument("--collective-impl", default="xla",
+                    choices=["xla", "group"])
+    ap.add_argument("--attn-impl", default="chunked")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--mesh-shape", default=None,
+                    help="override mesh, e.g. 64x4 (data x model)")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--cache-seq-shard", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs import ARCHS
+    archs = [args.arch] if args.arch else ARCHS
+    shapes = [args.shape] if args.shape else ALL_SHAPES
+    meshes = []
+    if not args.multipod_only:
+        meshes.append(False)
+    if not args.singlepod_only and args.mesh_shape is None:
+        meshes.append(True)
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shape, mp, args.out,
+                               param_mode=args.param_mode,
+                               collective_impl=args.collective_impl,
+                               attn_impl=args.attn_impl, tag=args.tag,
+                               mesh_shape=args.mesh_shape,
+                               microbatches=args.microbatches,
+                               no_remat=args.no_remat,
+                               cache_seq_shard=args.cache_seq_shard)
+                if rec["status"] == "error":
+                    n_fail += 1
+    sys.exit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Mesh construction for single-pod and multi-pod deployments.
+
+Production target: TPU v5e pods of 256 chips (16x16).  The single-pod
+mesh is ("data", "model") = (16, 16); the multi-pod mesh adds a leading
+"pod" axis: (2, 16, 16) = 512 chips.  Data parallelism runs over
+("pod", "data") hierarchically -- the generalized-allreduce group for
+gradient sync is the cyclic group over the flattened (pod, data) index,
+whose powers map onto ICI ring shifts within a pod and DCN hops across
+pods.
+
+All functions build meshes lazily so importing this module never touches
+JAX device state (required by the dry-run's XLA_FLAGS bootstrap).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+    from jax.sharding import AxisType
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str],
+              devices: Optional[Sequence] = None):
+    """General mesh helper (smoke tests, elastic re-meshing)."""
+    import jax
+    from jax.sharding import AxisType, Mesh
+    if devices is not None:
+        arr = np.asarray(devices).reshape(tuple(shape))
+        return Mesh(arr, tuple(axes),
+                    axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def parallel_config_for(mesh, *, param_mode: str = "fsdp",
+                        grad_r=None, collective_impl: str = "xla"):
+    """Derive the static ParallelConfig from a mesh."""
+    from repro.parallel.api import ParallelConfig
+    names = tuple(mesh.axis_names)
+    sizes = dict(zip(names, mesh.devices.shape))
+    if "pod" in names:
+        dp_axes: Tuple[str, ...] = ("pod", "data")
+        dp = sizes["pod"] * sizes["data"]
+    else:
+        dp_axes = ("data",)
+        dp = sizes["data"]
+    tp = sizes.get("model", 1)
+    return ParallelConfig(dp_axes=dp_axes, dp=dp, tp=tp,
+                          param_mode=param_mode, grad_r=grad_r,
+                          collective_impl=collective_impl)

@@ -1,0 +1,235 @@
+"""GQA/MQA/SWA attention with Megatron-style TP sharding + KV caches.
+
+Sharding: query heads are sharded over the TP axis.  KV projections are
+sharded over KV heads when n_kv_heads >= tp; otherwise (GQA groups wider
+than one device, or MQA) the KV projection is *replicated* and each device
+dynamically slices the KV head(s) its query heads attend to.  Replicated
+KV grads are exact under a TP psum because each device's grad carries only
+its own query heads' contribution (disjoint slices of the true gradient).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.kernels import ops as kops
+from repro.models.layers import COMPUTE_DTYPE, dense, rope
+from repro.parallel.api import ParallelConfig, tp_rank
+
+
+class KVCache(NamedTuple):
+    """KV cache; ``rolling`` (ring-buffer mode) is passed statically to the
+    apply functions rather than stored, so the cache stacks cleanly as a
+    scan-able pytree."""
+
+    k: jnp.ndarray          # (B, Hkv_local, S_max_or_window, hd)
+    v: jnp.ndarray
+    pos: jnp.ndarray        # scalar int32: tokens already in cache
+
+
+def attn_replicated(cfg, pc: ParallelConfig) -> bool:
+    """True when the query-head count does not divide TP (e.g.
+    recurrentgemma's 10 heads on a 16-way model axis).  Attention then
+    computes all heads on every TP device and the block boundary *slices*
+    the sequence-parallel shard instead of reducing -- the same rule as
+    sLSTM.  Wasteful but exact; the natural production mesh for such small
+    models is DP-dominant anyway (documented in DESIGN.md)."""
+    return pc.tp > 1 and cfg.n_heads % pc.tp != 0
+
+
+def local_kv_heads(cfg, pc: ParallelConfig) -> int:
+    if attn_replicated(cfg, pc):
+        return cfg.n_kv_heads
+    return max(cfg.n_kv_heads // pc.tp, 1)
+
+
+def local_q_heads(cfg, pc: ParallelConfig) -> int:
+    if attn_replicated(cfg, pc):
+        return cfg.n_heads
+    assert cfg.n_heads % pc.tp == 0, (cfg.name, cfg.n_heads, pc.tp)
+    return cfg.n_heads // pc.tp
+
+
+def kv_replicated(cfg, pc: ParallelConfig) -> bool:
+    return cfg.n_kv_heads < pc.tp and not attn_replicated(cfg, pc)
+
+
+def _slice_kv(kv, cfg, pc: ParallelConfig):
+    """From a replicated (B, S, Hkv*hd) projection, slice the single KV
+    head this device's query heads map to."""
+    hd = cfg.hd
+    B, S = kv.shape[:2]
+    kv = kv.reshape(B, S, cfg.n_kv_heads, hd)
+    dev_per_kv = pc.tp // cfg.n_kv_heads
+    h = tp_rank(pc) // dev_per_kv
+    kv = lax.dynamic_slice_in_dim(kv, h, 1, axis=2)
+    return kv  # (B, S, 1, hd)
+
+
+def qkv_project(p, xg, cfg, pc: ParallelConfig):
+    """xg (B, S, d) full-seq -> q (B, Hl, S, hd), k/v (B, Hkv_l, S, hd)."""
+    B, S, _ = xg.shape
+    hd = cfg.hd
+    hl = local_q_heads(cfg, pc)
+    q = dense(xg, p["wq"]).reshape(B, S, hl, hd).swapaxes(1, 2)
+    k = dense(xg, p["wk"])
+    v = dense(xg, p["wv"])
+    if kv_replicated(cfg, pc) and pc.tp > 1:
+        k = _slice_kv(k, cfg, pc).swapaxes(1, 2)
+        v = _slice_kv(v, cfg, pc).swapaxes(1, 2)
+    else:
+        hkl = local_kv_heads(cfg, pc)
+        k = k.reshape(B, S, hkl, hd).swapaxes(1, 2)
+        v = v.reshape(B, S, hkl, hd).swapaxes(1, 2)
+    return q, k, v
+
+
+def attention_block(p, xg, cfg, pc: ParallelConfig, *,
+                    window: Optional[int], positions: jnp.ndarray,
+                    cache: Optional[KVCache] = None,
+                    rolling: bool = False, seq_shard: bool = False,
+                    attn_impl: str = "xla"
+                    ) -> Tuple[jnp.ndarray, Optional[KVCache]]:
+    """Temporal mixing via attention.
+
+    xg: (B, S, d) gathered full sequence (S=1 for decode).
+    Returns (B, S, d) **partial over TP** output (caller reduces), and the
+    updated cache (decode path).
+    """
+    B, S, _ = xg.shape
+    if cache is not None and seq_shard:
+        o_full, cache = seq_shard_decode(p, xg, cfg, pc,
+                                         positions=positions, cache=cache,
+                                         attn_impl=attn_impl)
+        # slice this device's query heads for the sharded out-projection
+        span = local_q_heads(cfg, pc) * cfg.hd
+        o = lax.dynamic_slice_in_dim(o_full, tp_rank(pc) * span, span, 2)
+        out = jax.lax.dot_general(
+            o, p["wo"].astype(o.dtype), (((2,), (0,)), ((), ())),
+            preferred_element_type=o.dtype)
+        return out, cache
+    q, k, v = qkv_project(p, xg, cfg, pc)
+    q, k = rope(q, k, positions, theta=cfg.rope_theta)
+
+    if cache is None:
+        o = kops.attention(q, k, v, causal=cfg.causal, window=window,
+                           impl=attn_impl)
+    else:
+        if rolling:
+            assert S == 1, "rolling (windowed) caches support decode only"
+        k, v, cache, kv_valid = _cache_update(cache, k, v, window,
+                                              rolling=rolling)
+        o = kops.attention(
+            q, k, v,
+            # prefill into a cache still needs causality among new tokens
+            causal=cfg.causal and S > 1,
+            # rolling buffers hold only in-window keys by construction
+            window=None if rolling else window,
+            kv_valid=kv_valid,
+            q_positions=None if rolling else positions.reshape(-1),
+            impl=attn_impl)
+    o = o.swapaxes(1, 2).reshape(B, S, -1)           # (B, S, Hl*hd)
+    out = jax.lax.dot_general(
+        o, p["wo"].astype(o.dtype), (((2,), (0,)), ((), ())),
+        preferred_element_type=o.dtype)
+    return out, cache
+
+
+def _cache_update(cache: KVCache, k_new, v_new, window, *, rolling: bool):
+    """Insert the new token(s) into the cache; return full K/V to attend
+    over plus the traced valid length."""
+    B, H, S_new, hd = k_new.shape
+    if rolling:
+        W = cache.k.shape[2]
+        slot = cache.pos % W
+        k = lax.dynamic_update_slice(cache.k, k_new, (0, 0, slot, 0))
+        v = lax.dynamic_update_slice(cache.v, v_new, (0, 0, slot, 0))
+        new = KVCache(k, v, cache.pos + S_new)
+        valid = jnp.minimum(cache.pos + S_new, W)
+        return k, v, new, valid
+    k = lax.dynamic_update_slice(cache.k, k_new, (0, 0, cache.pos, 0))
+    v = lax.dynamic_update_slice(cache.v, v_new, (0, 0, cache.pos, 0))
+    new = KVCache(k, v, cache.pos + S_new)
+    return k, v, new, cache.pos + S_new
+
+
+def init_cache(cfg, pc: ParallelConfig, batch_local: int, max_len: int,
+               *, rolling_window: Optional[int] = None,
+               seq_shard: bool = False, dtype=COMPUTE_DTYPE) -> KVCache:
+    if attn_replicated(cfg, pc):
+        H = cfg.n_kv_heads
+    elif kv_replicated(cfg, pc) and pc.tp > 1:
+        H = 1 if not seq_shard else cfg.n_kv_heads
+    else:
+        H = local_kv_heads(cfg, pc)
+    L = rolling_window if rolling_window else max_len
+    if seq_shard:
+        assert pc.tp > 1 and rolling_window is None
+        assert L % pc.tp == 0
+        # KV heads stay whole (replicated-KV archs); the SEQUENCE dim of
+        # the (GLOBAL) cache shards over TP via the in_specs -- inside
+        # shard_map each device sees its L/tp slice (flash-decoding).
+        H = cfg.n_kv_heads
+    shape = (batch_local, H, L, cfg.hd)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
+                   jnp.int32(0))
+
+
+def seq_shard_decode(p, xg, cfg, pc: ParallelConfig, *,
+                     positions, cache: KVCache, attn_impl: str = "xla"):
+    """Decode attention against a TP-sequence-sharded KV cache.
+
+    Motivation: MQA/low-kv-head archs cannot shard the cache over heads,
+    so a 32k x batch-128 cache replicates ~11 GB per device.  Here device
+    r owns cache slots [r*Ls, (r+1)*Ls); each device scores *all* query
+    heads (q gathered over TP -- trivial at S_new=1) against its slice and
+    the partial outputs merge with a log-sum-exp-weighted psum
+    (flash-decoding across the model axis).  Cache memory drops by tp.
+
+    Returns ((B, 1, Hq*hd) full-head attention output replicated over TP,
+    new cache).  The caller slices its local heads for the out-projection.
+    """
+    from jax import lax as _lax
+    B, S, _ = xg.shape
+    assert S == 1, "seq-sharded caches are a decode-path feature"
+    hd = cfg.hd
+    hl = local_q_heads(cfg, pc)
+    q = dense(xg, p["wq"]).reshape(B, S, hl, hd).swapaxes(1, 2)
+    # KV projections are replicated for these archs: keep ALL kv heads
+    k_new = dense(xg, p["wk"]).reshape(B, S, cfg.n_kv_heads, hd) \
+        .swapaxes(1, 2)
+    v_new = dense(xg, p["wv"]).reshape(B, S, cfg.n_kv_heads, hd) \
+        .swapaxes(1, 2)
+    # gather all query heads (tiny at S_new=1)
+    if pc.tp > 1:
+        q = _lax.all_gather(q, pc.tp_axis, axis=1, tiled=True)
+    q, k_new = rope(q, k_new, positions, theta=cfg.rope_theta)
+
+    Ls = cache.k.shape[2]
+    r = tp_rank(pc)
+    pos = cache.pos
+    local_slot = pos - r * Ls
+    owner = (local_slot >= 0) & (local_slot < Ls)
+    ins = jnp.clip(local_slot, 0, Ls - 1)
+    k_upd = _lax.dynamic_update_slice(cache.k, k_new, (0, 0, ins, 0))
+    v_upd = _lax.dynamic_update_slice(cache.v, v_new, (0, 0, ins, 0))
+    k_c = jnp.where(owner, k_upd, cache.k)
+    v_c = jnp.where(owner, v_upd, cache.v)
+    new_cache = KVCache(k_c, v_c, pos + 1)
+
+    valid_local = jnp.clip(pos + 1 - r * Ls, 0, Ls)
+    o, lse = kops.attention(q, k_c, v_c, causal=False, window=None,
+                            kv_valid=valid_local, impl=attn_impl,
+                            return_lse=True)
+    # LSE merge across the TP slices
+    m = _lax.pmax(lse, pc.tp_axis)                        # (B, Hq, 1)
+    w = jnp.exp(lse - jnp.where(jnp.isfinite(m), m, 0.0))
+    w = jnp.where(jnp.isfinite(lse), w, 0.0)
+    num = _lax.psum(o.astype(jnp.float32) * w[..., None], pc.tp_axis)
+    den = _lax.psum(w, pc.tp_axis)
+    o = (num / jnp.maximum(den, 1e-30)[..., None]).astype(xg.dtype)
+    o = o.swapaxes(1, 2).reshape(B, S, -1)                # (B, 1, Hq*hd)
+    return o, new_cache

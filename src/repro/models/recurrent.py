@@ -1,0 +1,323 @@
+"""Recurrent temporal mixers: RG-LRU (RecurrentGemma/Griffin) and
+xLSTM blocks (mLSTM chunkwise, sLSTM scan).
+
+TP sharding strategies (see DESIGN.md §Arch-applicability):
+
+* RG-LRU: the recurrence is diagonal (per-channel), so the recurrence
+  width shards cleanly over TP -- conv, gates and the scan are all
+  channel-local; only the out-projection produces TP-partial sums.
+* mLSTM: the matrix state C = sum_t (f..) i_t v_t k_t^T decomposes over
+  the *v/output* dimension, so v (and the output) shard over TP while the
+  q/k projections are replicated (their grads are exact under a TP psum
+  because each device contributes a disjoint output slice).
+* sLSTM: dense per-head recurrent weights resist head-splitting below
+  n_heads; computation is replicated over TP and the output sliced back
+  into the sequence-parallel residual (documented inefficiency; xLSTM-1.3b
+  is 7:1 mLSTM-dominated).
+
+All scans are ``lax.scan`` / ``lax.associative_scan`` over the sequence --
+TPU-friendly (no dynamic control flow) and differentiable.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import COMPUTE_DTYPE, dense
+from repro.parallel.api import ParallelConfig, tp_rank
+
+
+# ===========================================================================
+#  RG-LRU (Griffin)
+# ===========================================================================
+
+class RGLRUState(NamedTuple):
+    h: jnp.ndarray          # (B, w_local) recurrence state, fp32
+    conv: jnp.ndarray       # (B, conv_width-1, w_local) conv tail
+
+
+_C_RGLRU = 8.0
+
+
+def _rglru_scan(x, a_log, gate_r, gate_i, h0):
+    """Diagonal gated linear recurrence via associative scan.
+
+    x       (B, S, w) inputs, fp32
+    a_log   (w,)      log-space recurrence parameter (Lambda)
+    gate_r  (B, S, w) recurrence gate in [0,1]
+    gate_i  (B, S, w) input gate in [0,1]
+    h0      (B, w)    carried state
+    returns (B, S, w) outputs and final state.
+    """
+    log_a = -_C_RGLRU * jax.nn.softplus(a_log) * gate_r        # <= 0
+    a = jnp.exp(log_a)
+    multiplier = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12, 1.0))
+    b = multiplier * (gate_i * x)
+    # fold carried state into the first step
+    b = b.at[:, 0, :].add(a[:, 0, :] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = lax.associative_scan(combine, (a, b), axis=1)
+    return hh, hh[:, -1, :]
+
+
+def rglru_block(p, xg, cfg, pc: ParallelConfig, *,
+                state: Optional[RGLRUState] = None
+                ) -> Tuple[jnp.ndarray, Optional[RGLRUState]]:
+    """Griffin recurrent block.  xg (B, S, d) full-seq.
+
+    Returns (B, S, d) partial-over-TP output + new state (decode).
+    """
+    B, S, d = xg.shape
+    w_local = p["w_x"].shape[1]
+    # two branches: gate (GeLU) and recurrent
+    g = jax.nn.gelu(dense(xg, p["w_gate"]))                  # (B, S, w/tp)
+    x = dense(xg, p["w_x"])                                  # (B, S, w/tp)
+
+    # temporal conv (depthwise, causal, width cw)
+    cw = cfg.conv_width
+    if state is not None:
+        hist = jnp.concatenate([state.conv.astype(x.dtype), x], axis=1)
+    else:
+        hist = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    kernel = p["conv_w"]                                     # (cw, w/tp)
+    x = sum(hist[:, i:i + S, :] * kernel[i][None, None, :]
+            for i in range(cw)) + p["conv_b"][None, None, :]
+
+    xf = x.astype(jnp.float32)
+    gr = jax.nn.sigmoid(dense(xg, p["w_rg"]).astype(jnp.float32))
+    gi = jax.nn.sigmoid(dense(xg, p["w_ig"]).astype(jnp.float32))
+    h0 = state.h if state is not None else jnp.zeros((B, w_local), jnp.float32)
+    y, h_last = _rglru_scan(xf, p["a_log"].astype(jnp.float32), gr, gi, h0)
+    y = y.astype(xg.dtype) * g
+    out = jax.lax.dot_general(
+        y, p["w_out"].astype(y.dtype), (((2,), (0,)), ((), ())),
+        preferred_element_type=y.dtype)
+    new_state = None
+    if state is not None:
+        tail = hist[:, -(cw - 1):, :] if cw > 1 else \
+            jnp.zeros((B, 0, w_local), x.dtype)
+        new_state = RGLRUState(h_last, tail.astype(jnp.float32))
+    return out, new_state
+
+
+def init_rglru_state(cfg, pc: ParallelConfig, batch_local: int) -> RGLRUState:
+    w_local = (cfg.rnn_width or cfg.d_model) // pc.tp
+    return RGLRUState(
+        jnp.zeros((batch_local, w_local), jnp.float32),
+        jnp.zeros((batch_local, cfg.conv_width - 1, w_local), jnp.float32))
+
+
+# ===========================================================================
+#  mLSTM (xLSTM) -- chunkwise parallel form
+# ===========================================================================
+
+class MLSTMState(NamedTuple):
+    C: jnp.ndarray          # (B, H, hd_v_local, hd_qk) matrix memory, fp32
+    n: jnp.ndarray          # (B, H, hd_qk) normalizer, fp32
+    m: jnp.ndarray          # (B, H) log-space stabilizer, fp32
+
+
+_MLSTM_CHUNK = 64
+
+
+def _mlstm_step(carry, inp, scale: float):
+    C, n, m = carry
+    qt, kt, vt, it, ft = inp
+    # projections stream through the scan in bf16 (a fp32 copy of the
+    # full (S, B, H, Dk) q/k arrays costs ~1 GB/layer); the state math
+    # itself runs in fp32
+    qt = qt.astype(jnp.float32)
+    kt = kt.astype(jnp.float32)
+    vt = vt.astype(jnp.float32)
+    m_new = jnp.maximum(ft + m, it)                       # (B, H)
+    i_ = jnp.exp(it - m_new)
+    f_ = jnp.exp(ft + m - m_new)
+    C = f_[..., None, None] * C + i_[..., None, None] * (
+        vt[..., :, None] * kt[..., None, :])              # (B,H,Dv,Dk)
+    n = f_[..., None] * n + i_[..., None] * kt
+    num = jnp.einsum("bhvk,bhk->bhv", C, qt * scale)
+    den = jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt * scale))
+    den = jnp.maximum(den, jnp.exp(-m_new))               # xLSTM stabilizer
+    h = num / den[..., None]
+    return (C, n, m_new), h
+
+
+def _mlstm_recurrence(q, k, v, i_log, f_log, st: MLSTMState, scale: float,
+                      chunk: int = _MLSTM_CHUNK):
+    """Stabilized mLSTM over S steps.
+
+    Memory layout matters more than FLOPs here: a flat scan over S steps
+    would checkpoint the (B, H, Dv, Dk) matrix state *per step* for the
+    backward pass (TBs at S=4k).  We nest the scan -- outer over S/chunk
+    chunks, inner (rematerialized) over the chunk -- so only the
+    chunk-boundary states are saved: memory drops by ``chunk``x for one
+    extra forward of the inner steps.  The fully-parallel chunkwise form
+    is the documented next perf iteration (DESIGN.md).
+
+    q, k   (B, S, H, Dk); v (B, S, H, Dv_local); i/f_log (B, S, H).
+    """
+    S = q.shape[1]
+    step = partial(_mlstm_step, scale=scale)
+    seq = (q.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
+           i_log.swapaxes(0, 1), f_log.swapaxes(0, 1))
+    if S <= chunk:
+        (C, n, m), hs = lax.scan(step, (st.C, st.n, st.m), seq)
+        return hs.swapaxes(0, 1), MLSTMState(C, n, m)
+
+    pad = (-S) % chunk
+    if pad:
+        def padseq(x, fill):
+            return jnp.concatenate(
+                [x, jnp.full((pad,) + x.shape[1:], fill, x.dtype)])
+        seq = (padseq(seq[0], 0.0), padseq(seq[1], 0.0), padseq(seq[2], 0.0),
+               padseq(seq[3], -1e30),   # i = 0: padding never writes
+               padseq(seq[4], 0.0))     # f = 1: state passes through
+    n_chunks = (S + pad) // chunk
+    seq = jax.tree.map(
+        lambda x: x.reshape((n_chunks, chunk) + x.shape[1:]), seq)
+
+    def outer(carry, inp):
+        return lax.scan(step, carry, inp)
+
+    (C, n, m), hs = lax.scan(jax.checkpoint(outer, prevent_cse=False),
+                             (st.C, st.n, st.m), seq)
+    hs = hs.reshape((n_chunks * chunk,) + hs.shape[2:])[:S]
+    return hs.swapaxes(0, 1), MLSTMState(C, n, m)
+
+
+def mlstm_block(p, xg, cfg, pc: ParallelConfig, *,
+                state: Optional[MLSTMState] = None
+                ) -> Tuple[jnp.ndarray, Optional[MLSTMState]]:
+    """xLSTM mLSTM block.  xg (B, S, d) -> (B, S, d) partial over TP.
+
+    v/output dims shard over TP; q/k replicated.
+    """
+    B, S, d = xg.shape
+    H = cfg.n_heads
+    w = int(d * cfg.mlstm_proj_factor)
+    dk = w // H
+    q = dense(xg, p["w_q"]).reshape(B, S, H, dk)          # bf16 until the step
+    k = dense(xg, p["w_k"]).reshape(B, S, H, dk)
+    v = dense(xg, p["w_v"])                               # (B,S,w/tp)
+    dv = v.shape[-1] // H
+    v = v.reshape(B, S, H, dv)
+    i_log = dense(xg, p["w_i"]).astype(jnp.float32).reshape(B, S, H)
+    f_log = -jax.nn.softplus(
+        -dense(xg, p["w_f"]).astype(jnp.float32)).reshape(B, S, H)
+
+    st = state if state is not None else MLSTMState(
+        jnp.zeros((B, H, dv, dk), jnp.float32),
+        jnp.zeros((B, H, dk), jnp.float32),
+        jnp.full((B, H), -1e30, jnp.float32))
+    hs, new_st = _mlstm_recurrence(q, k, v, i_log, f_log, st,
+                                   scale=dk ** -0.5)
+    y = hs.astype(xg.dtype).reshape(B, S, -1)                 # (B,S,w/tp)
+    gate = jax.nn.silu(dense(xg, p["w_g"]))                   # (B,S,w/tp)
+    out = jax.lax.dot_general(
+        y * gate, p["w_out"].astype(y.dtype), (((2,), (0,)), ((), ())),
+        preferred_element_type=y.dtype)
+    return out, (new_st if state is not None else None)
+
+
+def init_mlstm_state(cfg, pc: ParallelConfig, batch_local: int) -> MLSTMState:
+    d = cfg.d_model
+    H = cfg.n_heads
+    w = int(d * cfg.mlstm_proj_factor)
+    dk = w // H
+    dv = (w // pc.tp) // H
+    return MLSTMState(
+        jnp.zeros((batch_local, H, dv, dk), jnp.float32),
+        jnp.zeros((batch_local, H, dk), jnp.float32),
+        jnp.full((batch_local, H), -1e30, jnp.float32))
+
+
+# ===========================================================================
+#  sLSTM (xLSTM) -- scalar-state, per-head dense recurrence
+# ===========================================================================
+
+class SLSTMState(NamedTuple):
+    c: jnp.ndarray          # (B, d) cell, fp32
+    n: jnp.ndarray          # (B, d) normalizer
+    h: jnp.ndarray          # (B, d) hidden
+    m: jnp.ndarray          # (B, d) stabilizer
+
+
+def slstm_block(p, xg, cfg, pc: ParallelConfig, *,
+                state: Optional[SLSTMState] = None
+                ) -> Tuple[jnp.ndarray, Optional[SLSTMState]]:
+    """sLSTM block, replicated across TP (output is a full value, the
+    caller slices the sequence-parallel shard instead of reducing)."""
+    B, S, d = xg.shape
+    H = cfg.n_heads
+    hd = d // H
+    zx = dense(xg, p["w_z"]).astype(jnp.float32)
+    ix = dense(xg, p["w_i"]).astype(jnp.float32)
+    fx = dense(xg, p["w_f"]).astype(jnp.float32)
+    ox = dense(xg, p["w_o"]).astype(jnp.float32)
+    r_z, r_i, r_f, r_o = (p["r_z"], p["r_i"], p["r_f"], p["r_o"])  # (H,hd,hd)
+
+    def rec(h, r):
+        return jnp.einsum("bhx,hxy->bhy", h.reshape(B, H, hd),
+                          r.astype(jnp.float32)).reshape(B, d)
+
+    st = state if state is not None else SLSTMState(
+        *[jnp.zeros((B, d), jnp.float32) for _ in range(3)],
+        jnp.full((B, d), -1e30, jnp.float32))
+
+    def step(carry, inp):
+        c, n, h, m = carry
+        zt, it, ft, ot = inp
+        z = jnp.tanh(zt + rec(h, r_z))
+        ilog = it + rec(h, r_i)
+        flog = -jax.nn.softplus(-(ft + rec(h, r_f)))          # log sigmoid
+        o = jax.nn.sigmoid(ot + rec(h, r_o))
+        m_new = jnp.maximum(flog + m, ilog)
+        i_ = jnp.exp(ilog - m_new)
+        f_ = jnp.exp(flog + m - m_new)
+        c = f_ * c + i_ * z
+        n = f_ * n + i_
+        h = o * c / jnp.maximum(n, 1.0)
+        return (c, n, h, m_new), h
+
+    seq = tuple(a.swapaxes(0, 1) for a in (zx, ix, fx, ox))
+    chunk = _MLSTM_CHUNK
+    if S <= chunk:
+        (c, n, h, m), hs = lax.scan(step, tuple(st), seq)
+    else:
+        # nested chunked scan (see _mlstm_recurrence): saves only
+        # chunk-boundary states for the backward pass
+        pad = (-S) % chunk
+        if pad:
+            seq = tuple(jnp.concatenate(
+                [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)]) for x in seq)
+        n_chunks = (S + pad) // chunk
+        seq = jax.tree.map(
+            lambda x: x.reshape((n_chunks, chunk) + x.shape[1:]), seq)
+
+        def outer(carry, inp):
+            return lax.scan(step, carry, inp)
+
+        (c, n, h, m), hs = lax.scan(jax.checkpoint(outer, prevent_cse=False),
+                                    tuple(st), seq)
+        hs = hs.reshape((n_chunks * chunk,) + hs.shape[2:])[:S]
+    y = hs.swapaxes(0, 1).astype(xg.dtype)                    # (B, S, d)
+    out = dense(y, p["w_out"])                                # replicated full
+    return out, (SLSTMState(c, n, h, m) if state is not None else None)
+
+
+def init_slstm_state(cfg, pc: ParallelConfig, batch_local: int) -> SLSTMState:
+    d = cfg.d_model
+    return SLSTMState(
+        jnp.zeros((batch_local, d), jnp.float32),
+        jnp.zeros((batch_local, d), jnp.float32),
+        jnp.zeros((batch_local, d), jnp.float32),
+        jnp.full((batch_local, d), -1e30, jnp.float32))

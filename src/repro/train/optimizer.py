@@ -1,0 +1,208 @@
+"""AdamW with three distributed layouts over the DP axes.
+
+* ``dp``    -- optimizer state replicated; gradients synchronized with the
+              paper's generalized allreduce (autotuned step count r).
+* ``zero1`` -- optimizer state sharded 1/dp as one flat buffer; gradients
+              go through the *reduction phase only* (reduce-scatter,
+              ceil(log P) steps for any P), the updated parameter chunks
+              come back through the *distribution phase* (all-gather).
+              The paper's two phases map 1:1 onto ZeRO-1's two collectives.
+* ``fsdp``  -- parameters themselves sharded; gradient reduce-scatter falls
+              out of the VJP of the forward all-gather (ZeRO-3).
+
+All modes share the same AdamW math.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core.allreduce import (all_gather_flat, allreduce_tree,
+                                  reduce_scatter_flat)
+from repro.core.cost_model import TPU_V5E_ICI
+from repro.parallel.api import ParallelConfig, ParamSpec
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: Optional[float] = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def lr_at(oc: OptConfig, step):
+    """Linear warmup + cosine decay."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(oc.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - oc.warmup_steps)
+                    / jnp.maximum(oc.total_steps - oc.warmup_steps, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return oc.lr * warm * (oc.min_lr_ratio + (1 - oc.min_lr_ratio) * cos)
+
+
+def _adam_math(g, m, v, p, oc: OptConfig, lr, bc1, bc2):
+    m = oc.b1 * m + (1 - oc.b1) * g
+    v = oc.b2 * v + (1 - oc.b2) * g * g
+    mh = m / bc1
+    vh = v / bc2
+    upd = mh / (jnp.sqrt(vh) + oc.eps) + oc.weight_decay * p
+    return p - lr * upd, m, v
+
+
+# ---------------------------------------------------------------------------
+#  tree <-> flat-shard plumbing (zero1)
+# ---------------------------------------------------------------------------
+
+def _flat_size(params) -> int:
+    return sum(int(jnp.size(l)) for l in jax.tree.leaves(params))
+
+
+def _padded_chunk(n: int, dp: int) -> int:
+    return -(-n // dp)
+
+
+def flatten_params(params):
+    leaves = jax.tree.leaves(params)
+    return jnp.concatenate([l.reshape(-1).astype(jnp.float32)
+                            for l in leaves])
+
+
+def unflatten_like(flat, params):
+    leaves, treedef = jax.tree.flatten(params)
+    out, off = [], 0
+    for l in leaves:
+        n = int(jnp.size(l))
+        out.append(flat[off:off + n].reshape(l.shape).astype(l.dtype))
+        off += n
+    return jax.tree.unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+#  optimizer states
+# ---------------------------------------------------------------------------
+
+def local_flat_size(params, pc: ParallelConfig, specs) -> int:
+    """Device-local flat parameter count: TP-sharded dims divided by tp.
+
+    The zero1 flat buffers live *inside* shard_map where every leaf is
+    already its TP shard, so all bookkeeping uses local sizes.
+    """
+    n = 0
+    for leaf, spec in zip(jax.tree.leaves(params), jax.tree.leaves(specs)):
+        sz = int(np.prod(leaf.shape)) if leaf.shape else 1
+        if spec.tp_dim is not None and pc.tp > 1:
+            sz //= pc.tp
+        n += sz
+    return n
+
+
+def init_opt_state(params, pc: ParallelConfig, specs=None,
+                   mode: Optional[str] = None):
+    mode = mode or pc.param_mode
+    if mode in ("dp", "fsdp"):
+        return {
+            "m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+            "v": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+    # zero1: flat moment buffers; GLOBAL shape (dp * ceil(N_local/dp),) --
+    # each device sees its (ceil(N_local/dp),) slice via P(dp_axes).
+    assert specs is not None, "zero1 needs the ParamSpec tree"
+    n = local_flat_size(params, pc, specs)
+    u = _padded_chunk(n, pc.dp)
+    return {
+        "m": jnp.zeros((pc.dp * u,), jnp.float32),
+        "v": jnp.zeros((pc.dp * u,), jnp.float32),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+#  updates (run inside shard_map)
+# ---------------------------------------------------------------------------
+
+def clip_by_global_norm(grads, oc: OptConfig, sq_psum_axes=None):
+    """Global-norm gradient clipping.
+
+    ``sq_psum_axes``: axes to psum the squared norm over when the grads
+    are sharded (zero1 flat shards over DP).  For fsdp mode clipping is
+    intentionally not applied (the mixed sharded/replicated layout would
+    need a per-leaf axis map; documented limitation).
+    """
+    if oc.grad_clip is None:
+        return grads
+    sumsq = sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                for l in jax.tree.leaves(grads))
+    if sq_psum_axes:
+        sumsq = lax.psum(sumsq, sq_psum_axes)
+    norm = jnp.sqrt(sumsq)
+    scale = jnp.minimum(1.0, oc.grad_clip / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads)
+
+
+def apply_updates_dp(params, grads, opt_state, oc: OptConfig,
+                     pc: ParallelConfig):
+    """Replicated AdamW (modes dp / fsdp: grads already laid out like
+    params)."""
+    step = opt_state["step"] + 1
+    lr = lr_at(oc, step)
+    bc1 = 1 - oc.b1 ** step.astype(jnp.float32)
+    bc2 = 1 - oc.b2 ** step.astype(jnp.float32)
+
+    def upd(i):
+        def f(p, g, m, v):
+            p32 = p.astype(jnp.float32)
+            out = _adam_math(g.astype(jnp.float32), m, v, p32, oc, lr,
+                             bc1, bc2)
+            return out[i].astype(p.dtype) if i == 0 else out[i]
+        return f
+
+    # three passes over the tree; XLA CSEs the shared math
+    new_params = jax.tree.map(upd(0), params, grads,
+                              opt_state["m"], opt_state["v"])
+    new_m = jax.tree.map(upd(1), params, grads,
+                         opt_state["m"], opt_state["v"])
+    new_v = jax.tree.map(upd(2), params, grads,
+                         opt_state["m"], opt_state["v"])
+    return new_params, {"m": new_m, "v": new_v, "step": step}
+
+
+def apply_updates_zero1(params, grad_shard, opt_state, oc: OptConfig,
+                        pc: ParallelConfig):
+    """ZeRO-1: AdamW on this device's flat parameter chunk, then the
+    distribution phase (all-gather) rebuilds the full parameters."""
+    step = opt_state["step"] + 1
+    lr = lr_at(oc, step)
+    bc1 = 1 - oc.b1 ** step.astype(jnp.float32)
+    bc2 = 1 - oc.b2 ** step.astype(jnp.float32)
+
+    flat = flatten_params(params)
+    n = flat.shape[0]
+    u = grad_shard.shape[0]
+    pad = u * pc.dp - n
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.float32)])
+    if pc.dp > 1:
+        d = lax.axis_index(pc.dp_axis_name)
+        my = lax.dynamic_slice_in_dim(flat.reshape(pc.dp, u), d, 1, 0)[0]
+    else:
+        my = flat
+    p2, m2, v2 = _adam_math(grad_shard, opt_state["m"], opt_state["v"],
+                            my, oc, lr, bc1, bc2)
+    if pc.dp > 1:
+        full = all_gather_flat(p2, pc.dp_axis_name)[:n]
+    else:
+        full = p2[:n]
+    new_params = unflatten_like(full, params)
+    return new_params, {"m": m2, "v": v2, "step": step}

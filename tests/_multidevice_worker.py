@@ -1,0 +1,150 @@
+"""Worker executed in a subprocess with XLA_FLAGS forcing N host devices.
+
+Runs a batch of multi-device checks and prints "ALL-OK" on success.
+Keeping everything in one process amortizes JAX startup (~seconds).
+"""
+import os
+import sys
+
+assert "xla_force_host_platform_device_count" in os.environ.get("XLA_FLAGS", ""), \
+    "must be launched with XLA_FLAGS=--xla_force_host_platform_device_count=N"
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.allreduce import (all_gather_flat, allreduce_flat,  # noqa: E402
+                                  allreduce_tree, psum_tree,
+                                  reduce_scatter_flat, tree_all_gather,
+                                  tree_reduce_scatter)
+from repro.core.schedule import (build_all_gather, build_generalized,  # noqa: E402
+                                 build_reduce_scatter, build_ring, max_r)
+
+
+def check_allreduce_flat():
+    n = len(jax.devices())
+    mesh = jax.make_mesh((n,), ("data",))
+    rng = np.random.default_rng(0)
+    for m in [1, 5, n, 3 * n + 1, 257]:
+        x = rng.standard_normal((n, m)).astype(np.float32)
+        want = x.sum(0)
+        scheds = [build_generalized(n, r) for r in range(max_r(n) + 1)]
+        scheds.append(build_ring(n))
+        if n & (n - 1) == 0:
+            scheds.append(build_generalized(n, 0, "hypercube"))
+            scheds.append(build_generalized(n, max_r(n), "hypercube"))
+        for sched in scheds:
+            f = jax.jit(jax.shard_map(
+                lambda v: allreduce_flat(v[0], "data", sched)[None],
+                mesh=mesh, in_specs=P("data", None), out_specs=P("data", None)))
+            out = np.asarray(f(x))
+            for d in range(n):
+                np.testing.assert_allclose(out[d], want, rtol=2e-5, atol=2e-5)
+    print("ok allreduce_flat")
+
+
+def check_vs_psum():
+    n = len(jax.devices())
+    mesh = jax.make_mesh((n,), ("data",))
+    rng = np.random.default_rng(1)
+    tree = {"w": rng.standard_normal((n, 33)).astype(np.float32),
+            "b": rng.standard_normal((n, 7, 3)).astype(np.float32)}
+    def ours(t):
+        loc = jax.tree.map(lambda v: v[0], t)
+        out = allreduce_tree(loc, "data", mean=True)
+        return jax.tree.map(lambda v: v[None], out)
+    def theirs(t):
+        loc = jax.tree.map(lambda v: v[0], t)
+        out = psum_tree(loc, "data", mean=True)
+        return jax.tree.map(lambda v: v[None], out)
+    fo = jax.jit(jax.shard_map(ours, mesh=mesh, in_specs=P("data"), out_specs=P("data")))
+    ft = jax.jit(jax.shard_map(theirs, mesh=mesh, in_specs=P("data"), out_specs=P("data")))
+    a, b = fo(tree), ft(tree)
+    for k in tree:
+        np.testing.assert_allclose(np.asarray(a[k]), np.asarray(b[k]),
+                                   rtol=2e-5, atol=2e-5)
+    print("ok vs_psum")
+
+
+def check_rs_ag():
+    n = len(jax.devices())
+    mesh = jax.make_mesh((n,), ("data",))
+    rng = np.random.default_rng(2)
+    m = 4 * n
+    x = rng.standard_normal((n, m)).astype(np.float32)
+    want = x.sum(0)
+
+    def f(v):
+        shard = reduce_scatter_flat(v[0], "data")
+        return shard[None]
+    out = np.asarray(jax.jit(jax.shard_map(
+        f, mesh=mesh, in_specs=P("data", None), out_specs=P("data", None)))(x))
+    u = m // n
+    for d in range(n):
+        np.testing.assert_allclose(out[d], want[d*u:(d+1)*u], rtol=2e-5, atol=2e-5)
+
+    def g(v):
+        shard = reduce_scatter_flat(v[0], "data")
+        return all_gather_flat(shard, "data")[None]
+    out = np.asarray(jax.jit(jax.shard_map(
+        g, mesh=mesh, in_specs=P("data", None), out_specs=P("data", None)))(x))
+    for d in range(n):
+        np.testing.assert_allclose(out[d], want, rtol=2e-5, atol=2e-5)
+    print("ok rs_ag")
+
+
+def check_multiaxis():
+    devs = len(jax.devices())
+    if devs % 2:
+        print("ok multiaxis (skipped)")
+        return
+    n0, n1 = 2, devs // 2
+    mesh = jax.make_mesh((n0, n1), ("pod", "data"))
+    n = n0 * n1
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal((n, 11)).astype(np.float32)
+    want = x.sum(0)
+    sched = build_generalized(n, 1)
+    f = jax.jit(jax.shard_map(
+        lambda v: allreduce_flat(v.reshape(-1), ("pod", "data"), sched)[None],
+        mesh=mesh, in_specs=P(("pod", "data"), None),
+        out_specs=P(("pod", "data"), None)))
+    out = np.asarray(f(x))
+    for d in range(n):
+        np.testing.assert_allclose(out[d], want, rtol=2e-5, atol=2e-5)
+    print("ok multiaxis")
+
+
+def check_tree_zero():
+    n = len(jax.devices())
+    mesh = jax.make_mesh((n,), ("data",))
+    rng = np.random.default_rng(4)
+    tree = {"a": rng.standard_normal((n, 13)).astype(np.float32),
+            "b": rng.standard_normal((n, 2, 5)).astype(np.float32)}
+    def f(t):
+        loc = jax.tree.map(lambda v: v[0], t)
+        shard, spec = tree_reduce_scatter(loc, "data", mean=True)
+        back = tree_all_gather(shard, spec, "data")
+        return jax.tree.map(lambda v: v[None], back)
+    out = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("data"),
+                                out_specs=P("data")))(tree)
+    for k in tree:
+        np.testing.assert_allclose(np.asarray(out[k])[0], tree[k].mean(0),
+                                   rtol=2e-5, atol=2e-5)
+    print("ok tree_zero")
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    checks = dict(allreduce=check_allreduce_flat, psum=check_vs_psum,
+                  rsag=check_rs_ag, multiaxis=check_multiaxis,
+                  zero=check_tree_zero)
+    if which == "all":
+        for fn in checks.values():
+            fn()
+    else:
+        checks[which]()
+    print("ALL-OK")

@@ -1,0 +1,50 @@
+"""Multi-device JAX collective tests.
+
+The main pytest process must keep the default single CPU device (smoke
+tests / benches depend on that), so multi-device checks run in a
+subprocess with XLA_FLAGS forcing 8 host devices.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+_WORKER = os.path.join(os.path.dirname(__file__), "_multidevice_worker.py")
+
+
+def _run(which: str, devices: int = 8, timeout: int = 600):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env.pop("JAX_PLATFORMS", None)
+    res = subprocess.run([sys.executable, _WORKER, which], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    assert res.returncode == 0, f"worker failed:\n{res.stdout}\n{res.stderr}"
+    assert "ALL-OK" in res.stdout, res.stdout
+    return res.stdout
+
+
+@pytest.mark.slow
+def test_allreduce_all_r_and_ring_8dev():
+    _run("allreduce")
+
+
+def test_matches_psum_8dev():
+    _run("psum")
+
+
+def test_reduce_scatter_all_gather_8dev():
+    _run("rsag")
+
+
+def test_multiaxis_pod_data_8dev():
+    _run("multiaxis")
+
+
+def test_zero_style_roundtrip_8dev():
+    _run("zero")
+
+
+@pytest.mark.slow
+def test_allreduce_nonpower2_6dev():
+    _run("allreduce", devices=6)

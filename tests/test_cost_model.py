@@ -1,0 +1,101 @@
+"""Cost model: closed forms (paper eqs 15/25/36/44/37) vs compiled schedules."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cost_model import (Fabric, PAPER_10GE, optimal_r_analytic,
+                                   optimal_r_search, schedule_cost,
+                                   tau_best_sota, tau_bw_optimal,
+                                   tau_intermediate, tau_latency_optimal,
+                                   tau_openmpi_policy, tau_recursive_doubling,
+                                   tau_recursive_halving, tau_ring)
+from repro.core.schedule import (build_generalized, build_ring, max_r,
+                                 n_steps_log)
+
+
+def test_closed_forms_match_paper_numbers():
+    f = PAPER_10GE
+    P, m = 127, 425.0
+    # latency-optimal must take ceil(lg 127) = 7 alpha terms
+    t = tau_latency_optimal(P, m, f)
+    assert t >= 7 * f.alpha
+    # bandwidth-optimal has 14 steps
+    assert tau_bw_optimal(P, m, f) >= 14 * f.alpha
+
+
+@settings(max_examples=40, deadline=None)
+@given(P=st.integers(2, 64), mexp=st.integers(5, 24))
+def test_schedule_cost_bounded_by_closed_form(P, mexp):
+    """The compiled schedule never exceeds the paper's worst-case formula."""
+    f = PAPER_10GE
+    m = float(2 ** mexp)
+    for r in range(max_r(P) + 1):
+        sc = schedule_cost(build_generalized(P, r), m, f)
+        cf = tau_intermediate(P, m, r, f)
+        assert sc <= cf * (1 + 1e-9), (P, m, r)
+
+
+@settings(max_examples=30, deadline=None)
+@given(P=st.integers(3, 200), mexp=st.integers(4, 26))
+def test_analytic_r_near_optimal(P, mexp):
+    """Eq (37) should be within one step of the exact argmin, and its cost
+    within 25% of the optimum (the paper uses it as the runtime heuristic)."""
+    f = PAPER_10GE
+    m = float(2 ** mexp)
+    ra = optimal_r_analytic(P, m, f)
+    rs = optimal_r_search(P, m, f)
+    ta = tau_intermediate(P, m, ra, f)
+    ts = tau_intermediate(P, m, rs, f)
+    assert ta <= ts * 1.25 or abs(ra - rs) <= 1
+
+
+def test_proposed_beats_sota_nonpower2_small():
+    """Fig 7/11 claim: for P=127 and small m the proposed algorithm beats
+    the best of RD/RH/Ring."""
+    f = PAPER_10GE
+    P = 127
+    for m in [128.0, 425.0, 1024.0, 4096.0]:
+        r = optimal_r_search(P, m, f)
+        assert tau_intermediate(P, m, r, f) < tau_best_sota(P, m, f)
+
+
+def test_ring_wins_for_huge_messages():
+    """Fig 8: for very large m the advantage over Ring becomes negligible
+    (the model converges; Ring's cache behaviour is out of model scope)."""
+    f = PAPER_10GE
+    P = 127
+    m = 2.0 ** 28
+    r = optimal_r_search(P, m, f)
+    ratio = tau_intermediate(P, m, r, f) / tau_ring(P, m, f)
+    assert 0.9 < ratio < 1.1
+
+
+def test_power_of_two_specials_agree():
+    """For P=2^k, r=0 matches Recursive Halving and r=L matches Recursive
+    Doubling cost exactly (no workaround overhead)."""
+    f = PAPER_10GE
+    P, m = 128, 65536.0
+    assert tau_bw_optimal(P, m, f) == pytest.approx(
+        tau_recursive_halving(P, m, f), rel=1e-12)
+    # RD sends the whole vector each step; our latency-optimal sends
+    # P chunks of size u = m/P per step -- identical volume.
+    assert tau_latency_optimal(P, m, f) >= tau_recursive_doubling(P, m, f)
+
+
+def test_openmpi_policy_switch():
+    f = PAPER_10GE
+    P = 127
+    assert tau_openmpi_policy(P, 1024.0, f) == tau_recursive_doubling(P, 1024.0, f)
+    assert tau_openmpi_policy(P, 1 << 20, f) == tau_ring(P, float(1 << 20), f)
+
+
+def test_monotonic_step_tradeoff():
+    """More removed steps -> fewer alpha terms, more beta terms (the paper's
+    central trade-off), so cost curves in r are U-shaped (unimodal-ish):
+    the argmin moves to smaller r as m grows."""
+    f = PAPER_10GE
+    P = 127
+    rs = [optimal_r_search(P, float(m), f)
+          for m in [64, 1024, 16384, 262144, 1 << 22]]
+    assert all(a >= b for a, b in zip(rs, rs[1:]))

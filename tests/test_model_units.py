@@ -1,0 +1,117 @@
+"""Unit/property tests for model internals: MoE routing invariants,
+RoPE, vocab-parallel CE, embeddings."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.config import ModelConfig, MoEConfig
+from repro.models.layers import rope, vocab_parallel_ce
+from repro.models.moe import capacity, dispatch_indices, route
+from repro.parallel.api import ParallelConfig
+
+
+# ------------------------------------------------------------------ MoE
+@settings(max_examples=20, deadline=None)
+@given(st.data())
+def test_moe_dispatch_invariants(data):
+    E = data.draw(st.sampled_from([4, 8, 16]))
+    k = data.draw(st.integers(1, min(4, E)))
+    T = data.draw(st.integers(5, 200))
+    m = MoEConfig(n_experts=E, top_k=k, d_expert=8,
+                  capacity_factor=data.draw(st.sampled_from([1.0, 1.25, 2.0])))
+    rng = np.random.default_rng(T * E + k)
+    # lax.top_k yields DISTINCT experts per token -- honour that contract
+    top_e = np.stack([rng.permutation(E)[:k] for _ in range(T)])
+    top_e = jnp.asarray(top_e, jnp.int32)
+    eq, pos, keep = jax.jit(
+        lambda te: dispatch_indices(te, m, T))(top_e)
+    eq, pos, keep = np.asarray(eq), np.asarray(pos), np.asarray(keep)
+    C = capacity(T, m)
+    assert eq.shape == (E, C)
+    # every queue entry is a valid token id or the sentinel T
+    assert ((eq >= 0) & (eq <= T)).all()
+    # no token appears twice in the same expert's queue
+    for e in range(E):
+        toks = eq[e][eq[e] < T]
+        assert len(set(toks.tolist())) == len(toks)
+    # kept assignments are exactly the in-capacity ones
+    assert (keep == (pos < C)).all()
+    # each kept (t, j) is present in expert top_e[t, j]'s queue
+    for t in range(min(T, 30)):
+        for j in range(k):
+            if keep[t, j]:
+                assert t in eq[top_e[t, j]]
+
+
+def test_moe_router_probs_normalized():
+    m = MoEConfig(n_experts=8, top_k=2, d_expert=8)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((40, 16)), jnp.float32)
+    p_router = {"w": jnp.asarray(rng.standard_normal((16, 8)) * 0.1,
+                                 jnp.float32)}
+    top_e, top_p, aux = route(p_router, x, m)
+    np.testing.assert_allclose(np.asarray(top_p).sum(-1), 1.0, rtol=1e-5)
+    assert float(aux) >= 0.0
+
+
+# ------------------------------------------------------------------ RoPE
+@settings(max_examples=15, deadline=None)
+@given(S=st.integers(1, 33), D=st.sampled_from([8, 16, 64]))
+def test_rope_preserves_norm_and_relativity(S, D):
+    rng = np.random.default_rng(S * D)
+    q = jnp.asarray(rng.standard_normal((1, 2, S, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 2, S, D)), jnp.float32)
+    pos = jnp.arange(S, dtype=jnp.int32)
+    qr, kr = rope(q, k, pos, theta=10_000.0)
+    # rotations preserve norms
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(qr), axis=-1),
+                               np.linalg.norm(np.asarray(q), axis=-1),
+                               rtol=2e-3, atol=2e-3)
+    # relative property: <rot_i q, rot_j k> depends only on i - j
+    if S >= 3:
+        qr2, kr2 = rope(q, k, pos + 7, theta=10_000.0)
+        a = np.einsum("bhd,bhd->bh", np.asarray(qr)[:, :, 2],
+                      np.asarray(kr)[:, :, 0])
+        b = np.einsum("bhd,bhd->bh", np.asarray(qr2)[:, :, 2],
+                      np.asarray(kr2)[:, :, 0])
+        np.testing.assert_allclose(a, b, rtol=2e-2, atol=2e-2)
+
+
+# ------------------------------------------------------- vocab-parallel CE
+def test_ce_matches_dense_softmax_xent():
+    cfg = ModelConfig(name="t", family="dense", n_layers=1, d_model=16,
+                      n_heads=2, n_kv_heads=2, d_ff=32, vocab=50,
+                      head_dim=8)
+    pc = ParallelConfig(dp=1, tp=1)
+    rng = np.random.default_rng(0)
+    B, S = 2, 9
+    x = jnp.asarray(rng.standard_normal((B, S, 16)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((16, 50)) * 0.3, jnp.float32)
+    labels = rng.integers(0, 50, (B, S)).astype(np.int32)
+    labels[0, :3] = -1  # masked
+    total, count = vocab_parallel_ce({"w": w}, x, jnp.asarray(labels),
+                                     cfg, pc, chunk=4)
+    logits = np.asarray(x @ w, np.float64)
+    lse = np.log(np.exp(logits - logits.max(-1, keepdims=True)).sum(-1)) \
+        + logits.max(-1)
+    picked = np.take_along_axis(
+        logits, np.maximum(labels, 0)[..., None], -1)[..., 0]
+    mask = labels >= 0
+    want = ((lse - picked) * mask).sum()
+    assert int(count) == mask.sum()
+    np.testing.assert_allclose(float(total), want, rtol=1e-4)
+
+
+def test_ce_ignores_all_masked():
+    cfg = ModelConfig(name="t", family="dense", n_layers=1, d_model=8,
+                      n_heads=1, n_kv_heads=1, d_ff=16, vocab=20,
+                      head_dim=8)
+    pc = ParallelConfig(dp=1, tp=1)
+    x = jnp.ones((1, 4, 8), jnp.float32)
+    w = jnp.ones((8, 20), jnp.float32)
+    labels = jnp.full((1, 4), -1, jnp.int32)
+    total, count = vocab_parallel_ce({"w": w}, x, labels, cfg, pc, chunk=2)
+    assert int(count) == 0
+    assert float(total) == 0.0
