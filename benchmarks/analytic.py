@@ -24,13 +24,19 @@ Conventions (per device, per step):
 """
 from __future__ import annotations
 
+import json
 import math
+import os
+import sys
 from dataclasses import dataclass
 from typing import Dict, Optional
 
-from repro.core.cost_model import TPU_V5E_ICI
-from repro.core.schedule import build_generalized, build_reduce_scatter
-from repro.models.config import ModelConfig, ShapeConfig
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.cost_model import TPU_V5E_ICI  # noqa: E402
+from repro.core.schedule import (build_generalized,  # noqa: E402
+                                 build_reduce_scatter)
+from repro.models.config import ModelConfig, ShapeConfig  # noqa: E402
 
 BF16 = 2
 F32 = 4
@@ -267,3 +273,51 @@ def serve_cell(cfg: ModelConfig, shape: ShapeConfig, *, dp: int, tp: int,
     return CellModel(flops=fwd, hbm_bytes=hbm, coll_bytes=coll,
                      model_flops=model_flops,
                      detail={"cache_bytes": cache_bytes})
+
+
+# ---------------------------------------------------------------------------
+#  flat vs hierarchical collective comparison (CLI: `analytic.py
+#  hierarchical`) -- modeled allreduce time across message sizes on the
+#  multi-pod topology preset, written as the usual results/*.json rows.
+# ---------------------------------------------------------------------------
+
+def hierarchical_report(out_path: str = "results/hierarchical.json",
+                        pods: int = 2, chips_per_pod: int = 256):
+    from repro.topology import choose_collective, v5e_multipod
+    from repro.topology.hierarchical import (best_flat_plan,
+                                             best_hierarchical_plan)
+    topo = v5e_multipod(pods, chips_per_pod)
+    rows = []
+    for mexp in range(10, 31, 2):
+        m = 1 << mexp
+        flat = best_flat_plan(topo, m)
+        hier = best_hierarchical_plan(topo, m)
+        plan = choose_collective(topo, m)
+        rows.append({
+            "topology": topo.describe(),
+            "bytes": m,
+            "flat_s": flat.cost,
+            "hierarchical_s": hier.cost,
+            "hierarchical_r": hier.r,
+            "speedup": flat.cost / hier.cost if hier.cost > 0 else 1.0,
+            "chosen": plan.kind,
+            "chosen_r": plan.r,
+        })
+    if os.path.dirname(out_path):
+        os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(rows, f, indent=1)
+    for row in rows:
+        print(f"hier,m={row['bytes']},flat={row['flat_s'] * 1e6:.1f}us,"
+              f"hier(r={row['hierarchical_r']})="
+              f"{row['hierarchical_s'] * 1e6:.1f}us,"
+              f"speedup={row['speedup']:.2f},chosen={row['chosen']}")
+    return rows
+
+
+if __name__ == "__main__":
+    mode = sys.argv[1] if len(sys.argv) > 1 else "hierarchical"
+    if mode == "hierarchical":
+        hierarchical_report()
+    else:
+        raise SystemExit(f"unknown mode {mode!r} (modes: hierarchical)")

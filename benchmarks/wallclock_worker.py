@@ -19,6 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.allreduce import allreduce_flat, psum_tree
 from repro.core.schedule import build_generalized, build_ring, max_r
 
@@ -42,18 +43,18 @@ def main():
         x = rng.standard_normal((n, m_elems)).astype(np.float32)
         for r in range(max_r(n) + 1):
             sched = build_generalized(n, r)
-            f = jax.jit(jax.shard_map(
+            f = jax.jit(shard_map(
                 lambda v, s=sched: allreduce_flat(v[0], "data", s)[None],
                 mesh=mesh, in_specs=P("data", None),
                 out_specs=P("data", None)))
             us = bench(f, x)
             print(f"wall,gen_allreduce_{label}_r{r},{us:.1f},1")
         sched = build_ring(n)
-        f = jax.jit(jax.shard_map(
+        f = jax.jit(shard_map(
             lambda v, s=sched: allreduce_flat(v[0], "data", s)[None],
             mesh=mesh, in_specs=P("data", None), out_specs=P("data", None)))
         print(f"wall,ring_{label},{bench(f, x):.1f},1")
-        g = jax.jit(jax.shard_map(
+        g = jax.jit(shard_map(
             lambda v: jax.lax.psum(v[0], "data")[None],
             mesh=mesh, in_specs=P("data", None), out_specs=P("data", None)))
         print(f"wall,xla_psum_{label},{bench(g, x):.1f},1")

@@ -50,6 +50,7 @@ def main():
     import jax
     import jax.numpy as jnp
     from jax.sharding import PartitionSpec as Psp
+    from repro.compat import shard_map
     from repro.core.allreduce import allreduce_tree
 
     n = len(jax.devices())
@@ -62,8 +63,8 @@ def main():
         out = allreduce_tree(local, "data", mean=True)  # autotuned r
         return jax.tree.map(lambda v: v[None], out)
 
-    f = jax.jit(jax.shard_map(sync, mesh=mesh, in_specs=Psp("data"),
-                              out_specs=Psp("data")))
+    f = jax.jit(shard_map(sync, mesh=mesh, in_specs=Psp("data"),
+                          out_specs=Psp("data")))
     out = f(grads)
     np.testing.assert_allclose(np.asarray(out["w"])[0],
                                grads["w"].mean(0), rtol=1e-4)

@@ -26,11 +26,13 @@ import threading
 from typing import Any, Dict, Optional, Tuple
 
 import jax
+
+from repro.compat import tree_flatten_with_path
 import numpy as np
 
 
 def _leaf_paths(tree) -> Dict[str, Any]:
-    flat = jax.tree.flatten_with_path(tree)[0]
+    flat = tree_flatten_with_path(tree)[0]
     out = {}
     for path, leaf in flat:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
@@ -138,7 +140,7 @@ def restore(ckpt_dir: str, like: Dict[str, Any],
             continue
         loaded = {k: np.load(os.path.join(d, have[k]["file"]))
                   for k in want}
-        flat, treedef = jax.tree.flatten_with_path(tree)
+        flat, treedef = tree_flatten_with_path(tree)
         leaves = []
         for path, leaf in flat:
             key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))

@@ -1,0 +1,63 @@
+"""Version-compatibility layer over the JAX APIs the repo drives.
+
+The repo targets current JAX (``jax.shard_map`` with ``check_vma``,
+explicit mesh axis types).  Older runtimes (<= 0.4.x) ship the same
+machinery as ``jax.experimental.shard_map`` (with ``check_rep``) and have
+no ``jax.sharding.AxisType``; this shim keeps every call site on one
+spelling instead of scattering try/except through the codebase.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs,
+              check_vma: Optional[bool] = None):
+    """``jax.shard_map`` on current JAX, the experimental fallback on old
+    JAX (where ``check_vma`` was spelled ``check_rep``).
+
+    ``check_vma=None`` keeps each JAX version's own default (the
+    replication checker stays ON where available); pass False only to
+    opt out explicitly.
+    """
+    kw = {} if check_vma is None else {"check_vma": check_vma}
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    if check_vma is not None:
+        kw = {"check_rep": check_vma}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **kw)
+
+
+def axis_size(axis_name) -> int:
+    """Static size of one named mesh axis inside shard_map tracing.
+
+    ``lax.axis_size`` on current JAX; on old JAX the axis env exposes the
+    same static size via ``jax.core.axis_frame``.
+    """
+    from jax import lax
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(axis_name)
+    import jax.core as core
+    return core.axis_frame(axis_name)
+
+
+def tree_flatten_with_path(tree):
+    """``jax.tree.flatten_with_path`` / old ``jax.tree_util`` spelling."""
+    if hasattr(jax.tree, "flatten_with_path"):
+        return jax.tree.flatten_with_path(tree)
+    return jax.tree_util.tree_flatten_with_path(tree)
+
+
+def default_axis_types(n: int) -> Optional[Tuple]:
+    """(AxisType.Auto,) * n where supported, None (= don't pass the kwarg)
+    on JAX versions without explicit mesh axis types."""
+    try:
+        from jax.sharding import AxisType
+    except ImportError:
+        return None
+    return (AxisType.Auto,) * n

@@ -17,5 +17,6 @@ from .cost_model import (Fabric, PAPER_10GE, TPU_V5E_ICI, optimal_r_analytic,
                          tau_bw_optimal, tau_intermediate,
                          tau_latency_optimal, tau_ring)
 from .allreduce import (all_gather_flat, allreduce_flat, allreduce_tree,
+                        hierarchical_allreduce, hierarchical_allreduce_flat,
                         psum_tree, reduce_scatter_flat, tree_all_gather,
                         tree_reduce_scatter)

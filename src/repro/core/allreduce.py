@@ -20,30 +20,52 @@ powers ``t^k`` are *multi-hop* on a physical ring when k > 1.  XLA lowers a
 wraparound links), so the per-step latency term alpha grows with the hop
 distance.  The schedules still apply unchanged -- only the Fabric
 parameters used by the autotuner change (alpha_step ~ alpha_link * hops).
+
+Hierarchical path (multi-pod / multi-node): a flat schedule over the
+flattened ``(pod, data)`` index pays DCN latency and bandwidth on *every*
+step, because each cyclic shift moves some pair of ranks across the pod
+boundary and the SPMD step completes only when the slowest transfer lands.
+:func:`hierarchical_allreduce` instead replays a
+:class:`~repro.topology.hierarchical.HierarchicalSchedule`: reduce-scatter
+over the fast inner axis (``lax.ppermute`` over ``"data"`` only -- pure
+ICI), then the generalized allreduce with tunable ``r`` over the slow
+outer axis on a 1/inner-sized chunk (the only DCN traffic), then
+all-gather back over the inner axis.  The flat-vs-hierarchical decision
+and the outer ``r`` are autotuned per message size by
+:func:`repro.topology.hierarchical.choose_collective`.
 """
 from __future__ import annotations
 
 import math
 from functools import partial
-from typing import Callable, Optional, Sequence, Tuple, Union
+from typing import (TYPE_CHECKING, Callable, Optional, Sequence, Tuple,
+                    Union)
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro import compat
+
 from .autotune import Choice, choose, schedule_for
 from .cost_model import Fabric, TPU_V5E_ICI
 from .schedule import (Schedule, build_all_gather, build_generalized,
                        build_reduce_scatter, build_ring)
+
+if TYPE_CHECKING:  # repro.topology is the layer above this one; importing
+    # it at module scope would cycle through repro.core.__init__, so the
+    # executors below bind to it at call time.
+    from repro.topology.fabric import Topology
+    from repro.topology.hierarchical import HierarchicalSchedule
 
 AxisName = Union[str, Tuple[str, ...]]
 
 
 def axis_size(axis_name: AxisName) -> int:
     if isinstance(axis_name, (tuple, list)):
-        return math.prod(lax.axis_size(a) for a in axis_name)
-    return lax.axis_size(axis_name)
+        return math.prod(compat.axis_size(a) for a in axis_name)
+    return compat.axis_size(axis_name)
 
 
 def _perm_for(sched: Schedule, shift: int):
@@ -234,6 +256,87 @@ def allreduce_tree(tree, axis_name: AxisName, *,
         sched = build_generalized(P, r)
     out = allreduce_flat(flat, axis_name, sched,
                          accum_dtype=accum_dtype, add=add)
+    if mean:
+        out = out / P
+    return _unflatten_tree(out, spec)
+
+
+# ---------------------------------------------------------------------------
+#  hierarchical collectives over multi-level fabrics
+# ---------------------------------------------------------------------------
+
+def hierarchical_allreduce_flat(x: jnp.ndarray, axis_names: Sequence[str],
+                                hs: "HierarchicalSchedule", *,
+                                accum_dtype=None,
+                                add: Callable = jnp.add) -> jnp.ndarray:
+    """Replay a :class:`HierarchicalSchedule` over the named mesh axes.
+
+    ``axis_names`` are ordered outermost (slowest) first, aligned with
+    ``hs.topology.levels``; every ppermute runs over exactly one axis, so
+    inner-level steps never touch the outer (DCN) links.
+    """
+    topo = hs.topology
+    assert len(axis_names) == topo.n_levels, (axis_names, topo.describe())
+    for name, lvl in zip(axis_names, topo.levels):
+        assert compat.axis_size(name) == lvl.size, \
+            f"axis {name!r} size != topology level {lvl.name}[{lvl.size}]"
+    if topo.P == 1:
+        return x
+    orig_dtype = x.dtype
+    if accum_dtype is not None:
+        x = x.astype(accum_dtype)
+    m = x.shape[0]
+    inner = topo.inner_size
+    mp = -(-m // inner) * inner
+    if mp != m:
+        x = jnp.concatenate([x, jnp.zeros((mp - m,), x.dtype)])
+    # reduce-scatter down the inner axes, innermost (fastest) first
+    inner_axes = [axis_names[i] for i in hs.inner_levels]
+    cur = x
+    for sched, axis in zip(hs.rs, inner_axes):
+        cur = reduce_scatter_flat(cur, axis, sched, add=add)
+    # generalized allreduce of the chunk across the outer axis
+    cur = allreduce_flat(cur, axis_names[0], hs.ar, add=add)
+    # all-gather back up, reverse order
+    for sched, axis in zip(hs.ag, reversed(inner_axes)):
+        cur = all_gather_flat(cur, axis, sched)
+    return cur[:m].astype(orig_dtype)
+
+
+def hierarchical_allreduce(tree, axis_names: Sequence[str],
+                           topology: "Topology", *,
+                           r: Optional[int] = None,
+                           mean: bool = False,
+                           accum_dtype=jnp.float32,
+                           add: Callable = jnp.add):
+    """Allreduce (sum or mean) a pytree over hierarchical mesh axes.
+
+    ``r`` tunes the outer-level step count; with ``r=None`` the plan
+    (flat vs hierarchical, and the step count) is autotuned per message
+    size from the per-level fabric parameters.  A flat plan executes the
+    chosen schedule over the flattened axis tuple -- hierarchical is only
+    used when the cost model says it wins.
+    """
+    from repro.topology.hierarchical import (HierarchicalSchedule,
+                                             build_hierarchical,
+                                             choose_collective,
+                                             schedules_for_plan)
+    P = topology.P
+    if P == 1:
+        return tree
+    flat, spec = _flatten_tree(tree)
+    nbytes = flat.size * flat.dtype.itemsize
+    if r is None:
+        plan = choose_collective(topology, int(nbytes))
+        sched = schedules_for_plan(plan, topology)
+    else:
+        sched = build_hierarchical(topology, r)
+    if isinstance(sched, HierarchicalSchedule):
+        out = hierarchical_allreduce_flat(flat, tuple(axis_names), sched,
+                                          accum_dtype=accum_dtype, add=add)
+    else:
+        out = allreduce_flat(flat, tuple(axis_names), sched,
+                             accum_dtype=accum_dtype, add=add)
     if mean:
         out = out / P
     return _unflatten_tree(out, spec)

@@ -37,29 +37,25 @@ def _chunks(vec: np.ndarray, P: int) -> List[np.ndarray]:
     return [vec[i * u:(i + 1) * u] for i in range(P)]
 
 
-def simulate(sched: Schedule, vectors: List[np.ndarray],
-             op: Callable[[np.ndarray, np.ndarray], np.ndarray] = np.add,
-             return_trace: bool = False):
-    """Run the schedule over explicit per-process vectors.
-
-    vectors: list of P arrays of identical shape (m, ...).
-    Returns list of P result arrays (each the full reduction), optionally
-    with a :class:`SimTrace`.
-    """
+def _initial_state(sched: Schedule,
+                   vectors: List[np.ndarray]) -> List[List[np.ndarray]]:
+    """Per-device row state from the schedule's initial slot layout."""
     P = sched.P
-    assert len(vectors) == P
-    m = vectors[0].shape[0]
-    u = -(-m // P)
-
-    # per-device row state: state[d][row] = chunk array
     state: List[List[np.ndarray]] = []
     for d in range(P):
         ch = _chunks(vectors[d], P)
-        rows = []
-        for row in range(len(sched.initial_slots)):
-            rows.append(ch[sched.chunk_of_initial_row(row, d)].copy())
-        state.append(rows)
+        state.append([ch[sched.chunk_of_initial_row(row, d)].copy()
+                      for row in range(len(sched.initial_slots))])
+    return state
 
+
+def _replay(sched: Schedule, state: List[List[np.ndarray]],
+            op: Callable[[np.ndarray, np.ndarray], np.ndarray] = np.add):
+    """Replay the compiled steps over per-device row state, in place.
+
+    Returns (units_sent_per_device, adds_per_device).
+    """
+    P = sched.P
     units_sent = 0
     adds = 0
     for st in sched.steps:
@@ -83,6 +79,24 @@ def simulate(sched: Schedule, vectors: List[np.ndarray],
                     new_rows.append(op(state[d][o.res], arrivals[d][o.arr]))
             state[d] = new_rows
         adds += sum(1 for o in st.out if o.kind == "add")
+    return units_sent, adds
+
+
+def simulate(sched: Schedule, vectors: List[np.ndarray],
+             op: Callable[[np.ndarray, np.ndarray], np.ndarray] = np.add,
+             return_trace: bool = False):
+    """Run the schedule over explicit per-process vectors.
+
+    vectors: list of P arrays of identical shape (m, ...).
+    Returns list of P result arrays (each the full reduction), optionally
+    with a :class:`SimTrace`.
+    """
+    P = sched.P
+    assert len(vectors) == P
+    m = vectors[0].shape[0]
+
+    state = _initial_state(sched, vectors)
+    units_sent, adds = _replay(sched, state, op)
 
     # gather: final row k of device d holds reduced chunk
     # sched.final_chunk_index(k, d)
@@ -101,33 +115,32 @@ def simulate(sched: Schedule, vectors: List[np.ndarray],
     return (results, trace) if return_trace else results
 
 
-def simulate_reduce_scatter(sched: Schedule, vectors: List[np.ndarray]):
+def simulate_reduce_scatter(sched: Schedule, vectors: List[np.ndarray],
+                            op: Callable[[np.ndarray, np.ndarray],
+                                         np.ndarray] = np.add):
     """Like :func:`simulate` but for reduce-scatter schedules: returns, per
     device, the single fully reduced chunk it owns (device d owns chunk d for
     the canonical place-0 result)."""
     P = sched.P
-    m = vectors[0].shape[0]
-    u = -(-m // P)
-    state = []
-    for d in range(P):
-        ch = _chunks(vectors[d], P)
-        state.append([ch[sched.chunk_of_initial_row(row, d)].copy()
-                      for row in range(len(sched.initial_slots))])
-    for st in sched.steps:
-        perm = sched.group.perm(st.shift)
-        arrivals = [[None] * len(st.tx_rows) for _ in range(P)]
-        for d in range(P):
-            for j, ri in enumerate(st.tx_rows):
-                arrivals[perm[d]][j] = state[d][ri]
-        for d in range(P):
-            new_rows = []
-            for o in st.out:
-                if o.kind == "keep":
-                    new_rows.append(state[d][o.res])
-                elif o.kind == "recv":
-                    new_rows.append(arrivals[d][o.arr])
-                else:
-                    new_rows.append(state[d][o.res] + arrivals[d][o.arr])
-            state[d] = new_rows
+    state = _initial_state(sched, vectors)
+    _replay(sched, state, op)
     return [state[d][0] for d in range(P)], [
         sched.final_chunk_index(0, d) for d in range(P)]
+
+
+def simulate_all_gather(sched: Schedule, chunks: List[np.ndarray]):
+    """Replay an all-gather schedule: device d contributes ``chunks[d]``
+    (the canonical place-0 layout, i.e. chunk d of the result), every
+    device returns the concatenation of all chunks."""
+    P = sched.P
+    assert len(chunks) == P
+    state: List[List[np.ndarray]] = [[chunks[d].copy()] for d in range(P)]
+    _replay(sched, state)
+    results = []
+    for d in range(P):
+        out: List[Optional[np.ndarray]] = [None] * P
+        for k in range(len(sched.final_slots)):
+            out[sched.final_chunk_index(k, d)] = state[d][k]
+        assert all(c is not None for c in out)
+        results.append(np.concatenate(out))
+    return results

@@ -64,7 +64,7 @@ def main():
     oc = OptConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
                    total_steps=args.steps)
     ec = ElasticConfig(ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
-                       param_mode=args.param_mode)
+                       param_mode=args.param_mode, grad_r=args.grad_r)
     dc = DataConfig(seq_len=args.seq, global_batch=args.global_batch)
     runner = ElasticRunner(cfg, oc, ec, dc, dims, axes=axes)
     n = sum(x.size for x in jax.tree.leaves(runner.params))

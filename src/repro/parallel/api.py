@@ -15,6 +15,14 @@ The whole model runs inside one ``jax.shard_map`` over the full mesh
 paper's schedule-based ppermute programs for the TP boundary collectives
 (a §Perf experiment); DP gradient sync always goes through the paper's
 machinery (that *is* the reproduction).
+
+When ``dp_axes`` spans multiple fabric levels (e.g. ("pod", "data") with
+DCN between pods and ICI inside), attach a
+:class:`repro.topology.Topology` via the ``topology`` field: gradient
+sync then routes through :func:`dp_grad_allreduce`, which picks
+flat-vs-hierarchical (and the outer step count r) per message size from
+the per-level fabric parameters instead of flattening everything into
+one cyclic group.
 """
 from __future__ import annotations
 
@@ -26,7 +34,12 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.allreduce import all_gather_flat, reduce_scatter_flat
+from repro.core.allreduce import (all_gather_flat, allreduce_tree,
+                                  hierarchical_allreduce,
+                                  reduce_scatter_flat)
+from repro.core.cost_model import Fabric, TPU_V5E_ICI
+from repro.core.schedule import max_r
+from repro.topology.fabric import Topology
 
 AxisName = Union[str, Tuple[str, ...]]
 
@@ -41,6 +54,7 @@ class ParallelConfig:
     grad_r: Optional[int] = None   # gen-allreduce step override (None = autotune)
     grad_group: str = "cyclic"     # cyclic | hypercube
     collective_impl: str = "xla"   # xla | group  (TP boundary collectives)
+    topology: Optional[Topology] = None  # multi-level fabric of dp_axes
     remat: bool = True
     scan_layers: bool = True
     accum_dtype = jnp.float32
@@ -48,6 +62,51 @@ class ParallelConfig:
     @property
     def dp_axis_name(self) -> AxisName:
         return self.dp_axes if len(self.dp_axes) > 1 else self.dp_axes[0]
+
+    @property
+    def hierarchical_dp(self) -> bool:
+        """Whether DP gradient sync should compose per-level schedules."""
+        return (self.topology is not None
+                and self.topology.n_levels > 1
+                and len(self.dp_axes) == self.topology.n_levels)
+
+
+def dp_grad_allreduce(tree, pc: ParallelConfig, *, mean: bool = True,
+                      fabric: Fabric = TPU_V5E_ICI):
+    """Gradient allreduce over the DP axes.
+
+    With a multi-level ``pc.topology`` this routes through the
+    topology-aware path (reduce-scatter on the fast inner level, the
+    generalized allreduce with tunable r on the slow outer level,
+    all-gather back); otherwise the flat generalized allreduce over the
+    (possibly flattened) DP axis tuple.
+
+    ``fabric`` tunes the *flat* path only; the hierarchical path reads
+    per-level alpha/beta/gamma from ``pc.topology`` (override it via
+    ``parallel_config_for(..., topology=...)`` for non-v5e machines).
+
+    NOTE on ``pc.grad_r``: on a flat mesh it tunes the schedule over the
+    full DP size (range [0, max_r(dp)]); on a hierarchical mesh it pins
+    the hierarchical family and tunes the *outer level's* allreduce, so
+    its valid range shrinks to [0, max_r(outer_size)].  Out-of-range
+    values fail fast here with the hierarchical meaning spelled out
+    rather than deep inside the schedule compiler.
+    """
+    if pc.dp == 1:
+        return tree
+    if pc.hierarchical_dp:
+        outer = pc.topology.outer
+        if pc.grad_r is not None and not 0 <= pc.grad_r <= max_r(outer.size):
+            raise ValueError(
+                f"grad_r={pc.grad_r} invalid for hierarchical DP over "
+                f"{pc.topology.describe()}: it tunes the outer level "
+                f"{outer.name}[{outer.size}], so the valid range is "
+                f"[0, {max_r(outer.size)}] (use grad_r=None to autotune "
+                f"flat-vs-hierarchical)")
+        return hierarchical_allreduce(tree, pc.dp_axes, pc.topology,
+                                      r=pc.grad_r, mean=mean)
+    return allreduce_tree(tree, pc.dp_axis_name, mean=mean, r=pc.grad_r,
+                          fabric=fabric)
 
 
 def tp_rank(pc: ParallelConfig):

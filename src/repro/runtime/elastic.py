@@ -46,6 +46,7 @@ class ElasticConfig:
     straggler_factor: float = 3.0
     ewma: float = 0.9
     param_mode: str = "dp"
+    grad_r: Optional[int] = None   # gradient-sync step-count override
 
 
 class ElasticRunner:
@@ -64,7 +65,8 @@ class ElasticRunner:
     def _build(self, mesh_shape, axes, devices, seed, fresh: bool):
         self.mesh = make_mesh(mesh_shape, axes, devices)
         self.pc = parallel_config_for(self.mesh,
-                                      param_mode=self.ec.param_mode)
+                                      param_mode=self.ec.param_mode,
+                                      grad_r=self.ec.grad_r)
         self.bundle = make_train_step(self.cfg, self.pc, self.mesh, self.oc,
                                       donate=False)
         if fresh:

@@ -1,0 +1,17 @@
+"""Topology-aware hierarchical collectives.
+
+Public API:
+  fabric       -- Level / Topology descriptions of multi-level fabrics
+                  (ICI + DCN, NVLink + IB) plus deployment presets
+  hierarchical -- HierarchicalSchedule composition of per-level compiled
+                  schedules, numpy-oracle verification, exact per-level
+                  costs, and the flat-vs-hierarchical autotuner
+"""
+from .fabric import (GPU_IB, GPU_NVLINK, Level, MULTI_POD_2X256, TPU_DCN,
+                     Topology, bottleneck_fabric, gpu_cluster, v5e_multipod,
+                     v5e_pod)
+from .hierarchical import (CollectivePlan, HierarchicalSchedule,
+                           best_flat_plan, best_hierarchical_plan,
+                           build_hierarchical, choose_collective, flat_cost,
+                           hierarchical_cost, schedules_for_plan,
+                           simulate_hierarchical)

@@ -1,0 +1,168 @@
+"""Multi-level fabric descriptions for heterogeneous networks.
+
+The flat :class:`~repro.core.cost_model.Fabric` models one homogeneous
+point-to-point network.  Real deployments are hierarchical: a TPU multi-pod
+job sees ~1 us ICI hops inside a pod and ~10 us DCN hops between pods; a
+GPU cluster sees NVLink inside a node and InfiniBand across nodes.  A
+:class:`Topology` names each level of that hierarchy and attaches the
+per-level alpha/beta/gamma parameters, so the schedule compiler can be
+applied *per level* (see :mod:`repro.topology.hierarchical`) instead of
+pretending the whole machine is one ring.
+
+Levels are ordered **outermost (slowest) first**, matching how mesh axes
+are written: ``("pod", "data")`` has the DCN level at index 0 and the ICI
+level at index 1.  Global rank <-> level coordinates use the mixed-radix
+convention with the innermost level fastest-varying -- exactly the
+flattened index JAX uses for a collective over the axis tuple
+``("pod", "data")``.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Sequence, Tuple
+
+from repro.core.cost_model import Fabric, TPU_V5E_ICI
+
+# ---------------------------------------------------------------------------
+#  per-level fabric constants
+# ---------------------------------------------------------------------------
+
+# Inter-pod data-center network: ~10 us latency, ~25 GB/s per host pair;
+# combines still run at HBM speed on chip.
+TPU_DCN = Fabric(alpha=1e-5, beta=1.0 / 25e9, gamma=3.0 / 819e9,
+                 name="tpu-dcn")
+
+# H100-class NVLink island: ~2 us launch latency, ~450 GB/s per GPU,
+# combine speed bounded by HBM3 (~3.35 TB/s, 3 bytes per combined byte).
+GPU_NVLINK = Fabric(alpha=2e-6, beta=1.0 / 450e9, gamma=3.0 / 3350e9,
+                    name="gpu-nvlink")
+
+# 400 Gb/s InfiniBand NIC per node: ~5 us latency, ~50 GB/s.
+GPU_IB = Fabric(alpha=5e-6, beta=1.0 / 50e9, gamma=3.0 / 3350e9,
+                name="gpu-ib")
+
+
+# ---------------------------------------------------------------------------
+#  Topology
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Level:
+    """One level of the fabric hierarchy.
+
+    group_kind selects the permutation group used when compiling schedules
+    at this level ("cyclic" works for any size; "hypercube" needs 2^k).
+    """
+
+    name: str
+    size: int
+    fabric: Fabric
+    group_kind: str = "cyclic"
+
+    def __post_init__(self):
+        if self.size < 1:
+            raise ValueError(f"level {self.name!r}: size must be >= 1")
+
+
+@dataclass(frozen=True)
+class Topology:
+    """A product of fabric levels, outermost (slowest) first."""
+
+    levels: Tuple[Level, ...]
+    name: str = "topology"
+
+    def __post_init__(self):
+        if not self.levels:
+            raise ValueError("Topology needs at least one level")
+
+    # ---- shape -----------------------------------------------------------
+    @property
+    def sizes(self) -> Tuple[int, ...]:
+        return tuple(l.size for l in self.levels)
+
+    @property
+    def P(self) -> int:
+        """Total number of devices."""
+        return math.prod(self.sizes)
+
+    @property
+    def n_levels(self) -> int:
+        return len(self.levels)
+
+    @property
+    def outer(self) -> Level:
+        return self.levels[0]
+
+    @property
+    def inner(self) -> Tuple[Level, ...]:
+        return self.levels[1:]
+
+    @property
+    def inner_size(self) -> int:
+        return math.prod(l.size for l in self.inner) if self.inner else 1
+
+    # ---- rank <-> coordinate maps ---------------------------------------
+    def coords(self, rank: int) -> Tuple[int, ...]:
+        """Mixed-radix digits of ``rank`` (innermost level fastest)."""
+        out = []
+        for s in reversed(self.sizes):
+            out.append(rank % s)
+            rank //= s
+        return tuple(reversed(out))
+
+    def rank(self, coords: Sequence[int]) -> int:
+        x = 0
+        for c, s in zip(coords, self.sizes):
+            x = x * s + c
+        return x
+
+    def describe(self) -> str:
+        return " > ".join(f"{l.name}[{l.size}]@{l.fabric.name}"
+                          for l in self.levels)
+
+    def __repr__(self):  # pragma: no cover - cosmetic
+        return f"Topology({self.describe()})"
+
+
+def bottleneck_fabric(topo: Topology) -> Fabric:
+    """The fabric a *flat* schedule over the flattened device index pays.
+
+    Every cyclic shift on the flattened index moves some pair of ranks
+    across every level boundary (and shifts that are multiples of the
+    inner size move *all* pairs across the outer level), and SPMD steps
+    complete only when the slowest transfer lands -- so each step of a
+    flat schedule is gated by the worst per-level latency and bandwidth.
+    """
+    return Fabric(alpha=max(l.fabric.alpha for l in topo.levels),
+                  beta=max(l.fabric.beta for l in topo.levels),
+                  gamma=max(l.fabric.gamma for l in topo.levels),
+                  name=f"bottleneck({topo.name})")
+
+
+# ---------------------------------------------------------------------------
+#  presets
+# ---------------------------------------------------------------------------
+
+def v5e_pod(chips: int = 256) -> Topology:
+    """Single TPU v5e pod: one homogeneous ICI level."""
+    return Topology((Level("ici", chips, TPU_V5E_ICI),),
+                    name=f"v5e-{chips}")
+
+
+def v5e_multipod(pods: int = 2, chips_per_pod: int = 256) -> Topology:
+    """Multi-pod v5e: DCN between pods, ICI inside each pod."""
+    return Topology((Level("pod", pods, TPU_DCN),
+                     Level("ici", chips_per_pod, TPU_V5E_ICI)),
+                    name=f"v5e-{pods}x{chips_per_pod}")
+
+
+def gpu_cluster(nodes: int, gpus_per_node: int = 8) -> Topology:
+    """N-node GPU cluster: InfiniBand between nodes, NVLink inside."""
+    return Topology((Level("node", nodes, GPU_IB),
+                     Level("nvlink", gpus_per_node, GPU_NVLINK)),
+                    name=f"gpu-{nodes}x{gpus_per_node}")
+
+
+# the production multi-pod deployment of ROADMAP.md / launch/mesh.py
+MULTI_POD_2X256 = v5e_multipod(2, 256)

@@ -29,12 +29,13 @@ import numpy as np
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.allreduce import allreduce_tree, tree_reduce_scatter
+from repro.compat import shard_map
+from repro.core.allreduce import tree_reduce_scatter
 from repro.core.cost_model import Fabric, TPU_V5E_ICI
 from repro.models.config import ModelConfig
 from repro.models.model import (decode_step, init_caches, loss_and_metrics,
                                 param_shapes)
-from repro.parallel.api import ParallelConfig, ParamSpec
+from repro.parallel.api import ParallelConfig, ParamSpec, dp_grad_allreduce
 from repro.train.optimizer import (OptConfig, apply_updates_dp,
                                    apply_updates_zero1, clip_by_global_norm,
                                    init_opt_state)
@@ -111,17 +112,16 @@ def sync_grads_dp(grads, specs, pc: ParallelConfig,
                 for g, s in zip(flat, sflat)]
         repl_idx = [i for i, s in enumerate(sflat) if s.fsdp_dim is None]
         if repl_idx:
-            synced = allreduce_tree([flat[i] for i in repl_idx],
-                                    pc.dp_axis_name, mean=True,
-                                    r=pc.grad_r, fabric=fabric)
+            synced = dp_grad_allreduce([flat[i] for i in repl_idx], pc,
+                                       mean=True, fabric=fabric)
             for i, v in zip(repl_idx, synced):
                 flat[i] = v
         return jax.tree.unflatten(treedef, flat)
     # pure dp: the paper's generalized allreduce over the whole tree
+    # (hierarchical per-level composition when pc.topology spans levels)
     if pc.dp == 1:
         return grads
-    return allreduce_tree(grads, pc.dp_axis_name, mean=True, r=pc.grad_r,
-                          fabric=fabric)
+    return dp_grad_allreduce(grads, pc, mean=True, fabric=fabric)
 
 
 def replicate_scalar(x, pc: ParallelConfig, mesh_axes):
@@ -222,7 +222,7 @@ def make_train_step(cfg: ModelConfig, pc: ParallelConfig, mesh: Mesh,
                                 global_batch=pc.dp)  # structure only
     b_specs = batch_pspecs(batch_shapes, pc)
 
-    shard_fn = jax.shard_map(
+    shard_fn = shard_map(
         step_fn, mesh=mesh,
         in_specs=(p_specs, o_specs, b_specs),
         out_specs=(p_specs, o_specs,
@@ -316,7 +316,7 @@ def make_serve_step(cfg: ModelConfig, pc: ParallelConfig, mesh: Mesh, *,
     c_specs = cache_pspecs(cfg, pc, seq_shard=seq_shard)
     dp = None if pc.dp <= 1 else (
         pc.dp_axes if len(pc.dp_axes) > 1 else pc.dp_axes[0])
-    shard_fn = jax.shard_map(
+    shard_fn = shard_map(
         step_fn, mesh=mesh,
         in_specs=(p_specs, P(dp, None), c_specs, P()),
         out_specs=(P(dp, None, None), c_specs),

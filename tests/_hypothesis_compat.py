@@ -1,0 +1,38 @@
+"""Optional-hypothesis shim for the test suite.
+
+The seed hard-imported ``hypothesis`` at module scope, so *every* test in
+the importing file errored at collection when it was not installed.
+``pytest.importorskip`` at module scope would instead skip the whole file,
+losing the plain (non-property) tests too.  This shim keeps plain tests
+running everywhere: when hypothesis is available it re-exports the real
+``given``/``settings``/``st``; when it is missing, ``@given`` replaces
+just the property test with a skip stub.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+except ImportError:
+    class _AnyStrategy:
+        """Stands in for ``st``: any strategy expression evaluates to None,
+        which the no-op ``given`` below ignores."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            # zero-arg stub so pytest does not treat the strategy
+            # parameters as fixtures
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def stub():
+                pass  # pragma: no cover
+            stub.__name__ = fn.__name__
+            stub.__doc__ = fn.__doc__
+            return stub
+        return deco
+
+    def settings(*args, **kwargs):
+        return lambda fn: fn

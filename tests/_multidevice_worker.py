@@ -16,12 +16,17 @@ from jax.sharding import PartitionSpec as P  # noqa: E402
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+from repro.compat import shard_map  # noqa: E402
 from repro.core.allreduce import (all_gather_flat, allreduce_flat,  # noqa: E402
-                                  allreduce_tree, psum_tree,
+                                  allreduce_tree, hierarchical_allreduce,
+                                  hierarchical_allreduce_flat, psum_tree,
                                   reduce_scatter_flat, tree_all_gather,
                                   tree_reduce_scatter)
 from repro.core.schedule import (build_all_gather, build_generalized,  # noqa: E402
                                  build_reduce_scatter, build_ring, max_r)
+from repro.topology import Level, Topology, build_hierarchical  # noqa: E402
+from repro.topology.fabric import TPU_DCN  # noqa: E402
+from repro.core.cost_model import TPU_V5E_ICI  # noqa: E402
 
 
 def check_allreduce_flat():
@@ -37,7 +42,7 @@ def check_allreduce_flat():
             scheds.append(build_generalized(n, 0, "hypercube"))
             scheds.append(build_generalized(n, max_r(n), "hypercube"))
         for sched in scheds:
-            f = jax.jit(jax.shard_map(
+            f = jax.jit(shard_map(
                 lambda v: allreduce_flat(v[0], "data", sched)[None],
                 mesh=mesh, in_specs=P("data", None), out_specs=P("data", None)))
             out = np.asarray(f(x))
@@ -60,8 +65,8 @@ def check_vs_psum():
         loc = jax.tree.map(lambda v: v[0], t)
         out = psum_tree(loc, "data", mean=True)
         return jax.tree.map(lambda v: v[None], out)
-    fo = jax.jit(jax.shard_map(ours, mesh=mesh, in_specs=P("data"), out_specs=P("data")))
-    ft = jax.jit(jax.shard_map(theirs, mesh=mesh, in_specs=P("data"), out_specs=P("data")))
+    fo = jax.jit(shard_map(ours, mesh=mesh, in_specs=P("data"), out_specs=P("data")))
+    ft = jax.jit(shard_map(theirs, mesh=mesh, in_specs=P("data"), out_specs=P("data")))
     a, b = fo(tree), ft(tree)
     for k in tree:
         np.testing.assert_allclose(np.asarray(a[k]), np.asarray(b[k]),
@@ -80,7 +85,7 @@ def check_rs_ag():
     def f(v):
         shard = reduce_scatter_flat(v[0], "data")
         return shard[None]
-    out = np.asarray(jax.jit(jax.shard_map(
+    out = np.asarray(jax.jit(shard_map(
         f, mesh=mesh, in_specs=P("data", None), out_specs=P("data", None)))(x))
     u = m // n
     for d in range(n):
@@ -89,7 +94,7 @@ def check_rs_ag():
     def g(v):
         shard = reduce_scatter_flat(v[0], "data")
         return all_gather_flat(shard, "data")[None]
-    out = np.asarray(jax.jit(jax.shard_map(
+    out = np.asarray(jax.jit(shard_map(
         g, mesh=mesh, in_specs=P("data", None), out_specs=P("data", None)))(x))
     for d in range(n):
         np.testing.assert_allclose(out[d], want, rtol=2e-5, atol=2e-5)
@@ -108,7 +113,7 @@ def check_multiaxis():
     x = rng.standard_normal((n, 11)).astype(np.float32)
     want = x.sum(0)
     sched = build_generalized(n, 1)
-    f = jax.jit(jax.shard_map(
+    f = jax.jit(shard_map(
         lambda v: allreduce_flat(v.reshape(-1), ("pod", "data"), sched)[None],
         mesh=mesh, in_specs=P(("pod", "data"), None),
         out_specs=P(("pod", "data"), None)))
@@ -129,7 +134,7 @@ def check_tree_zero():
         shard, spec = tree_reduce_scatter(loc, "data", mean=True)
         back = tree_all_gather(shard, spec, "data")
         return jax.tree.map(lambda v: v[None], back)
-    out = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("data"),
+    out = jax.jit(shard_map(f, mesh=mesh, in_specs=P("data"),
                                 out_specs=P("data")))(tree)
     for k in tree:
         np.testing.assert_allclose(np.asarray(out[k])[0], tree[k].mean(0),
@@ -137,11 +142,58 @@ def check_tree_zero():
     print("ok tree_zero")
 
 
+def check_hierarchical():
+    """Hierarchical allreduce over a ("pod", "data") mesh vs the numpy sum,
+    for every outer r and several message sizes (incl. sizes that need
+    padding), plus the autotuned pytree path."""
+    devs = len(jax.devices())
+    if devs % 2:
+        print("ok hierarchical (skipped)")
+        return
+    shape = (2, devs // 2)
+    names = ("pod", "data")
+    mesh = jax.make_mesh(shape, names)
+    n = devs
+    topo = Topology((Level("pod", shape[0], TPU_DCN),
+                     Level("ici", shape[1], TPU_V5E_ICI)),
+                    name=f"test-{shape[0]}x{shape[1]}")
+    rng = np.random.default_rng(5)
+    for m in [1, 7, n, 3 * n + 1, 257]:
+        x = rng.standard_normal((n, m)).astype(np.float32)
+        want = x.sum(0)
+        for r in range(max_r(shape[0]) + 1):
+            hs = build_hierarchical(topo, r)
+            f = jax.jit(shard_map(
+                lambda v, h=hs: hierarchical_allreduce_flat(
+                    v.reshape(-1), names, h)[None],
+                mesh=mesh, in_specs=P(names, None),
+                out_specs=P(names, None)))
+            out = np.asarray(f(x))
+            for d in range(n):
+                np.testing.assert_allclose(out[d], want, rtol=2e-5,
+                                           atol=2e-5)
+    # autotuned pytree path (plan may resolve to flat or hierarchical)
+    tree = {"w": rng.standard_normal((n, 33)).astype(np.float32),
+            "b": rng.standard_normal((n, 7, 3)).astype(np.float32)}
+
+    def g(t):
+        loc = jax.tree.map(lambda v: v[0], t)
+        out = hierarchical_allreduce(loc, names, topo, mean=True)
+        return jax.tree.map(lambda v: v[None], out)
+
+    out = jax.jit(shard_map(g, mesh=mesh, in_specs=P(names),
+                            out_specs=P(names)))(tree)
+    for k in tree:
+        np.testing.assert_allclose(np.asarray(out[k])[0], tree[k].mean(0),
+                                   rtol=2e-5, atol=2e-5)
+    print("ok hierarchical")
+
+
 if __name__ == "__main__":
     which = sys.argv[1] if len(sys.argv) > 1 else "all"
     checks = dict(allreduce=check_allreduce_flat, psum=check_vs_psum,
                   rsag=check_rs_ag, multiaxis=check_multiaxis,
-                  zero=check_tree_zero)
+                  zero=check_tree_zero, hier=check_hierarchical)
     if which == "all":
         for fn in checks.values():
             fn()

@@ -16,7 +16,10 @@ _WORKER = os.path.join(os.path.dirname(__file__), "_multidevice_worker.py")
 def _run(which: str, devices: int = 8, timeout: int = 600):
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
-    env.pop("JAX_PLATFORMS", None)
+    # forced host devices are CPU devices: pin the platform so jax never
+    # probes for accelerators (the TPU metadata probe retries for minutes
+    # on non-TPU hosts)
+    env["JAX_PLATFORMS"] = "cpu"
     res = subprocess.run([sys.executable, _WORKER, which], env=env,
                          capture_output=True, text=True, timeout=timeout)
     assert res.returncode == 0, f"worker failed:\n{res.stdout}\n{res.stderr}"
@@ -48,3 +51,13 @@ def test_zero_style_roundtrip_8dev():
 @pytest.mark.slow
 def test_allreduce_nonpower2_6dev():
     _run("allreduce", devices=6)
+
+
+def test_hierarchical_pod_data_8dev():
+    _run("hier")
+
+
+@pytest.mark.slow
+def test_hierarchical_nonpower2_6dev():
+    # (2, 3): non-power-of-two inner level
+    _run("hier", devices=6)

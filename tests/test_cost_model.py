@@ -2,7 +2,7 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.cost_model import (Fabric, PAPER_10GE, optimal_r_analytic,
                                    optimal_r_search, schedule_cost,

@@ -3,7 +3,7 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.group import CyclicGroup, HypercubeGroup, MixedRadixGroup
 from repro.core.schedule import (InvalidScheduleError, build_all_gather,

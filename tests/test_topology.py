@@ -1,0 +1,168 @@
+"""repro.topology: hierarchical composition correctness + cost model.
+
+Correctness is proven against the numpy oracle, which replays the actual
+compiled per-level steps: exact integer sums, every device ending with
+every reduced chunk, for non-power-of-two sizes at every level.
+"""
+import numpy as np
+import pytest
+
+from repro.core.cost_model import TPU_V5E_ICI, schedule_cost
+from repro.core.schedule import build_generalized, build_ring, max_r
+from repro.topology import (Level, MULTI_POD_2X256, Topology,
+                            bottleneck_fabric, build_hierarchical,
+                            choose_collective, flat_cost, gpu_cluster,
+                            hierarchical_cost, schedules_for_plan,
+                            simulate_hierarchical, v5e_multipod, v5e_pod)
+from repro.topology.fabric import GPU_IB, TPU_DCN
+from repro.topology.hierarchical import HierarchicalSchedule
+
+# non-power-of-two at each level, plus a 3-level machine
+LEVEL_SHAPES = [(2, 3), (3, 5), (2, 16), (4, 6), (3, 2, 4)]
+
+
+def _topo(sizes):
+    return Topology(tuple(
+        Level(f"l{i}", s, TPU_DCN if i == 0 else TPU_V5E_ICI)
+        for i, s in enumerate(sizes)), name="x".join(map(str, sizes)))
+
+
+# ---------------------------------------------------------------------------
+#  simulator-verified correctness
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sizes", LEVEL_SHAPES)
+def test_hierarchical_exact_sum_all_r(sizes):
+    topo = _topo(sizes)
+    P = topo.P
+    rng = np.random.default_rng(0)
+    for r in range(max_r(sizes[0]) + 1):
+        hs = build_hierarchical(topo, r)
+        for m in [1, 7, P, 3 * P + 1]:
+            vecs = [rng.integers(-50, 50, m).astype(np.int64)
+                    for _ in range(P)]
+            want = np.sum(vecs, axis=0)
+            got = simulate_hierarchical(hs, vecs)
+            assert len(got) == P
+            for d in range(P):
+                # exact: integer arithmetic, no tolerance
+                assert got[d].shape == want.shape
+                assert (got[d] == want).all(), (sizes, r, m, d)
+
+
+def test_hierarchical_float_matches_sum():
+    topo = _topo((2, 3))
+    P = topo.P
+    rng = np.random.default_rng(1)
+    hs = build_hierarchical(topo, 0)
+    vecs = [rng.standard_normal(17).astype(np.float32) for _ in range(P)]
+    want = np.sum(vecs, axis=0)
+    for g in simulate_hierarchical(hs, vecs):
+        np.testing.assert_allclose(g, want, rtol=1e-5, atol=1e-5)
+
+
+def test_single_level_topology_degenerates():
+    topo = v5e_pod(5)
+    hs = build_hierarchical(topo, 1)
+    assert hs.rs == () and hs.ag == ()
+    vecs = [np.full(10, d, np.int64) for d in range(5)]
+    want = np.sum(vecs, axis=0)
+    for g in simulate_hierarchical(hs, vecs):
+        assert (g == want).all()
+
+
+def test_invalid_r_raises():
+    with pytest.raises(Exception):
+        build_hierarchical(_topo((2, 3)), max_r(2) + 1)
+
+
+# ---------------------------------------------------------------------------
+#  topology plumbing
+# ---------------------------------------------------------------------------
+
+def test_rank_coord_roundtrip():
+    topo = _topo((3, 2, 4))
+    for rank in range(topo.P):
+        assert topo.rank(topo.coords(rank)) == rank
+    # innermost level fastest-varying
+    assert topo.coords(1) == (0, 0, 1)
+    assert topo.coords(4) == (0, 1, 0)
+
+
+def test_presets():
+    assert MULTI_POD_2X256.P == 512
+    assert MULTI_POD_2X256.sizes == (2, 256)
+    assert v5e_pod(256).n_levels == 1
+    g = gpu_cluster(4)
+    assert g.sizes == (4, 8)
+    assert g.outer.fabric == GPU_IB
+
+
+def test_bottleneck_fabric_is_worst_per_term():
+    topo = v5e_multipod()
+    f = bottleneck_fabric(topo)
+    assert f.alpha == max(TPU_DCN.alpha, TPU_V5E_ICI.alpha)
+    assert f.beta == max(TPU_DCN.beta, TPU_V5E_ICI.beta)
+
+
+# ---------------------------------------------------------------------------
+#  cost model + autotuner
+# ---------------------------------------------------------------------------
+
+def _best_flat(topo, m):
+    best = min(flat_cost(topo, m, r) for r in range(max_r(topo.P) + 1))
+    return min(best, flat_cost(topo, m, kind="ring"))
+
+
+def test_hierarchical_beats_flat_large_messages_multipod():
+    """Acceptance: fast-ICI/slow-DCN topology, >= 64 MiB gradients."""
+    topo = MULTI_POD_2X256
+    for m in [64 * 2**20, 256 * 2**20, 2**30]:
+        hier = min(hierarchical_cost(build_hierarchical(topo, r), m)
+                   for r in range(max_r(topo.outer.size) + 1))
+        assert hier < _best_flat(topo, m), m
+
+
+def test_hierarchical_beats_flat_gpu_cluster():
+    topo = gpu_cluster(16)
+    m = 128 * 2**20
+    hier = hierarchical_cost(build_hierarchical(topo, 0), m)
+    assert hier < _best_flat(topo, m)
+
+
+def test_choose_collective_consistent_and_optimal():
+    topo = MULTI_POD_2X256
+    for m in [1024, 2**20, 64 * 2**20]:
+        plan = choose_collective(topo, m)
+        sched = schedules_for_plan(plan, topo)
+        if plan.kind == "hierarchical":
+            assert isinstance(sched, HierarchicalSchedule)
+            assert hierarchical_cost(sched, m) == pytest.approx(plan.cost)
+        else:
+            assert schedule_cost(sched, m, bottleneck_fabric(topo)) == \
+                pytest.approx(plan.cost)
+        # the plan is no worse than either family's best
+        assert plan.cost <= _best_flat(topo, m) * (1 + 1e-12)
+
+
+def test_choose_collective_prefers_hierarchical_for_large_m():
+    assert choose_collective(MULTI_POD_2X256, 64 * 2**20).kind == \
+        "hierarchical"
+
+
+def test_choose_collective_single_level_is_flat():
+    plan = choose_collective(v5e_pod(8), 2**20)
+    assert plan.kind.startswith("flat")
+
+
+def test_hierarchical_cost_tracks_message_shrink():
+    """DCN traffic must be ~1/inner_size of the message: doubling only the
+    inner level size should cut the outer-phase cost roughly in half."""
+    m = 2**26
+    small = v5e_multipod(2, 16)
+    big = v5e_multipod(2, 32)
+    ar_small = schedule_cost(build_hierarchical(small, 0).ar,
+                             m / small.inner_size, TPU_DCN)
+    ar_big = schedule_cost(build_hierarchical(big, 0).ar,
+                           m / big.inner_size, TPU_DCN)
+    assert ar_big < ar_small
