@@ -135,13 +135,18 @@ def sched_table():
              schedule_cost(build_bruck_all_gather(P), 425.0, F) * 1e6)
 
 
+def _spawn_8dev(script: str, extra_args=(), timeout=1800):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["JAX_PLATFORMS"] = "cpu"
+    return subprocess.run([sys.executable, script, *extra_args], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+
+
 def wallclock_8dev():
     """Real wall-clock of the JAX ppermute executor on 8 host devices."""
     script = os.path.join(os.path.dirname(__file__), "wallclock_worker.py")
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    res = subprocess.run([sys.executable, script], env=env,
-                         capture_output=True, text=True, timeout=900)
+    res = _spawn_8dev(script, timeout=900)
     if res.returncode != 0:
         print(f"wallclock,ERROR,{res.stderr[-200:]}", file=sys.stderr)
         return
@@ -150,7 +155,23 @@ def wallclock_8dev():
             print(line)
 
 
-def main() -> None:
+def executor_bench(smoke: bool = False,
+                   out: str = "results/executor.json") -> None:
+    """Old per-row replay vs ExecPlan vs pipelined ExecPlan wallclock on
+    8 simulated CPU devices (the perf trajectory's BENCH datapoint);
+    writes ``results/executor.json``."""
+    script = os.path.join(os.path.dirname(__file__), "executor_worker.py")
+    extra = ["--out", out] + (["--smoke"] if smoke else [])
+    res = _spawn_8dev(script, extra)
+    if res.returncode != 0:
+        print(f"executor,ERROR,{res.stderr[-2000:]}", file=sys.stderr)
+        raise SystemExit(1)
+    for line in res.stdout.strip().splitlines():
+        if line.startswith("executor,"):
+            print(line)
+
+
+def figures() -> None:
     print("name,us_per_call,derived")
     fig1_ratio_heatmap()
     fig7_small_msgs()
@@ -162,6 +183,17 @@ def main() -> None:
     sched_table()
     if os.environ.get("SKIP_WALLCLOCK") != "1":
         wallclock_8dev()
+
+
+def main(argv=None) -> None:
+    argv = sys.argv[1:] if argv is None else argv
+    mode = next((a for a in argv if not a.startswith("-")), "figures")
+    if mode == "figures":
+        figures()
+    elif mode == "executor":
+        executor_bench(smoke="--smoke" in argv)
+    else:
+        raise SystemExit(f"unknown mode {mode!r} (figures | executor)")
 
 
 if __name__ == "__main__":

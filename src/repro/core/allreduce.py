@@ -5,14 +5,27 @@ Maps the paper's permutation-composition communication model onto JAX SPMD:
 * every communication operator ``t_g`` is a static ``lax.ppermute``
   (a cyclic shift for ``CyclicGroup`` -- the native pattern of a TPU ICI
   ring/torus; a pairwise exchange for ``HypercubeGroup``);
-* every distributed vector is one ``(u,)`` row of per-device state;
-* combines are local adds (optionally the Pallas ``fused_combine`` kernel).
+* every distributed vector is one row of a single stacked ``(R, u)``
+  per-device buffer;
+* combines are fused local adds (the Pallas ``combine_n`` kernel on TPU).
 
 All functions below must be called *inside* ``jax.shard_map`` (manual SPMD)
 over the axis (or tuple of axes) being reduced.  The schedule is compiled
-and verified ahead of trace time (see :mod:`repro.core.schedule`), so the
-traced program is a straight-line sequence of ppermutes and adds that XLA's
-latency-hiding scheduler can overlap with compute.
+and verified ahead of trace time (see :mod:`repro.core.schedule`), then
+lowered once into a dense :class:`~repro.core.execplan.ExecPlan` of static
+numpy index tables (cached per schedule), so the traced program is a
+straight-line sequence of static gathers, ppermutes and batched combines
+that XLA's latency-hiding scheduler can overlap with compute.  The old
+per-row Python replay (one ``(u,)`` array per live vector, restacked every
+step) is gone -- :func:`repro.core.execplan.execute` is the only replay.
+
+**Multi-bucket pipelining**: ``n_buckets > 1`` splits the message into
+equal buckets that replay the same plan staggered by one step, so bucket
+``k``'s ``ppermute`` is staged while bucket ``k-1``'s combines run (the
+doubly-pipelined structure of Traeff, arXiv:2109.12626).  The autotuned
+bucket count comes from the extended cost model
+(:func:`repro.core.cost_model.pipelined_schedule_cost`), which charges
+pipeline fill/drain latencies against the comm/combine overlap.
 
 TPU adaptation note (vs. the paper's 10GE cluster): the cyclic group's
 powers ``t^k`` are *multi-hop* on a physical ring when k > 1.  XLA lowers a
@@ -30,16 +43,15 @@ boundary and the SPMD step completes only when the slowest transfer lands.
 over the fast inner axis (``lax.ppermute`` over ``"data"`` only -- pure
 ICI), then the generalized allreduce with tunable ``r`` over the slow
 outer axis on a 1/inner-sized chunk (the only DCN traffic), then
-all-gather back over the inner axis.  The flat-vs-hierarchical decision
-and the outer ``r`` are autotuned per message size by
-:func:`repro.topology.hierarchical.choose_collective`.
+all-gather back over the inner axis.  The flat-vs-hierarchical decision,
+the outer ``r`` and the outer bucket count are autotuned per message size
+by :func:`repro.topology.hierarchical.choose_collective`.
 """
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import (TYPE_CHECKING, Callable, Optional, Sequence, Tuple,
-                    Union)
+from typing import (TYPE_CHECKING, Callable, List, Optional, Sequence,
+                    Tuple, Union)
 
 import jax
 import jax.numpy as jnp
@@ -49,7 +61,8 @@ from jax import lax
 from repro import compat
 
 from .autotune import Choice, choose, schedule_for
-from .cost_model import Fabric, TPU_V5E_ICI
+from .cost_model import Fabric, TPU_V5E_ICI, choose_n_buckets
+from .execplan import ExecPlan, compile_plan, execute
 from .schedule import (Schedule, build_all_gather, build_generalized,
                        build_reduce_scatter, build_ring)
 
@@ -60,59 +73,13 @@ if TYPE_CHECKING:  # repro.topology is the layer above this one; importing
     from repro.topology.hierarchical import HierarchicalSchedule
 
 AxisName = Union[str, Tuple[str, ...]]
+CombineFn = Union[str, Callable]
 
 
 def axis_size(axis_name: AxisName) -> int:
     if isinstance(axis_name, (tuple, list)):
         return math.prod(compat.axis_size(a) for a in axis_name)
     return compat.axis_size(axis_name)
-
-
-def _perm_for(sched: Schedule, shift: int):
-    """ppermute pairs (src, dst): device d sends to t_shift(d)."""
-    g = sched.group
-    return [(d, g.apply(shift, d)) for d in range(sched.P)]
-
-
-def _initial_row_table(sched: Schedule) -> np.ndarray:
-    """tbl[row, d] = which local chunk device d puts in initial row."""
-    P = sched.P
-    R = len(sched.initial_slots)
-    tbl = np.zeros((R, P), dtype=np.int32)
-    for k in range(R):
-        for d in range(P):
-            tbl[k, d] = sched.chunk_of_initial_row(k, d)
-    return tbl
-
-
-def _final_row_table(sched: Schedule) -> np.ndarray:
-    """tbl[c, d] = which final row holds reduced chunk c on device d."""
-    P = sched.P
-    tbl = np.full((P, P), -1, dtype=np.int32)
-    for k in range(len(sched.final_slots)):
-        for d in range(P):
-            tbl[sched.final_chunk_index(k, d), d] = k
-    assert (tbl >= 0).all()
-    return tbl
-
-
-def _run_steps(rows, sched: Schedule, axis_name: AxisName,
-               add: Callable = jnp.add):
-    """Replay the compiled steps on a per-device row list."""
-    for st in sched.steps:
-        if st.n_tx:
-            tx = jnp.stack([rows[i] for i in st.tx_rows])
-            rx = lax.ppermute(tx, axis_name, perm=_perm_for(sched, st.shift))
-        new_rows = []
-        for op in st.out:
-            if op.kind == "keep":
-                new_rows.append(rows[op.res])
-            elif op.kind == "recv":
-                new_rows.append(rx[op.arr])
-            else:
-                new_rows.append(add(rows[op.res], rx[op.arr]))
-        rows = new_rows
-    return rows
 
 
 def _pad_to_chunks(x: jnp.ndarray, P: int):
@@ -124,14 +91,84 @@ def _pad_to_chunks(x: jnp.ndarray, P: int):
     return x.reshape(P, u), m
 
 
+def _lazy_init_rows(chunks: jnp.ndarray, plan: ExecPlan, d) -> List:
+    """Per-slot initial rows as *lazy* dynamic slices of the local chunk
+    buffer: row k is ``chunks[init_rows[k, d]]``, left as a dynamic-slice
+    op for XLA to fuse into its first consumer (the old executor
+    materialized the whole (R0, u) gather up front).  Unwritten slots
+    start as None."""
+    rows: List = []
+    for k in range(plan.n_rows0):
+        idx = lax.dynamic_index_in_dim(jnp.asarray(plan.init_rows[k]), d,
+                                       keepdims=False)
+        rows.append(lax.dynamic_index_in_dim(chunks, idx, axis=0,
+                                             keepdims=False))
+    return rows + [None] * (plan.n_slots - plan.n_rows0)
+
+
+def _bucket_rows(rows: List, n_buckets: int):
+    """Split every slot row into n_buckets column slices (padding the
+    row length to a multiple of the bucket count)."""
+    u = next(r.shape[0] for r in rows if r is not None)
+    n_buckets = max(1, min(int(n_buckets), u if u else 1))
+    if n_buckets == 1:
+        return [rows], u
+    ub = -(-u // n_buckets)
+    pad = ub * n_buckets - u
+
+    def padded(r):
+        return jnp.concatenate([r, jnp.zeros((pad,), r.dtype)]) if pad else r
+
+    rows = [None if r is None else padded(r) for r in rows]
+    return [[None if r is None else r[j * ub:(j + 1) * ub] for r in rows]
+            for j in range(n_buckets)], u
+
+
+def _merge_rows(bucket_rows: List[List], u: int) -> List:
+    """Inverse of :func:`_bucket_rows`: full-width row per slot."""
+    if len(bucket_rows) == 1:
+        return bucket_rows[0]
+    out = []
+    for parts in zip(*bucket_rows):
+        out.append(None if parts[0] is None
+                   else jnp.concatenate(parts)[:u])
+    return out
+
+
+def _linear_axis_index(axis_name: AxisName):
+    return lax.axis_index(axis_name)
+
+
+def _final_gather(rows: List, plan: ExecPlan, d) -> jnp.ndarray:
+    """One dynamic gather putting the reduced rows into chunk order.
+
+    The final placement is device-dependent (chunk c sits in slot
+    ``final_rows[c, d]``), so this pass cannot be static; the slot ->
+    stack-position remap is, and composes with the table.
+    """
+    used = np.unique(plan.final_rows[plan.final_rows >= 0])
+    pos = np.full(plan.n_slots, -1, dtype=np.int32)
+    pos[used] = np.arange(len(used), dtype=np.int32)
+    tbl = pos[plan.final_rows]                      # (P, P) stack positions
+    full = jnp.stack([rows[int(s)] for s in used])
+    order = jnp.take(jnp.asarray(tbl), d, axis=1)   # (P,)
+    return jnp.take(full, order, axis=0)
+
+
 # ---------------------------------------------------------------------------
 #  flat (1-D) collectives; call inside shard_map
 # ---------------------------------------------------------------------------
 
 def allreduce_flat(x: jnp.ndarray, axis_name: AxisName,
                    sched: Schedule, *, accum_dtype=None,
-                   add: Callable = jnp.add) -> jnp.ndarray:
-    """Generalized allreduce of a flat vector using a compiled schedule."""
+                   combine: CombineFn = "auto",
+                   n_buckets: int = 1) -> jnp.ndarray:
+    """Generalized allreduce of a flat vector using a compiled schedule.
+
+    ``n_buckets`` pipelines the message across equal buckets (see module
+    docstring); ``combine`` selects the combine implementation ("auto",
+    "add", "pallas", or a binary callable).
+    """
     P = sched.P
     assert P == axis_size(axis_name), (P, axis_name)
     if P == 1:
@@ -140,15 +177,13 @@ def allreduce_flat(x: jnp.ndarray, axis_name: AxisName,
     if accum_dtype is not None:
         x = x.astype(accum_dtype)
     chunks, m = _pad_to_chunks(x, P)                       # (P, u)
+    plan = compile_plan(sched)
     d = _linear_axis_index(axis_name)
-    init_tbl = jnp.asarray(_initial_row_table(sched))      # (R0, P)
-    rows_idx = jnp.take(init_tbl, d, axis=1)               # (R0,)
-    stacked = jnp.take(chunks, rows_idx, axis=0)           # (R0, u)
-    rows = [stacked[i] for i in range(stacked.shape[0])]
-    rows = _run_steps(rows, sched, axis_name, add=add)
-    fin_tbl = jnp.asarray(_final_row_table(sched))         # (P, P)
-    order = jnp.take(fin_tbl, d, axis=1)                   # (P,)
-    out = jnp.take(jnp.stack(rows), order, axis=0)         # (P, u)
+    rows = _lazy_init_rows(chunks, plan, d)
+    bucket_rows, u = _bucket_rows(rows, n_buckets)
+    bucket_rows = execute(plan, bucket_rows, axis_name, combine=combine)
+    rows = _merge_rows(bucket_rows, u)
+    out = _final_gather(rows, plan, d)                     # (P, u)
     out = out.reshape(-1)[:m]
     return out.astype(orig_dtype)
 
@@ -156,7 +191,8 @@ def allreduce_flat(x: jnp.ndarray, axis_name: AxisName,
 def reduce_scatter_flat(x: jnp.ndarray, axis_name: AxisName,
                         sched: Optional[Schedule] = None, *,
                         accum_dtype=None,
-                        add: Callable = jnp.add) -> jnp.ndarray:
+                        combine: CombineFn = "auto",
+                        n_buckets: int = 1) -> jnp.ndarray:
     """Reduction phase only: returns this device's fully reduced chunk.
 
     Device d ends up owning chunk d (canonical place-0 layout).  The input
@@ -172,19 +208,21 @@ def reduce_scatter_flat(x: jnp.ndarray, axis_name: AxisName,
         x = x.astype(accum_dtype)
     assert x.shape[0] % P == 0, "reduce_scatter_flat needs padded input"
     chunks = x.reshape(P, -1)
+    plan = compile_plan(sched)
     d = _linear_axis_index(axis_name)
-    init_tbl = jnp.asarray(_initial_row_table(sched))
-    rows_idx = jnp.take(init_tbl, d, axis=1)
-    stacked = jnp.take(chunks, rows_idx, axis=0)
-    rows = [stacked[i] for i in range(stacked.shape[0])]
-    rows = _run_steps(rows, sched, axis_name, add=add)
-    assert len(rows) == 1
-    # final row place 0 => device d owns chunk d already.
-    return rows[0].astype(orig_dtype)
+    rows = _lazy_init_rows(chunks, plan, d)
+    bucket_rows, u = _bucket_rows(rows, n_buckets)
+    bucket_rows = execute(plan, bucket_rows, axis_name, combine=combine)
+    rows = _merge_rows(bucket_rows, u)
+    # the single final row's slot is SPMD-uniform; canonical place-0
+    # layout means device d already owns chunk d.
+    slot = int(plan.final_rows.max())
+    return rows[slot].astype(orig_dtype)
 
 
 def all_gather_flat(chunk: jnp.ndarray, axis_name: AxisName,
-                    sched: Optional[Schedule] = None) -> jnp.ndarray:
+                    sched: Optional[Schedule] = None, *,
+                    n_buckets: int = 1) -> jnp.ndarray:
     """Distribution phase only: device d contributes chunk d, all devices
     end with the concatenation of all chunks."""
     P = axis_size(axis_name)
@@ -192,16 +230,13 @@ def all_gather_flat(chunk: jnp.ndarray, axis_name: AxisName,
         sched = build_all_gather(P)
     if P == 1:
         return chunk
-    rows = [chunk]
-    rows = _run_steps(rows, sched, axis_name)
+    plan = compile_plan(sched)
+    rows = [chunk] + [None] * (plan.n_slots - 1)
+    bucket_rows, u = _bucket_rows(rows, n_buckets)
+    bucket_rows = execute(plan, bucket_rows, axis_name)
+    rows = _merge_rows(bucket_rows, u)
     d = _linear_axis_index(axis_name)
-    fin_tbl = jnp.asarray(_final_row_table(sched))
-    order = jnp.take(fin_tbl, d, axis=1)
-    return jnp.take(jnp.stack(rows), order, axis=0).reshape(-1)
-
-
-def _linear_axis_index(axis_name: AxisName):
-    return lax.axis_index(axis_name)
+    return _final_gather(rows, plan, d).reshape(-1)
 
 
 # ---------------------------------------------------------------------------
@@ -235,14 +270,18 @@ def allreduce_tree(tree, axis_name: AxisName, *,
                    mean: bool = False,
                    fabric: Fabric = TPU_V5E_ICI,
                    accum_dtype=jnp.float32,
-                   add: Callable = jnp.add):
+                   combine: CombineFn = "auto",
+                   n_buckets: Optional[int] = None):
     """Allreduce (sum or mean) a pytree of arrays over ``axis_name`` using
     the generalized algorithm.
 
     If ``r`` is None the step count is autotuned from the fabric parameters
     via the paper's eq (37) / exact search (section 8).  All leaves are
     fused into one flat buffer so the whole gradient pays the per-step
-    latency once -- the standard "bucketing" trick.
+    latency once, then the buffer is *re-split* into ``n_buckets``
+    pipelined buckets (``None`` = autotuned from the fabric via the
+    extended cost model) so communication of bucket k overlaps combines
+    of bucket k-1.
     """
     P = axis_size(axis_name)
     if P == 1:
@@ -252,10 +291,14 @@ def allreduce_tree(tree, axis_name: AxisName, *,
     if r is None:
         ch = choose(P, int(nbytes), fabric)
         sched = schedule_for(ch, P)
+        if n_buckets is None:
+            n_buckets = ch.n_buckets
     else:
         sched = build_generalized(P, r)
-    out = allreduce_flat(flat, axis_name, sched,
-                         accum_dtype=accum_dtype, add=add)
+        if n_buckets is None:
+            n_buckets = choose_n_buckets(sched, int(nbytes), fabric)
+    out = allreduce_flat(flat, axis_name, sched, accum_dtype=accum_dtype,
+                         combine=combine, n_buckets=n_buckets)
     if mean:
         out = out / P
     return _unflatten_tree(out, spec)
@@ -268,12 +311,15 @@ def allreduce_tree(tree, axis_name: AxisName, *,
 def hierarchical_allreduce_flat(x: jnp.ndarray, axis_names: Sequence[str],
                                 hs: "HierarchicalSchedule", *,
                                 accum_dtype=None,
-                                add: Callable = jnp.add) -> jnp.ndarray:
+                                combine: CombineFn = "auto",
+                                n_buckets: int = 1) -> jnp.ndarray:
     """Replay a :class:`HierarchicalSchedule` over the named mesh axes.
 
     ``axis_names`` are ordered outermost (slowest) first, aligned with
     ``hs.topology.levels``; every ppermute runs over exactly one axis, so
-    inner-level steps never touch the outer (DCN) links.
+    inner-level steps never touch the outer (DCN) links.  ``n_buckets``
+    pipelines the outer-level allreduce -- the phase that rides the slow
+    links and so profits most from comm/combine overlap.
     """
     topo = hs.topology
     assert len(axis_names) == topo.n_levels, (axis_names, topo.describe())
@@ -294,9 +340,10 @@ def hierarchical_allreduce_flat(x: jnp.ndarray, axis_names: Sequence[str],
     inner_axes = [axis_names[i] for i in hs.inner_levels]
     cur = x
     for sched, axis in zip(hs.rs, inner_axes):
-        cur = reduce_scatter_flat(cur, axis, sched, add=add)
+        cur = reduce_scatter_flat(cur, axis, sched, combine=combine)
     # generalized allreduce of the chunk across the outer axis
-    cur = allreduce_flat(cur, axis_names[0], hs.ar, add=add)
+    cur = allreduce_flat(cur, axis_names[0], hs.ar, combine=combine,
+                         n_buckets=n_buckets)
     # all-gather back up, reverse order
     for sched, axis in zip(hs.ag, reversed(inner_axes)):
         cur = all_gather_flat(cur, axis, sched)
@@ -308,14 +355,16 @@ def hierarchical_allreduce(tree, axis_names: Sequence[str],
                            r: Optional[int] = None,
                            mean: bool = False,
                            accum_dtype=jnp.float32,
-                           add: Callable = jnp.add):
+                           combine: CombineFn = "auto",
+                           n_buckets: Optional[int] = None):
     """Allreduce (sum or mean) a pytree over hierarchical mesh axes.
 
     ``r`` tunes the outer-level step count; with ``r=None`` the plan
-    (flat vs hierarchical, and the step count) is autotuned per message
-    size from the per-level fabric parameters.  A flat plan executes the
-    chosen schedule over the flattened axis tuple -- hierarchical is only
-    used when the cost model says it wins.
+    (flat vs hierarchical, the step count, and the pipelined bucket
+    count) is autotuned per message size from the per-level fabric
+    parameters.  A flat plan executes the chosen schedule over the
+    flattened axis tuple -- hierarchical is only used when the cost
+    model says it wins.
     """
     from repro.topology.hierarchical import (HierarchicalSchedule,
                                              build_hierarchical,
@@ -329,14 +378,21 @@ def hierarchical_allreduce(tree, axis_names: Sequence[str],
     if r is None:
         plan = choose_collective(topology, int(nbytes))
         sched = schedules_for_plan(plan, topology)
+        if n_buckets is None:
+            n_buckets = plan.n_buckets
     else:
         sched = build_hierarchical(topology, r)
+    if n_buckets is None:
+        n_buckets = 1
     if isinstance(sched, HierarchicalSchedule):
         out = hierarchical_allreduce_flat(flat, tuple(axis_names), sched,
-                                          accum_dtype=accum_dtype, add=add)
+                                          accum_dtype=accum_dtype,
+                                          combine=combine,
+                                          n_buckets=n_buckets)
     else:
         out = allreduce_flat(flat, tuple(axis_names), sched,
-                             accum_dtype=accum_dtype, add=add)
+                             accum_dtype=accum_dtype, combine=combine,
+                             n_buckets=n_buckets)
     if mean:
         out = out / P
     return _unflatten_tree(out, spec)

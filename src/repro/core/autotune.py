@@ -12,7 +12,9 @@ from dataclasses import dataclass
 from functools import lru_cache
 from typing import Optional
 
-from .cost_model import Fabric, TPU_V5E_ICI, optimal_r_search, schedule_cost
+from .cost_model import (Fabric, TPU_V5E_ICI, choose_n_buckets,
+                         optimal_r_search, pipelined_schedule_cost,
+                         schedule_cost)
 from .schedule import Schedule, build_generalized, build_ring, n_steps_log
 
 
@@ -21,6 +23,7 @@ class Choice:
     kind: str          # "generalized" | "ring"
     r: int
     cost: float
+    n_buckets: int = 1   # pipelined buckets for the ExecPlan executor
 
 
 @lru_cache(maxsize=None)
@@ -39,6 +42,13 @@ def choose(P: int, nbytes: int, fabric: Fabric = TPU_V5E_ICI,
         c = schedule_cost(build_ring(P), nbytes, fabric)
         if c < best.cost:
             best = Choice("ring", 0, c)
+    # re-cost the winner with software pipelining: the bucket count that
+    # overlaps its wire time with its combine time (fill/drain charged)
+    sched = schedule_for(best, P)
+    b = choose_n_buckets(sched, nbytes, fabric)
+    if b > 1:
+        best = Choice(best.kind, best.r,
+                      pipelined_schedule_cost(sched, nbytes, fabric, b), b)
     return best
 
 

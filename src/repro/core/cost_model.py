@@ -48,6 +48,13 @@ PAPER_10GE = Fabric(alpha=3e-5, beta=1e-8, gamma=2e-10, name="paper-10GE")
 TPU_V5E_ICI = Fabric(alpha=1e-6, beta=1.0 / 50e9, gamma=3.0 / 819e9,
                      name="tpu-v5e-ici")
 
+# Forced-host-device CPU "fabric" (8 XLA host devices sharing DRAM):
+# rendezvous-dominated latency, memcpy-bound transfers, and combines that
+# cost about as much as the copies they read -- which is why the combine
+# overlap of the pipelined executor matters there.
+HOST_CPU = Fabric(alpha=5e-6, beta=1.0 / 8e9, gamma=1.0 / 16e9,
+                  name="host-cpu")
+
 
 def chunk_size(m: float, P: int) -> float:
     return m / P
@@ -183,6 +190,60 @@ def schedule_cost(sched: Schedule, m: float, f: Fabric) -> float:
             continue  # bookkeeping-only step
         t += f.alpha + st.n_tx * u * f.beta + st.n_adds * u * f.gamma
     return t
+
+
+def pipelined_schedule_cost(sched: Schedule, m: float, f: Fabric,
+                            n_buckets: int) -> float:
+    """Extended cost model: the schedule replayed over ``n_buckets``
+    software-pipelined buckets of ``m / n_buckets`` bytes each.
+
+    Tick ``t`` runs step ``t - j`` of bucket ``j`` (see
+    :func:`repro.core.execplan.execute`).  Within a tick the wire time of
+    one bucket overlaps the combine time of another, so the tick pays
+    ``alpha + max(sum tx_bytes * beta, sum add_bytes * gamma)`` over its
+    active buckets; the pipeline fill/drain cost is the ``n_buckets - 1``
+    extra ticks.  With one bucket a step's combine cannot overlap its own
+    arrival, so the cost degenerates to the serial
+    :func:`schedule_cost` exactly.
+    """
+    if n_buckets <= 1:
+        return schedule_cost(sched, m, f)
+    P = sched.P
+    u = chunk_size(m, P) / n_buckets
+    steps = [st for st in sched.steps if st.n_tx or st.n_adds]
+    S = len(steps)
+    t = 0.0
+    for tick in range(S + n_buckets - 1):
+        comm = comb = 0.0
+        for j in range(n_buckets):
+            s = tick - j
+            if 0 <= s < S:
+                comm += steps[s].n_tx * u * f.beta
+                comb += steps[s].n_adds * u * f.gamma
+        t += f.alpha + max(comm, comb)
+    return t
+
+
+def choose_n_buckets(sched: Schedule, m: float, f: Fabric,
+                     max_buckets: int = 8,
+                     min_bucket_bytes: float = 32 * 1024) -> int:
+    """argmin over the pipelined cost of the bucket count for ``m`` bytes.
+
+    Buckets below ``min_bucket_bytes`` of per-chunk payload are never
+    considered: the model's alpha term does not capture per-dispatch
+    overheads that dominate tiny transfers, so the message must be big
+    enough for the fill/drain latency to amortize.
+    """
+    if sched.P <= 1 or m <= 0:
+        return 1
+    best_b, best_c = 1, schedule_cost(sched, m, f)
+    for b in range(2, max_buckets + 1):
+        if chunk_size(m, sched.P) / b < min_bucket_bytes:
+            break
+        c = pipelined_schedule_cost(sched, m, f, b)
+        if c < best_c:
+            best_b, best_c = b, c
+    return best_b
 
 
 def best_schedule(P: int, m: float, f: Fabric,

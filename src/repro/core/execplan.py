@@ -1,0 +1,449 @@
+"""Lowered execution layer: Schedule -> ExecPlan -> vectorized replay.
+
+The schedule compiler (:mod:`repro.core.schedule`) emits symbolic steps
+over *row lists*; the original executor replayed them as Python lists of
+per-device ``(u,)`` arrays with a ``jnp.stack``/unstack round-trip per
+step and per-row Python loops rebuilt at every trace.  This module
+compiles a verified :class:`~repro.core.schedule.Schedule` **once** into
+an :class:`ExecPlan` of dense, static numpy index tables, then executes
+the whole replay *in place* on a single stacked ``(R, u)`` buffer:
+
+* the compiler register-allocates every live distributed vector to a
+  fixed **slot** of the buffer for its whole lifetime: rows that a step
+  keeps are never copied, a combine writes its result into the slot of
+  the resident row it consumes, and a received row lands in a slot freed
+  by a row that died -- so each step is one static gather feeding the
+  ``ppermute`` plus two static in-place updates (slices where the slots
+  are contiguous, scatters otherwise), instead of one op per live row;
+* the slot tables compose every storage reordering, so no permutation
+  is ever materialized at runtime; zero-communication bookkeeping steps
+  (e.g. the Ring schedule's final row compaction) fold away entirely;
+* initial/final placement tables (previously rebuilt with O(P^2) Python
+  loops at every trace) are precomputed and cached per schedule.
+
+On top of the lowered plan, :func:`execute` implements **multi-bucket
+software pipelining**: the caller splits the message into ``n_buckets``
+bucket buffers and the tick loop stages bucket ``k``'s ``ppermute``
+while bucket ``k-1``'s combines run (program order within a tick: all
+sends first, then all combines), which lets an asynchronous backend
+overlap the wire time of one bucket with the combine time of another --
+the doubly-pipelined structure of Traeff (arXiv:2109.12626).  All
+combines of a tick are batched into one fused call routed through the
+Pallas :func:`~repro.kernels.fused_combine.combine_n` kernel instead of
+per-bucket chained ``jnp.add`` -- by default on TPU only; off-TPU
+``combine="auto"`` stays on ``jnp.add`` (interpret-mode Pallas is a
+correctness path, not a fast one) and ``combine="pallas"`` opts into
+the kernel explicitly.
+
+:func:`simulate_plan` is a pure-numpy runner over the *same* tables,
+used by the tests to prove the lowering bit-exact against the symbolic
+simulator oracle for every (P, r, kind).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import lru_cache
+from typing import Callable, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from .schedule import Schedule
+
+
+def _frozen(a) -> np.ndarray:
+    a = np.asarray(a, dtype=np.int32)
+    a.setflags(write=False)
+    return a
+
+
+# ---------------------------------------------------------------------------
+#  cached placement tables (previously O(P^2) Python loops per trace)
+# ---------------------------------------------------------------------------
+
+@lru_cache(maxsize=None)
+def initial_row_table(sched: Schedule) -> np.ndarray:
+    """tbl[row, d] = which local chunk device d puts in initial row."""
+    P = sched.P
+    R = len(sched.initial_slots)
+    tbl = np.zeros((R, P), dtype=np.int32)
+    for k in range(R):
+        for d in range(P):
+            tbl[k, d] = sched.chunk_of_initial_row(k, d)
+    return _frozen(tbl)
+
+
+@lru_cache(maxsize=None)
+def final_row_table(sched: Schedule) -> np.ndarray:
+    """tbl[c, d] = which final *schedule* row holds reduced chunk c on d
+    (-1 where the schedule does not materialize that chunk)."""
+    P = sched.P
+    tbl = np.full((P, P), -1, dtype=np.int32)
+    for k in range(len(sched.final_slots)):
+        for d in range(P):
+            tbl[sched.final_chunk_index(k, d), d] = k
+    return _frozen(tbl)
+
+
+# ---------------------------------------------------------------------------
+#  the lowered plan
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ExecStep:
+    """One lowered communication step over the slot-allocated buffer.
+
+    Execution (all reads of ``buf`` precede all writes; destination slot
+    sets are disjoint by construction):
+
+        tx  = buf[tx_slots]                        # one static gather
+        rx  = ppermute(tx)
+        buf[add_dst] = buf[add_src] (+) rx[add_arr]   # combines
+        buf[recv_slots] = rx[recv_arr]                # freed slots
+
+    ``add_src == add_dst`` almost always (the combine absorbs the
+    resident row in place); a resident that survives the step elsewhere
+    forces a fresh destination slot.  Slots a step does not mention keep
+    their rows untouched -- kept rows are never copied.
+    """
+
+    shift: int
+    perm: Tuple[Tuple[int, int], ...]   # ppermute (src, dst) pairs
+    tx_slots: np.ndarray                # (T,)  slots to send
+    add_src: np.ndarray                 # (A,)  resident slots read
+    add_dst: np.ndarray                 # (A,)  slots written with the sum
+    add_arr: np.ndarray                 # (A,)  arrival index per combine
+    recv_slots: np.ndarray              # (Rv,) slots receiving new rows
+    recv_arr: np.ndarray                # (Rv,) arrival index per recv
+
+    @property
+    def n_tx(self) -> int:
+        return len(self.tx_slots)
+
+    @property
+    def n_adds(self) -> int:
+        return len(self.add_src)
+
+    @property
+    def in_place_adds(self) -> bool:
+        return bool((self.add_src == self.add_dst).all())
+
+
+@dataclass(frozen=True)
+class ExecPlan:
+    """Dense, trace-free lowering of one compiled Schedule.
+
+    ``n_slots``            -- buffer height; the executor runs the whole
+    replay on one ``(n_slots, u)`` array per device.
+    ``init_rows[row, d]``  -- chunk of device d's input placed in slot
+    ``row`` (initial rows occupy slots 0..R0-1 in schedule order).
+    ``final_rows[c, d]``   -- slot holding reduced chunk c on device d
+    after the last step (-1 where the chunk is not materialized).  Slot
+    assignment is SPMD-uniform; only the chunk labels differ per device.
+    """
+
+    P: int
+    kind: str
+    n_rows0: int
+    n_slots: int
+    steps: Tuple[ExecStep, ...]
+    init_rows: np.ndarray               # (R0, P)
+    final_rows: np.ndarray              # (P, P)
+
+    @property
+    def n_steps(self) -> int:
+        return len(self.steps)
+
+
+@lru_cache(maxsize=None)
+def compile_plan(sched: Schedule) -> ExecPlan:
+    """Lower a verified Schedule into slot-allocated index tables (cached).
+
+    Register allocation over buffer slots: ``slot_of`` maps each live
+    symbolic row to its fixed physical slot.  A kept row keeps its slot;
+    a combine reuses the slot of the resident row it consumes (unless
+    that row survives the step elsewhere, which forces a fresh slot);
+    received rows fill the lowest freed/unused slots in arrival order --
+    which keeps hot index ranges contiguous, so the executor's gathers
+    and updates lower to static slices wherever the schedule allows.
+    """
+    g = sched.group
+    P = sched.P
+    R0 = len(sched.initial_slots)
+    slot_of = {row: row for row in range(R0)}   # symbolic row -> slot
+    n_slots = R0
+    free: List[int] = []
+    steps: List[ExecStep] = []
+    for st in sched.steps:
+        keeps = [i for i, op in enumerate(st.out) if op.kind == "keep"]
+        recvs = [i for i, op in enumerate(st.out) if op.kind == "recv"]
+        adds = [i for i, op in enumerate(st.out) if op.kind == "add"]
+        tx_slots = [slot_of[r] for r in st.tx_rows]
+        if st.n_tx == 0 and not recvs and not adds:
+            # pure bookkeeping: re-label surviving rows, free the rest.
+            new_slot_of = {i: slot_of[st.out[i].res] for i in keeps}
+            free = sorted((set(free) | set(slot_of.values()))
+                          - set(new_slot_of.values()))
+            slot_of = new_slot_of
+            continue
+        kept_rows = {st.out[i].res for i in keeps}
+        res_uses: dict = {}
+        for i in adds:
+            res_uses[st.out[i].res] = res_uses.get(st.out[i].res, 0) + 1
+        new_slot_of = {i: slot_of[st.out[i].res] for i in keeps}
+        in_place = [i for i in adds
+                    if st.out[i].res not in kept_rows
+                    and res_uses[st.out[i].res] == 1]
+        fresh = [i for i in adds if i not in in_place]
+        for i in in_place:
+            new_slot_of[i] = slot_of[st.out[i].res]
+        # slots whose rows die this step become free for new arrivals
+        surviving = set(new_slot_of.values())
+        free = sorted((set(free) | set(slot_of.values())) - surviving)
+
+        def alloc() -> int:
+            nonlocal n_slots
+            if free:
+                return free.pop(0)
+            n_slots += 1
+            return n_slots - 1
+
+        for i in recvs + fresh:
+            new_slot_of[i] = alloc()
+        add_all = in_place + fresh
+        steps.append(ExecStep(
+            shift=st.shift,
+            perm=tuple((d, g.apply(st.shift, d)) for d in range(P)),
+            tx_slots=_frozen(tx_slots),
+            add_src=_frozen([slot_of[st.out[i].res] for i in add_all]),
+            add_dst=_frozen([new_slot_of[i] for i in add_all]),
+            add_arr=_frozen([st.out[i].arr for i in add_all]),
+            recv_slots=_frozen([new_slot_of[i] for i in recvs]),
+            recv_arr=_frozen([st.out[i].arr for i in recvs]),
+        ))
+        slot_of = new_slot_of
+    # remap the final schedule-row table to slots
+    sched_tbl = final_row_table(sched)
+    final_rows = np.full((P, P), -1, dtype=np.int32)
+    for c in range(P):
+        for d in range(P):
+            k = sched_tbl[c, d]
+            if k >= 0:
+                final_rows[c, d] = slot_of[k]
+    return ExecPlan(P=P, kind=sched.kind, n_rows0=R0, n_slots=n_slots,
+                    steps=tuple(steps), init_rows=initial_row_table(sched),
+                    final_rows=_frozen(final_rows))
+
+
+# ---------------------------------------------------------------------------
+#  vectorized JAX executor with multi-bucket software pipelining
+# ---------------------------------------------------------------------------
+
+def _take(buf, idx: np.ndarray):
+    """Static row gather; a slice for contiguous index ranges."""
+    n = len(idx)
+    if n and (idx == np.arange(idx[0], idx[0] + n)).all():
+        if idx[0] == 0 and n == int(buf.shape[0]):
+            return buf
+        return buf[int(idx[0]):int(idx[0]) + n]
+    return buf[idx]
+
+
+def _pallas_combine(jobs):
+    """Fuse all (res, arr) pairwise combines of a tick into ONE Pallas
+    ``combine_n`` call over the concatenated flat buffers.
+
+    ``jobs`` is a list of (res_mat, arr_mat) with matching shapes; the
+    K-way kernel (K=2 here) reads both operands once from HBM and writes
+    the sum, instead of one chained ``jnp.add`` dispatch per bucket.
+    Interpret mode is used automatically off-TPU.
+
+    Some shard_map replication checkers have no rule for ``pallas_call``
+    (jax <= 0.4.x ``check_rep``); there the kernel cannot trace and we
+    fall back to the identical-numerics ``jnp.add`` (same fp32 pairwise
+    sums).  Build the shard_map with ``check_vma=False`` (see
+    :func:`repro.compat.shard_map`) to route through the real kernel.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.fused_combine import _BLOCK, combine_n
+
+    res_flat = jnp.concatenate([r.reshape(-1) for r, _ in jobs])
+    arr_flat = jnp.concatenate([a.reshape(-1) for _, a in jobs])
+    n = res_flat.shape[0]
+    dt = res_flat.dtype
+    accum = jnp.float32 if jnp.issubdtype(dt, jnp.inexact) else dt
+    block = min(_BLOCK, 128 * max(1, math.ceil(n / 128)))
+    try:
+        out = combine_n(jnp.stack([res_flat, arr_flat]), accum_dtype=accum,
+                        interpret=jax.default_backend() != "tpu", block=block)
+    except NotImplementedError:
+        return [r + a for r, a in jobs]
+    outs, off = [], 0
+    for r, _ in jobs:
+        sz = int(np.prod(r.shape))
+        outs.append(out[off:off + sz].reshape(r.shape))
+        off += sz
+    return outs
+
+
+def execute(plan: ExecPlan, bucket_rows: Sequence[List], axis_name, *,
+            combine: Union[str, Callable] = "auto") -> List[List]:
+    """Replay ``plan`` over per-bucket slot-row lists inside shard_map.
+
+    ``bucket_rows`` is a list of ``n_buckets`` row lists, each of length
+    ``plan.n_slots`` holding this bucket's ``(u_b,)`` row per slot (None
+    for not-yet-written slots); all buckets replay the same plan over
+    disjoint slices of the message.  Slots are *aliases*: a kept row is
+    untouched (zero copies -- on XLA CPU, where functional whole-buffer
+    updates materialize, this is what makes the replay cheap), a combine
+    rebinds the destination slot, a received row is a row view of the
+    ppermute result.
+
+    The tick loop software-pipelines the buckets: at tick ``t`` bucket
+    ``j`` runs step ``t - j``, every active bucket's ``ppermute`` is
+    issued before any bucket's combines, and all combines of the tick
+    are batched into a single fused call on the Pallas path.  With one
+    bucket this degenerates to the plain vectorized replay.
+
+    ``combine``: "auto" (Pallas ``combine_n`` on TPU, ``jnp.add``
+    elsewhere), "pallas", "add", or a binary callable.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    if combine == "auto":
+        combine = "pallas" if jax.default_backend() == "tpu" else "add"
+    bucket_rows = [list(rows) for rows in bucket_rows]
+    B = len(bucket_rows)
+    S = plan.n_steps
+    for t in range(S + B - 1):
+        active = [(j, t - j) for j in range(B) if 0 <= t - j < S]
+        # 1) issue phase: stage every active bucket's communication
+        rx = {}
+        for j, s in active:
+            sp = plan.steps[s]
+            if sp.n_tx:
+                rows = bucket_rows[j]
+                tx = jnp.stack([rows[i] for i in sp.tx_slots])
+                rx[j] = lax.ppermute(tx, axis_name, perm=sp.perm)
+        # 2) combine phase: all pairwise adds of this tick
+        if combine == "pallas":
+            jobs, owners = [], []
+            for j, s in active:
+                sp = plan.steps[s]
+                if sp.n_adds:
+                    rows = bucket_rows[j]
+                    jobs.append((jnp.stack([rows[i] for i in sp.add_src]),
+                                 _take(rx[j], sp.add_arr)))
+                    owners.append((j, s))
+            if jobs:        # ticks of recv-only steps have no combines
+                for (j, s), summed in zip(owners, _pallas_combine(jobs)):
+                    for k, dst in enumerate(plan.steps[s].add_dst):
+                        bucket_rows[j][dst] = summed[k]
+        else:
+            add = jnp.add if combine == "add" else combine
+            for j, s in active:
+                sp = plan.steps[s]
+                rows = bucket_rows[j]
+                # read every resident before rebinding any slot: a fresh
+                # destination may reuse a slot another combine still reads
+                sums = [add(rows[src], rx[j][arr])
+                        for src, arr in zip(sp.add_src, sp.add_arr)]
+                for dst, v in zip(sp.add_dst, sums):
+                    rows[dst] = v
+        # 3) land received rows in their freed slots
+        for j, s in active:
+            sp = plan.steps[s]
+            rows = bucket_rows[j]
+            for slot, arr in zip(sp.recv_slots, sp.recv_arr):
+                rows[slot] = rx[j][arr]
+    return bucket_rows
+
+
+# ---------------------------------------------------------------------------
+#  pure-numpy reference runner (the lowering's own oracle)
+# ---------------------------------------------------------------------------
+
+def _np_chunks(vec: np.ndarray, P: int) -> np.ndarray:
+    m = vec.shape[0]
+    u = -(-m // P)
+    pad = u * P - m
+    if pad:
+        vec = np.concatenate([vec, np.zeros((pad,), vec.dtype)])
+    return vec.reshape(P, u)
+
+
+def simulate_plan(sched: Schedule, vectors: List[np.ndarray],
+                  n_buckets: int = 1) -> List[np.ndarray]:
+    """Replay the *lowered* plan tables over P explicit numpy processes.
+
+    Mirrors :func:`execute` table-for-table (including the bucket split
+    and the in-place slot updates), so bit-exact agreement with
+    :func:`repro.core.simulator.simulate` proves the lowering correct
+    independently of JAX.  Handles every schedule kind:
+
+    * ``generalized`` / ``ring``: full input vectors, full results;
+    * ``reduce_scatter``: padded inputs, device d returns its owned chunk;
+    * ``all_gather`` / ``bruck_all_gather``: device d contributes chunk d
+      (``vectors[d]``), every device returns the concatenation.
+    """
+    plan = compile_plan(sched)
+    P = plan.P
+    assert len(vectors) == P
+    gather_kinds = ("all_gather", "bruck_all_gather")
+
+    if plan.kind in gather_kinds:
+        init = [vectors[d].reshape(1, -1) for d in range(P)]
+    else:
+        init = []
+        for d in range(P):
+            ch = _np_chunks(vectors[d], P)
+            init.append(ch[plan.init_rows[:, d]])
+    u = init[0].shape[1]
+    n_buckets = max(1, min(n_buckets, u if u else 1))
+    ub = -(-u // n_buckets)
+    bufs = []
+    for d in range(P):
+        full = np.zeros((plan.n_slots, ub * n_buckets), init[d].dtype)
+        full[:plan.n_rows0, :u] = init[d]
+        bufs.append([full[:, j * ub:(j + 1) * ub].copy()
+                     for j in range(n_buckets)])
+
+    B, S = n_buckets, plan.n_steps
+    for t in range(S + B - 1):
+        active = [(j, t - j) for j in range(B) if 0 <= t - j < S]
+        rx = {}
+        for j, s in active:
+            sp = plan.steps[s]
+            if sp.n_tx:
+                arr = [None] * P
+                for src, dst in sp.perm:
+                    arr[dst] = bufs[src][j][sp.tx_slots].copy()
+                rx[j] = arr
+        for j, s in active:
+            sp = plan.steps[s]
+            for d in range(P):
+                if sp.n_adds:
+                    bufs[d][j][sp.add_dst] = (bufs[d][j][sp.add_src]
+                                              + rx[j][d][sp.add_arr])
+                if len(sp.recv_slots):
+                    bufs[d][j][sp.recv_slots] = rx[j][d][sp.recv_arr]
+
+    state = [np.concatenate(bufs[d], axis=1)[:, :u] for d in range(P)]
+    results = []
+    for d in range(P):
+        cols = plan.final_rows[:, d]
+        if (cols >= 0).all():
+            out = state[d][cols].reshape(-1)
+            if plan.kind in gather_kinds:
+                results.append(out)
+            else:
+                results.append(out[:vectors[d].shape[0]])
+        else:
+            # reduce-scatter: only the owned chunk is materialized
+            c = int(np.nonzero(cols >= 0)[0][0])
+            results.append(state[d][cols[c]])
+    return results

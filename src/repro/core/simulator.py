@@ -15,6 +15,7 @@ from typing import Callable, List, Optional
 
 import numpy as np
 
+from .execplan import final_row_table, initial_row_table
 from .schedule import Schedule
 
 
@@ -39,12 +40,18 @@ def _chunks(vec: np.ndarray, P: int) -> List[np.ndarray]:
 
 def _initial_state(sched: Schedule,
                    vectors: List[np.ndarray]) -> List[List[np.ndarray]]:
-    """Per-device row state from the schedule's initial slot layout."""
+    """Per-device row state from the schedule's initial slot layout.
+
+    The placement table is cached per schedule (see
+    :func:`repro.core.execplan.initial_row_table`), so repeated
+    simulations stop re-running the O(P^2) placement loops.
+    """
     P = sched.P
+    tbl = initial_row_table(sched)
     state: List[List[np.ndarray]] = []
     for d in range(P):
         ch = _chunks(vectors[d], P)
-        state.append([ch[sched.chunk_of_initial_row(row, d)].copy()
+        state.append([ch[tbl[row, d]].copy()
                       for row in range(len(sched.initial_slots))])
     return state
 
@@ -98,13 +105,14 @@ def simulate(sched: Schedule, vectors: List[np.ndarray],
     state = _initial_state(sched, vectors)
     units_sent, adds = _replay(sched, state, op)
 
-    # gather: final row k of device d holds reduced chunk
-    # sched.final_chunk_index(k, d)
+    # gather: reduced chunk c of device d sits in final row tbl[c, d]
+    # (cached per schedule)
+    tbl = final_row_table(sched)
     results = []
     for d in range(P):
-        out_chunks: List[Optional[np.ndarray]] = [None] * P
-        for k in range(len(sched.final_slots)):
-            out_chunks[sched.final_chunk_index(k, d)] = state[d][k]
+        out_chunks: List[Optional[np.ndarray]] = [
+            state[d][tbl[c, d]] if tbl[c, d] >= 0 else None
+            for c in range(P)]
         if any(c is None for c in out_chunks):
             # partial results (reduce-scatter): return rows as-is
             results.append([c for c in out_chunks if c is not None])
@@ -136,11 +144,7 @@ def simulate_all_gather(sched: Schedule, chunks: List[np.ndarray]):
     assert len(chunks) == P
     state: List[List[np.ndarray]] = [[chunks[d].copy()] for d in range(P)]
     _replay(sched, state)
-    results = []
-    for d in range(P):
-        out: List[Optional[np.ndarray]] = [None] * P
-        for k in range(len(sched.final_slots)):
-            out[sched.final_chunk_index(k, d)] = state[d][k]
-        assert all(c is not None for c in out)
-        results.append(np.concatenate(out))
-    return results
+    tbl = final_row_table(sched)
+    assert (tbl >= 0).all()
+    return [np.concatenate([state[d][tbl[c, d]] for c in range(P)])
+            for d in range(P)]

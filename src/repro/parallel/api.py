@@ -52,6 +52,8 @@ class ParallelConfig:
     tp: int = 1
     param_mode: str = "dp"         # dp | zero1 | fsdp
     grad_r: Optional[int] = None   # gen-allreduce step override (None = autotune)
+    grad_n_buckets: Optional[int] = None  # pipelined buckets (None = autotune)
+    grad_combine: str = "auto"     # auto | add | pallas (ExecPlan combines)
     grad_group: str = "cyclic"     # cyclic | hypercube
     collective_impl: str = "xla"   # xla | group  (TP boundary collectives)
     topology: Optional[Topology] = None  # multi-level fabric of dp_axes
@@ -84,6 +86,9 @@ def dp_grad_allreduce(tree, pc: ParallelConfig, *, mean: bool = True,
     ``fabric`` tunes the *flat* path only; the hierarchical path reads
     per-level alpha/beta/gamma from ``pc.topology`` (override it via
     ``parallel_config_for(..., topology=...)`` for non-v5e machines).
+    ``pc.grad_n_buckets`` pins the ExecPlan executor's pipelined bucket
+    count (None = autotuned from the same fabric) and ``pc.grad_combine``
+    its combine kernel routing ("auto" = Pallas combine_n on TPU).
 
     NOTE on ``pc.grad_r``: on a flat mesh it tunes the schedule over the
     full DP size (range [0, max_r(dp)]); on a hierarchical mesh it pins
@@ -104,9 +109,12 @@ def dp_grad_allreduce(tree, pc: ParallelConfig, *, mean: bool = True,
                 f"[0, {max_r(outer.size)}] (use grad_r=None to autotune "
                 f"flat-vs-hierarchical)")
         return hierarchical_allreduce(tree, pc.dp_axes, pc.topology,
-                                      r=pc.grad_r, mean=mean)
+                                      r=pc.grad_r, mean=mean,
+                                      combine=pc.grad_combine,
+                                      n_buckets=pc.grad_n_buckets)
     return allreduce_tree(tree, pc.dp_axis_name, mean=mean, r=pc.grad_r,
-                          fabric=fabric)
+                          fabric=fabric, combine=pc.grad_combine,
+                          n_buckets=pc.grad_n_buckets)
 
 
 def tp_rank(pc: ParallelConfig):

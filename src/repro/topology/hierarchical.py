@@ -32,7 +32,8 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.cost_model import Fabric, best_schedule, schedule_cost
+from repro.core.cost_model import (Fabric, best_schedule, choose_n_buckets,
+                                   pipelined_schedule_cost, schedule_cost)
 from repro.core.schedule import (Schedule, build_all_gather,
                                  build_generalized, build_reduce_scatter,
                                  build_ring, max_r)
@@ -210,37 +211,55 @@ def flat_cost(topo: Topology, m: float, r: int = 0,
 
 @dataclass(frozen=True)
 class CollectivePlan:
-    """Autotuner verdict for one (topology, message size) pair."""
+    """Autotuner verdict for one (topology, message size) pair.
+
+    ``n_buckets`` is the pipelined bucket count of the ExecPlan executor
+    for the allreduce phase (the whole message for flat plans, the
+    outer-level allreduce for hierarchical ones).
+    """
 
     kind: str          # "flat-generalized" | "flat-ring" | "hierarchical"
     r: int             # flat r, or outer-level r for hierarchical
     cost: float
+    n_buckets: int = 1
 
 
 def best_flat_plan(topo: Topology, nbytes: float,
                    allow_ring: bool = True) -> CollectivePlan:
-    """Cheapest *flat* plan (any r, optionally ring) over the flattened
-    device index, costed on the bottleneck fabric (or the only fabric of
-    a single-level topology)."""
+    """Cheapest *flat* plan (any r, optionally ring, any bucket count)
+    over the flattened device index, costed on the bottleneck fabric (or
+    the only fabric of a single-level topology)."""
     flat_fabric = topo.levels[0].fabric if topo.n_levels == 1 \
         else bottleneck_fabric(topo)
     sched, cost = best_schedule(topo.P, nbytes, flat_fabric,
                                 include_ring=allow_ring)
     kind = "flat-ring" if sched.kind == "ring" else "flat-generalized"
-    return CollectivePlan(kind, sched.r, cost)
+    b = choose_n_buckets(sched, nbytes, flat_fabric)
+    if b > 1:
+        cost = pipelined_schedule_cost(sched, nbytes, flat_fabric, b)
+    return CollectivePlan(kind, sched.r, cost, b)
 
 
 def best_hierarchical_plan(topo: Topology,
                            nbytes: float) -> Optional[CollectivePlan]:
     """Cheapest hierarchical plan (any outer r) over per-level fabrics;
-    None for single-level topologies, where no composition exists."""
+    None for single-level topologies, where no composition exists.  The
+    bucket count pipelines the outer-level allreduce, whose live message
+    has shrunk by the inner reduce-scatters."""
     if topo.n_levels == 1:
         return None
     best: Optional[CollectivePlan] = None
+    outer_bytes = nbytes / topo.inner_size
     for r in range(max_r(topo.outer.size) + 1):
-        c = hierarchical_cost(build_hierarchical(topo, r), nbytes)
+        hs = build_hierarchical(topo, r)
+        c = hierarchical_cost(hs, nbytes)
+        b = choose_n_buckets(hs.ar, outer_bytes, topo.outer.fabric)
+        if b > 1:
+            c += (pipelined_schedule_cost(hs.ar, outer_bytes,
+                                          topo.outer.fabric, b)
+                  - schedule_cost(hs.ar, outer_bytes, topo.outer.fabric))
         if best is None or c < best.cost:
-            best = CollectivePlan("hierarchical", r, c)
+            best = CollectivePlan("hierarchical", r, c, b)
     return best
 
 

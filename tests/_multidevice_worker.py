@@ -189,11 +189,60 @@ def check_hierarchical():
     print("ok hierarchical")
 
 
+def check_execplan():
+    """The ExecPlan executor on real forced-host devices: integer inputs
+    must reproduce the numpy sum *bit-exactly* for every bucket count,
+    and the Pallas combine_n-routed path must match the chained-add path
+    (same fp32 pairwise sums, one fused kernel call per pipeline tick).
+    """
+    n = len(jax.devices())
+    mesh = jax.make_mesh((n,), ("data",))
+    rng = np.random.default_rng(7)
+    from repro.core.execplan import compile_plan
+    for m in [1, 13, 257]:
+        x = rng.integers(-1000, 1000, (n, m)).astype(np.int32)
+        want = x.sum(0)
+        scheds = [build_generalized(n, r) for r in range(max_r(n) + 1)]
+        scheds.append(build_ring(n))
+        for sched in scheds:
+            for nb in (1, 2, 4):
+                f = jax.jit(shard_map(
+                    lambda v, s=sched, b=nb: allreduce_flat(
+                        v[0], "data", s, n_buckets=b)[None],
+                    mesh=mesh, in_specs=P("data", None),
+                    out_specs=P("data", None)))
+                out = np.asarray(f(x))
+                for d in range(n):
+                    assert (out[d] == want).all(), \
+                        (m, sched.kind, sched.r, nb, d)
+    # combine_n-routed steps (check_vma=False: old-JAX replication
+    # checkers have no pallas rule) == chained jnp.add, bit for bit.
+    # The latency-optimal schedule batches several combines per tick into
+    # one kernel call; ring additionally covers add-free (recv-only)
+    # ticks in its all-gather half -- pallas must skip those, not crash.
+    lat_opt = build_generalized(n, max_r(n))
+    assert any(st.n_adds > 1 for st in compile_plan(lat_opt).steps)
+    for sched in (lat_opt, build_ring(n)):
+        x = rng.integers(-1000, 1000, (n, 257)).astype(np.int32)
+        outs = {}
+        for comb in ("pallas", "add"):
+            f = jax.jit(shard_map(
+                lambda v, s=sched, c=comb: allreduce_flat(
+                    v[0], "data", s, n_buckets=2, combine=c)[None],
+                mesh=mesh, in_specs=P("data", None),
+                out_specs=P("data", None), check_vma=False))
+            outs[comb] = np.asarray(f(x))
+        assert (outs["pallas"] == outs["add"]).all()
+        assert (outs["add"][0] == x.sum(0)).all()
+    print("ok execplan")
+
+
 if __name__ == "__main__":
     which = sys.argv[1] if len(sys.argv) > 1 else "all"
     checks = dict(allreduce=check_allreduce_flat, psum=check_vs_psum,
                   rsag=check_rs_ag, multiaxis=check_multiaxis,
-                  zero=check_tree_zero, hier=check_hierarchical)
+                  zero=check_tree_zero, hier=check_hierarchical,
+                  execplan=check_execplan)
     if which == "all":
         for fn in checks.values():
             fn()

@@ -57,6 +57,18 @@ def test_hierarchical_pod_data_8dev():
     _run("hier")
 
 
+def test_execplan_8dev():
+    """ExecPlan executor: bit-exact integer allreduce for every r and
+    ring, n_buckets in {1, 2, 4}, plus the Pallas combine_n-routed path
+    matching chained adds."""
+    _run("execplan")
+
+
+@pytest.mark.slow
+def test_execplan_nonpower2_6dev():
+    _run("execplan", devices=6)
+
+
 @pytest.mark.slow
 def test_hierarchical_nonpower2_6dev():
     # (2, 3): non-power-of-two inner level
