@@ -25,15 +25,13 @@ Conventions (per device, per step):
 from __future__ import annotations
 
 import json
-import math
 import os
 import sys
 from dataclasses import dataclass
-from typing import Dict, Optional
+from typing import Dict
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core.cost_model import TPU_V5E_ICI  # noqa: E402
 from repro.core.schedule import (build_generalized,  # noqa: E402
                                  build_reduce_scatter)
 from repro.models.config import ModelConfig, ShapeConfig  # noqa: E402
@@ -66,6 +64,12 @@ class CellModel:
     def dominant(self):
         t = self.terms()
         return max(t, key=t.get)
+
+
+def _ring_bytes(n, p):
+    """Per-device bytes on the wire for a ring collective of an n-byte
+    tensor over p ranks."""
+    return n * (p - 1) / p if p > 1 else 0.0
 
 
 def _attn_eff_kv(S, window, causal=True):
@@ -168,7 +172,6 @@ def train_cell(cfg: ModelConfig, shape: ShapeConfig, *, dp: int, tp: int,
 
     # ---- collective bytes -------------------------------------------
     coll = 0.0
-    ring = lambda n, p: n * (p - 1) / p if p > 1 else 0.0
     # TP sequence-parallel boundary: per block ag + rs of (B,S,d) bf16,
     # x2 (fwd) x2 (bwd transpose) [+1 remat re-gather]
     n_boundary = 0
@@ -182,24 +185,24 @@ def train_cell(cfg: ModelConfig, shape: ShapeConfig, *, dp: int, tp: int,
         # gather always happens; scatter skipped for full-value blocks
         n_boundary += per_block * (2 if not full_value else 1)
     tensor = B * S * d * BF16
-    coll += ring(tensor, tp) * n_boundary * 3      # fwd + remat + bwd
-    detail["tp_coll"] = ring(tensor, tp) * n_boundary * 3
+    coll += _ring_bytes(tensor, tp) * n_boundary * 3      # fwd + remat + bwd
+    detail["tp_coll"] = _ring_bytes(tensor, tp) * n_boundary * 3
     # CE: gathers hidden chunks (total B*S*d) + per-chunk scalar psums
-    coll += ring(tensor, tp) * 3
+    coll += _ring_bytes(tensor, tp) * 3
     # embed scatter
-    coll += ring(tensor, tp)
+    coll += _ring_bytes(tensor, tp)
 
     P_dp = dp
     if param_mode == "fsdp":
         # per block: ag params (bf16 use) fwd + remat, rs grads (f32)
         pbytes = (n_params - cfg.vocab * d * (1 if cfg.tie_embeddings else 2)
                   ) / tp * F32
-        coll += 2 * ring(pbytes * 0.5, P_dp)       # gather bf16 x2
-        coll += ring(pbytes, P_dp)                 # grad rs f32
-        detail["fsdp_coll"] = 3 * ring(pbytes, P_dp)
+        coll += 2 * _ring_bytes(pbytes * 0.5, P_dp)       # gather bf16 x2
+        coll += _ring_bytes(pbytes, P_dp)                 # grad rs f32
+        detail["fsdp_coll"] = 3 * _ring_bytes(pbytes, P_dp)
         # replicated-over-dp leaves (norms etc) via generalized allreduce
         small = 0.05 * pbytes / 50                 # rough
-        coll += 2 * ring(small, P_dp)
+        coll += 2 * _ring_bytes(small, P_dp)
     else:
         # gradient sync through the paper's schedule
         sched = build_generalized(P_dp, 0) if param_mode == "dp" else \
@@ -255,7 +258,6 @@ def serve_cell(cfg: ModelConfig, shape: ShapeConfig, *, dp: int, tp: int,
             cache_bytes += 2 * B * kvl * eff_kv * cfg.hd * BF16
     hbm += cache_bytes + 6 * B * S_new * d / tp * BF16 * len(cfg.blocks)
 
-    ring = lambda n, p: n * (p - 1) / p if p > 1 else 0.0
     tensor = B * S_new * d * BF16
     coll = 0.0
     for k in cfg.blocks:
@@ -265,8 +267,8 @@ def serve_cell(cfg: ModelConfig, shape: ShapeConfig, *, dp: int, tp: int,
         per = 2 if (cfg.d_ff or cfg.moe) and k in (
             "attn", "local_attn", "rglru") else 1
         if not full_value:
-            coll += 2 * ring(tensor, tp) * per
-    coll += 2 * ring(B * S_new * cfg.vocab / tp * F32, tp)  # logit gather
+            coll += 2 * _ring_bytes(tensor, tp) * per
+    coll += 2 * _ring_bytes(B * S_new * cfg.vocab / tp * F32, tp)  # logit gather
 
     # per-device useful flops: B is already dp-local, divide by tp
     model_flops = 2 * _active_params(cfg) * B * S_new / tp

@@ -1,0 +1,172 @@
+"""CI perf-regression gate for the executor smoke benchmark.
+
+Compares a freshly measured ``results/executor.json``-shaped file against
+the committed baseline and fails (exit 1) when the executor got slower
+*relative to the in-process legacy baseline*.
+
+Why ratios, not microseconds: the committed baseline was measured on the
+development container and CI runs on whatever runner GitHub hands out, so
+absolute wallclock is meaningless across the two.  Every benchmark row
+times the legacy per-row replay, the ExecPlan executor and the pipelined
+executor on the *same* host in the same interleaved run, so the
+dimensionless ``speedup_execplan`` / ``speedup_pipelined`` ratios are
+hardware-normalized and comparable.
+
+Noise tolerance: the executor benchmark's interleaved best-of-reps
+timings move about +-15% run to run on a loaded shared host (measured
+while committing the PR 2 baseline); a ratio of two such numbers moves up
+to ~30%.  The default ``--tolerance 0.35`` fails only drops beyond that
+envelope.  Override per-run with ``--tolerance`` or the
+``REPRO_REGRESSION_TOL`` env var.
+
+Only labels (message sizes) present in BOTH files are compared -- the
+committed baseline is a full run, CI measures the smoke subset -- and at
+least one overlapping label is required, so a mis-wired gate fails loudly
+instead of green.
+
+Usage (what CI runs):
+    python benchmarks/run.py executor --smoke --out results/executor_smoke.json
+    python benchmarks/check_regression.py \
+        --current results/executor_smoke.json \
+        --baseline results/executor.json \
+        --summary regression_summary.md
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_KEYS = ("speedup_execplan", "speedup_pipelined")
+
+
+def load_rows(path: str) -> dict:
+    with open(path) as f:
+        payload = json.load(f)
+    return {row["label"]: row for row in payload["results"]}
+
+
+def compare(current: dict, baseline: dict, keys, tolerance: float):
+    """Returns (comparisons, regressions); each comparison is a dict."""
+    overlap = sorted(set(current) & set(baseline), key=lambda lb: baseline[lb]["bytes"])
+    comparisons, regressions = [], []
+    for label in overlap:
+        for key in keys:
+            base, cur = baseline[label].get(key), current[label].get(key)
+            if base is None or cur is None:
+                continue
+            floor = base * (1.0 - tolerance)
+            entry = {
+                "label": label,
+                "key": key,
+                "baseline": base,
+                "current": cur,
+                "floor": round(floor, 3),
+                "regressed": cur < floor,
+            }
+            comparisons.append(entry)
+            if entry["regressed"]:
+                regressions.append(entry)
+    return comparisons, regressions
+
+
+def write_summary(
+    path: str,
+    comparisons,
+    regressions,
+    tolerance: float,
+    current_path: str,
+    baseline_path: str,
+) -> None:
+    lines = [
+        "# Executor benchmark regression check",
+        "",
+        f"- current: `{current_path}`",
+        f"- baseline: `{baseline_path}`",
+        f"- tolerance: {tolerance:.0%} relative drop "
+        "(documented benchmark noise envelope)",
+        f"- verdict: {'REGRESSION' if regressions else 'OK'}",
+        "",
+        "| size | metric | baseline | current | floor | status |",
+        "| --- | --- | --- | --- | --- | --- |",
+    ]
+    for c in comparisons:
+        status = "**REGRESSED**" if c["regressed"] else "ok"
+        lines.append(
+            f"| {c['label']} | {c['key']} | {c['baseline']:.3f} "
+            f"| {c['current']:.3f} | {c['floor']:.3f} | {status} |"
+        )
+    lines.append("")
+    lines.append(
+        "Ratios are executor-vs-legacy speedups measured interleaved on one "
+        "host, so they stay comparable between the committed baseline "
+        "machine and the CI runner; absolute microseconds are not."
+    )
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="fail when executor speedup ratios regress vs baseline"
+    )
+    ap.add_argument("--current", required=True)
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument(
+        "--summary", default=None, help="write a human-readable markdown diff here"
+    )
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=float(os.environ.get("REPRO_REGRESSION_TOL", "0.35")),
+        help="allowed relative drop before failing (default 0.35)",
+    )
+    ap.add_argument(
+        "--keys",
+        default=",".join(DEFAULT_KEYS),
+        help="comma-separated dimensionless row keys to gate on",
+    )
+    args = ap.parse_args(argv)
+
+    current, baseline = load_rows(args.current), load_rows(args.baseline)
+    keys = [k for k in args.keys.split(",") if k]
+    comparisons, regressions = compare(current, baseline, keys, args.tolerance)
+    if not comparisons:
+        print(
+            f"check_regression: no overlapping labels between "
+            f"{args.current} ({sorted(current)}) and {args.baseline} "
+            f"({sorted(baseline)}) -- gate is mis-wired",
+            file=sys.stderr,
+        )
+        return 2
+    for c in comparisons:
+        status = "REGRESSED" if c["regressed"] else "ok"
+        print(
+            f"check_regression,{c['label']},{c['key']},"
+            f"base={c['baseline']:.3f},cur={c['current']:.3f},"
+            f"floor={c['floor']:.3f},{status}"
+        )
+    if args.summary:
+        write_summary(
+            args.summary,
+            comparisons,
+            regressions,
+            args.tolerance,
+            args.current,
+            args.baseline,
+        )
+        print(f"check_regression,WROTE,{args.summary}")
+    if regressions:
+        print(
+            f"check_regression: {len(regressions)} metric(s) regressed "
+            f"beyond the {args.tolerance:.0%} noise tolerance",
+            file=sys.stderr,
+        )
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

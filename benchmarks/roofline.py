@@ -15,7 +15,6 @@ Reports per cell: the three terms, the dominant one, MODEL_FLOPS = 6*N*D
 """
 from __future__ import annotations
 
-import glob
 import json
 import os
 import sys
@@ -23,8 +22,7 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.dirname(__file__))
 
-from analytic import (HBM_BW, LINK_BW, PEAK_FLOPS, serve_cell,  # noqa: E402
-                      train_cell)
+from analytic import PEAK_FLOPS, serve_cell, train_cell  # noqa: E402
 from repro.configs import ARCHS, get_config  # noqa: E402
 from repro.models.config import SHAPES, shape_applicable  # noqa: E402
 
@@ -50,7 +48,6 @@ def cell_row(arch: str, shape_name: str, mesh: str,
         cm = serve_cell(cfg, shape, dp=eff_dp, tp=tp)
         step_kind = "serve"
     t = cm.terms()
-    total = max(sum(t.values()), 1e-12)
     bound = cm.dominant
     useful = cm.model_flops / max(cm.flops, 1.0)
     roofline_frac = (cm.model_flops / PEAK_FLOPS) / max(

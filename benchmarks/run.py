@@ -15,6 +15,12 @@ schedule compiler's exact per-step accounting):
 plus:
   sched  -- compiled-schedule step/traffic counts vs closed forms
   wall   -- real wall-clock of the JAX executor on 8 host devices
+
+Modes (first positional arg): ``figures`` (default), ``executor
+[--smoke] [--out PATH]`` (executor wallclock comparison ->
+results/executor.json), ``tune [--smoke] [--out PATH] [--cache PATH]``
+(measured autotuning grid -> persistent tuning cache +
+results/tuning.json).
 """
 from __future__ import annotations
 
@@ -24,12 +30,9 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import numpy as np  # noqa: E402
-
 from repro.core.cost_model import (PAPER_10GE, optimal_r_search,  # noqa: E402
                                    schedule_cost, tau_best_sota,
-                                   tau_bw_optimal, tau_intermediate,
-                                   tau_latency_optimal, tau_openmpi_policy,
+                                   tau_intermediate, tau_openmpi_policy,
                                    tau_recursive_doubling,
                                    tau_recursive_halving, tau_ring)
 from repro.core.schedule import (build_generalized, build_ring,  # noqa: E402
@@ -155,20 +158,39 @@ def wallclock_8dev():
             print(line)
 
 
+def _worker_bench(script_name: str, prefix: str, extra, timeout=1800) -> None:
+    """Spawn an 8-host-device benchmark worker, echo its ``prefix,``
+    rows, and fail loudly on a non-zero exit."""
+    script = os.path.join(os.path.dirname(__file__), script_name)
+    res = _spawn_8dev(script, extra, timeout=timeout)
+    if res.returncode != 0:
+        print(f"{prefix},ERROR,{res.stderr[-2000:]}", file=sys.stderr)
+        raise SystemExit(1)
+    for line in res.stdout.strip().splitlines():
+        if line.startswith(prefix + ","):
+            print(line)
+
+
 def executor_bench(smoke: bool = False,
                    out: str = "results/executor.json") -> None:
     """Old per-row replay vs ExecPlan vs pipelined ExecPlan wallclock on
     8 simulated CPU devices (the perf trajectory's BENCH datapoint);
     writes ``results/executor.json``."""
-    script = os.path.join(os.path.dirname(__file__), "executor_worker.py")
     extra = ["--out", out] + (["--smoke"] if smoke else [])
-    res = _spawn_8dev(script, extra)
-    if res.returncode != 0:
-        print(f"executor,ERROR,{res.stderr[-2000:]}", file=sys.stderr)
-        raise SystemExit(1)
-    for line in res.stdout.strip().splitlines():
-        if line.startswith("executor,"):
-            print(line)
+    _worker_bench("executor_worker.py", "executor", extra)
+
+
+def tune_bench(smoke: bool = False, out: str = "results/tuning.json",
+               cache: str = None) -> None:
+    """Measured autotuning: time the (kind x r x n_buckets x size) grid on
+    8 simulated CPU devices, record it into the persistent tuning cache
+    (``REPRO_TUNING_CACHE`` / the user cache dir), and write a summary to
+    ``results/tuning.json``.  After this, ``choose(..., tune=True)`` (or
+    ``REPRO_TUNING=1``) answers from measurements instead of the model."""
+    extra = ["--out", out] + (["--smoke"] if smoke else [])
+    if cache:
+        extra += ["--cache", cache]
+    _worker_bench("tune_worker.py", "tune", extra, timeout=3600)
 
 
 def figures() -> None:
@@ -185,15 +207,24 @@ def figures() -> None:
         wallclock_8dev()
 
 
+def _opt(argv, flag, default):
+    return argv[argv.index(flag) + 1] if flag in argv else default
+
+
 def main(argv=None) -> None:
     argv = sys.argv[1:] if argv is None else argv
     mode = next((a for a in argv if not a.startswith("-")), "figures")
     if mode == "figures":
         figures()
     elif mode == "executor":
-        executor_bench(smoke="--smoke" in argv)
+        executor_bench(smoke="--smoke" in argv,
+                       out=_opt(argv, "--out", "results/executor.json"))
+    elif mode == "tune":
+        tune_bench(smoke="--smoke" in argv,
+                   out=_opt(argv, "--out", "results/tuning.json"),
+                   cache=_opt(argv, "--cache", None))
     else:
-        raise SystemExit(f"unknown mode {mode!r} (figures | executor)")
+        raise SystemExit(f"unknown mode {mode!r} (figures | executor | tune)")
 
 
 if __name__ == "__main__":

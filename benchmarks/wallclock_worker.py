@@ -15,12 +15,11 @@ assert "xla_force_host_platform_device_count" in os.environ.get("XLA_FLAGS", "")
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.core.allreduce import allreduce_flat, psum_tree
+from repro.core.allreduce import allreduce_flat
 from repro.core.schedule import build_generalized, build_ring, max_r
 
 

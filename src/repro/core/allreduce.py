@@ -60,11 +60,11 @@ from jax import lax
 
 from repro import compat
 
-from .autotune import Choice, choose, schedule_for
+from .autotune import choose, schedule_for
 from .cost_model import Fabric, TPU_V5E_ICI, choose_n_buckets
 from .execplan import ExecPlan, compile_plan, execute
 from .schedule import (Schedule, build_all_gather, build_generalized,
-                       build_reduce_scatter, build_ring)
+                       build_reduce_scatter)
 
 if TYPE_CHECKING:  # repro.topology is the layer above this one; importing
     # it at module scope would cycle through repro.core.__init__, so the
@@ -245,12 +245,13 @@ def all_gather_flat(chunk: jnp.ndarray, axis_name: AxisName,
 
 def _flatten_tree(tree):
     leaves, treedef = jax.tree.flatten(tree)
-    shapes = [l.shape for l in leaves]
+    shapes = [leaf.shape for leaf in leaves]
     sizes = [int(np.prod(s)) if len(s) else 1 for s in shapes]
-    dtypes = [l.dtype for l in leaves]
+    dtypes = [leaf.dtype for leaf in leaves]
     if leaves:
         common = jnp.result_type(*dtypes)
-        flat = jnp.concatenate([l.reshape(-1).astype(common) for l in leaves])
+        flat = jnp.concatenate([leaf.reshape(-1).astype(common)
+                                for leaf in leaves])
     else:
         flat = jnp.zeros((0,))
     return flat, (treedef, shapes, sizes, dtypes)
@@ -271,7 +272,8 @@ def allreduce_tree(tree, axis_name: AxisName, *,
                    fabric: Fabric = TPU_V5E_ICI,
                    accum_dtype=jnp.float32,
                    combine: CombineFn = "auto",
-                   n_buckets: Optional[int] = None):
+                   n_buckets: Optional[int] = None,
+                   tune: Optional[bool] = None):
     """Allreduce (sum or mean) a pytree of arrays over ``axis_name`` using
     the generalized algorithm.
 
@@ -281,7 +283,8 @@ def allreduce_tree(tree, axis_name: AxisName, *,
     latency once, then the buffer is *re-split* into ``n_buckets``
     pipelined buckets (``None`` = autotuned from the fabric via the
     extended cost model) so communication of bucket k overlaps combines
-    of bucket k-1.
+    of bucket k-1.  ``tune`` opts the autotuner into the measured tuning
+    table (see :mod:`repro.tuning`; None reads ``REPRO_TUNING``).
     """
     P = axis_size(axis_name)
     if P == 1:
@@ -289,7 +292,7 @@ def allreduce_tree(tree, axis_name: AxisName, *,
     flat, spec = _flatten_tree(tree)
     nbytes = flat.size * flat.dtype.itemsize
     if r is None:
-        ch = choose(P, int(nbytes), fabric)
+        ch = choose(P, int(nbytes), fabric, tune=tune)
         sched = schedule_for(ch, P)
         if n_buckets is None:
             n_buckets = ch.n_buckets
@@ -356,7 +359,8 @@ def hierarchical_allreduce(tree, axis_names: Sequence[str],
                            mean: bool = False,
                            accum_dtype=jnp.float32,
                            combine: CombineFn = "auto",
-                           n_buckets: Optional[int] = None):
+                           n_buckets: Optional[int] = None,
+                           tune: Optional[bool] = None):
     """Allreduce (sum or mean) a pytree over hierarchical mesh axes.
 
     ``r`` tunes the outer-level step count; with ``r=None`` the plan
@@ -364,7 +368,9 @@ def hierarchical_allreduce(tree, axis_names: Sequence[str],
     count) is autotuned per message size from the per-level fabric
     parameters.  A flat plan executes the chosen schedule over the
     flattened axis tuple -- hierarchical is only used when the cost
-    model says it wins.
+    model says it wins.  ``tune`` opts the plan chooser into the
+    measured tuning table (single-level topologies only; see
+    :func:`repro.topology.hierarchical.choose_collective`).
     """
     from repro.topology.hierarchical import (HierarchicalSchedule,
                                              build_hierarchical,
@@ -376,7 +382,7 @@ def hierarchical_allreduce(tree, axis_names: Sequence[str],
     flat, spec = _flatten_tree(tree)
     nbytes = flat.size * flat.dtype.itemsize
     if r is None:
-        plan = choose_collective(topology, int(nbytes))
+        plan = choose_collective(topology, int(nbytes), tune=tune)
         sched = schedules_for_plan(plan, topology)
         if n_buckets is None:
             n_buckets = plan.n_buckets

@@ -5,16 +5,30 @@ schedule minimizing the exact schedule-derived cost.  This is what the
 training framework uses per gradient bucket: small buckets get
 latency-leaning schedules (large r), large buckets get the
 bandwidth-optimal r=0 (or Ring on very large, cache-bound buckets).
+
+Two sources feed the decision:
+
+* the **analytic model** (always available) -- exact per-step traffic of
+  the compiled schedule priced by the fabric's alpha/beta/gamma;
+* the **measured tuning table** (opt-in) -- wallclock microbenchmarks of
+  the real executor persisted by :mod:`repro.tuning`.  When tuning is
+  enabled and a measurement compatible with the running backend exists,
+  it wins; otherwise the model decides.  ``Choice.source`` records which
+  one answered.
+
+Enable measured tuning per call (``tune=True``), or globally with
+``REPRO_TUNING=1`` (``tune=None`` reads the env var); ``tune=False``
+forces the model.
 """
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass
 from functools import lru_cache
 from typing import Optional
 
 from .cost_model import (Fabric, TPU_V5E_ICI, choose_n_buckets,
-                         optimal_r_search, pipelined_schedule_cost,
-                         schedule_cost)
+                         pipelined_schedule_cost, schedule_cost)
 from .schedule import Schedule, build_generalized, build_ring, n_steps_log
 
 
@@ -22,17 +36,40 @@ from .schedule import Schedule, build_generalized, build_ring, n_steps_log
 class Choice:
     kind: str          # "generalized" | "ring"
     r: int
-    cost: float
+    cost: float        # modeled seconds, or measured seconds when tuned
     n_buckets: int = 1   # pipelined buckets for the ExecPlan executor
+    source: str = "model"  # "model" | "measured"
+
+
+def _tune_default() -> bool:
+    return os.environ.get("REPRO_TUNING", "").lower() in ("1", "true", "on")
+
+
+def choose(P: int, nbytes: int, fabric: Fabric = TPU_V5E_ICI,
+           allow_ring: bool = True, tune: Optional[bool] = None) -> Choice:
+    """Pick (kind, r, n_buckets) minimizing time for an allreduce of
+    ``nbytes`` over ``P`` devices.
+
+    With ``tune`` enabled (explicitly, or via ``REPRO_TUNING=1`` when
+    ``tune=None``) the measured tuning table is consulted first; it
+    answers only when it holds measurements taken on a backend whose
+    fingerprint matches this process (see :mod:`repro.tuning.policy`).
+    Everything else falls through to the analytic model.
+    """
+    if P <= 1:
+        return Choice("generalized", 0, 0.0)
+    if _tune_default() if tune is None else tune:
+        from repro.tuning import policy  # deferred: tuning sits above core
+        measured = policy.lookup(P, int(nbytes), allow_ring=allow_ring)
+        if measured is not None:
+            return measured
+    return _choose_model(P, int(nbytes), fabric, allow_ring)
 
 
 @lru_cache(maxsize=None)
-def choose(P: int, nbytes: int, fabric: Fabric = TPU_V5E_ICI,
-           allow_ring: bool = True) -> Choice:
-    """Pick (kind, r) minimizing modeled time for an allreduce of
-    ``nbytes`` over ``P`` devices."""
-    if P <= 1:
-        return Choice("generalized", 0, 0.0)
+def _choose_model(P: int, nbytes: int, fabric: Fabric,
+                  allow_ring: bool) -> Choice:
+    """Analytic pick from the exact schedule-derived cost model."""
     best: Optional[Choice] = None
     for r in range(n_steps_log(P) + 1):
         c = schedule_cost(build_generalized(P, r), nbytes, fabric)
@@ -50,6 +87,11 @@ def choose(P: int, nbytes: int, fabric: Fabric = TPU_V5E_ICI,
         best = Choice(best.kind, best.r,
                       pipelined_schedule_cost(sched, nbytes, fabric, b), b)
     return best
+
+
+def clear_cache() -> None:
+    """Drop memoized analytic picks (tests; after fabric/table changes)."""
+    _choose_model.cache_clear()
 
 
 def schedule_for(choice: Choice, P: int) -> Schedule:

@@ -24,10 +24,8 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Optional
 
-from .schedule import (Schedule, build_generalized, build_ring, max_r,
-                       n_steps_log)
+from .schedule import Schedule, build_generalized, build_ring, n_steps_log
 
 
 @dataclass(frozen=True)

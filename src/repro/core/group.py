@@ -24,7 +24,7 @@ permutation ``t_g``.  For the cyclic group this is ``(p + g) % P``.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from functools import lru_cache
 from typing import Sequence, Tuple
 

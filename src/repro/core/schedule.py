@@ -40,9 +40,9 @@ reduced chunk".
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from functools import lru_cache
-from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
+from typing import Dict, FrozenSet, List, Optional, Tuple
 
 from .group import CyclicGroup, HypercubeGroup, MixedRadixGroup
 
@@ -108,7 +108,7 @@ class Schedule:
 
     P: int
     group: MixedRadixGroup
-    kind: str                     # "generalized" | "ring" | "reduce_scatter" | "all_gather"
+    kind: str   # "generalized" | "ring" | "reduce_scatter" | "all_gather"
     r: int                        # removed distribution steps (generalized only)
     s: int                        # result multiplicity after reduction
     steps: Tuple[CommStep, ...]

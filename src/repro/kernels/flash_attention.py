@@ -74,9 +74,9 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
 
     @pl.when(jk == n_kv_blocks - 1)
     def _finish():
-        l = l_ref[...][:, :1]
-        l = jnp.where(l == 0.0, 1.0, l)
-        o_ref[0, ...] = (acc_ref[...] / l).astype(o_ref.dtype)
+        denom = l_ref[...][:, :1]
+        denom = jnp.where(denom == 0.0, 1.0, denom)
+        o_ref[0, ...] = (acc_ref[...] / denom).astype(o_ref.dtype)
 
 
 @functools.partial(

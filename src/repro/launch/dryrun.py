@@ -33,7 +33,6 @@ import re
 import sys
 import time
 import traceback
-from functools import partial
 
 
 def _cell_plan(arch: str, shape_name: str):

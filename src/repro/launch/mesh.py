@@ -46,7 +46,7 @@ def make_mesh(shape: Sequence[int], axes: Sequence[str],
 
 def parallel_config_for(mesh, *, param_mode: str = "fsdp",
                         grad_r=None, collective_impl: str = "xla",
-                        topology=None):
+                        topology=None, tuning: bool = False):
     """Derive the static ParallelConfig from a mesh.
 
     ``topology`` overrides the fabric hierarchy attached for gradient
@@ -56,6 +56,11 @@ def parallel_config_for(mesh, *, param_mode: str = "fsdp",
     alpha/beta/gamma from this topology -- not from the flat ``fabric``
     argument of the train-step builder, which only governs single-level
     DP meshes.
+
+    ``tuning=True`` opts gradient-sync schedule choice into the measured
+    tuning table (:mod:`repro.tuning`) populated by
+    ``python benchmarks/run.py tune``; without a compatible measurement
+    the analytic model still decides, so the flag is always safe.
     """
     from repro.parallel.api import ParallelConfig
     from repro.topology.fabric import v5e_multipod
@@ -74,4 +79,4 @@ def parallel_config_for(mesh, *, param_mode: str = "fsdp",
     return ParallelConfig(dp_axes=dp_axes, dp=dp, tp=tp,
                           param_mode=param_mode, grad_r=grad_r,
                           collective_impl=collective_impl,
-                          topology=topology)
+                          topology=topology, tuning=tuning)

@@ -8,7 +8,6 @@ Examples:
       --reduced --mesh 2x4 --rolling
 """
 import argparse
-import sys
 
 
 def main():
@@ -23,6 +22,9 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--rolling", action="store_true",
                     help="ring-buffer caches (long-context archs)")
+    ap.add_argument("--tuning", action="store_true",
+                    help="consult the measured tuning table "
+                         "(populate with `python benchmarks/run.py tune`)")
     args = ap.parse_args()
 
     import jax
@@ -38,7 +40,7 @@ def main():
     dims = tuple(int(x) for x in args.mesh.split("x"))
     mesh = make_mesh(dims, ("data", "model")[-len(dims):]
                      if len(dims) <= 2 else ("pod", "data", "model"))
-    pc = parallel_config_for(mesh, param_mode="dp")
+    pc = parallel_config_for(mesh, param_mode="dp", tuning=args.tuning)
     params, _ = init_params(cfg, pc, jax.random.PRNGKey(0))
     eng = Engine(cfg, pc, mesh, params, batch_slots=args.batch_slots,
                  max_len=args.max_len, rolling=args.rolling,

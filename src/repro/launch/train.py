@@ -22,8 +22,6 @@ Examples:
       --coordinator $COORD:8476 --num-processes 64 --process-id $ID
 """
 import argparse
-import os
-import sys
 
 
 def main():

@@ -7,8 +7,7 @@ VLM-backbone models.  Per-arch instances live in :mod:`repro.configs`.
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 
@@ -188,5 +187,6 @@ def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
     if not cfg.is_decoder and shape.kind == "decode":
         return False, "encoder-only arch has no decode step"
     if shape.name == "long_500k" and not cfg.subquadratic:
-        return False, "pure full-attention arch; 500k decode needs sub-quadratic attention"
+        return False, ("pure full-attention arch; 500k decode needs "
+                       "sub-quadratic attention")
     return True, ""

@@ -6,8 +6,7 @@ are the device-local shards; the companion ``ParamSpec`` tree (built in
 """
 from __future__ import annotations
 
-import math
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

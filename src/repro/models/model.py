@@ -14,23 +14,19 @@ body.
 from __future__ import annotations
 
 import math
-from dataclasses import replace
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax import lax
 
 from repro.models import moe as moe_lib
 from repro.models import recurrent as rec
-from repro.models.attention import (KVCache, attention_block, attn_replicated,
-                                    init_cache, kv_replicated,
-                                    local_kv_heads, local_q_heads)
+from repro.models.attention import (attention_block, attn_replicated,
+                                    init_cache, kv_replicated)
 from repro.models.config import ModelConfig
-from repro.models.layers import (COMPUTE_DTYPE, dense, embed_tokens,
-                                 mlp_apply, norm_apply, vocab_parallel_ce)
+from repro.models.layers import (COMPUTE_DTYPE, embed_tokens, mlp_apply,
+                                 norm_apply, vocab_parallel_ce)
 from repro.parallel.api import (ParallelConfig, ParamSpec, choose_fsdp_dim,
                                 fsdp_gather_tree, seq_all_gather,
                                 seq_reduce_scatter, tp_psum, tp_rank)

@@ -110,7 +110,6 @@ def moe_apply(p, xg, cfg, pc: ParallelConfig) -> Tuple[jnp.ndarray, jnp.ndarray]
     otherwise hold multiple GB live across the backward pass.  Capacity is
     per-chunk, which also bounds worst-case token dropping locality.
     """
-    m = cfg.moe
     B, S, d = xg.shape
     T = B * S
     x = xg.reshape(T, d)

@@ -27,8 +27,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.models.layers import COMPUTE_DTYPE, dense
-from repro.parallel.api import ParallelConfig, tp_rank
+from repro.models.layers import dense
+from repro.parallel.api import ParallelConfig
 
 
 # ===========================================================================

@@ -26,8 +26,7 @@ one cyclic group.
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple, Union
 
 import jax
@@ -57,6 +56,9 @@ class ParallelConfig:
     grad_group: str = "cyclic"     # cyclic | hypercube
     collective_impl: str = "xla"   # xla | group  (TP boundary collectives)
     topology: Optional[Topology] = None  # multi-level fabric of dp_axes
+    tuning: bool = False           # consult the measured tuning table
+    # (repro.tuning) for gradient-sync schedule choice; False = analytic
+    # cost model only
     remat: bool = True
     scan_layers: bool = True
     accum_dtype = jnp.float32
@@ -89,6 +91,9 @@ def dp_grad_allreduce(tree, pc: ParallelConfig, *, mean: bool = True,
     ``pc.grad_n_buckets`` pins the ExecPlan executor's pipelined bucket
     count (None = autotuned from the same fabric) and ``pc.grad_combine``
     its combine kernel routing ("auto" = Pallas combine_n on TPU).
+    ``pc.tuning`` opts the schedule choice into the measured tuning
+    table (:mod:`repro.tuning`): when a measurement taken on this
+    backend covers the gradient's size, it overrides the model's pick.
 
     NOTE on ``pc.grad_r``: on a flat mesh it tunes the schedule over the
     full DP size (range [0, max_r(dp)]); on a hierarchical mesh it pins
@@ -111,10 +116,11 @@ def dp_grad_allreduce(tree, pc: ParallelConfig, *, mean: bool = True,
         return hierarchical_allreduce(tree, pc.dp_axes, pc.topology,
                                       r=pc.grad_r, mean=mean,
                                       combine=pc.grad_combine,
-                                      n_buckets=pc.grad_n_buckets)
+                                      n_buckets=pc.grad_n_buckets,
+                                      tune=pc.tuning)
     return allreduce_tree(tree, pc.dp_axis_name, mean=mean, r=pc.grad_r,
                           fabric=fabric, combine=pc.grad_combine,
-                          n_buckets=pc.grad_n_buckets)
+                          n_buckets=pc.grad_n_buckets, tune=pc.tuning)
 
 
 def tp_rank(pc: ParallelConfig):

@@ -21,8 +21,8 @@ reduce-scatter, zero protocol overhead.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Optional
+from dataclasses import dataclass
+from typing import Optional
 
 import jax
 import numpy as np

@@ -15,16 +15,14 @@ positions host-side and re-prefills individual slots.
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from dataclasses import dataclass, field, replace
+from typing import List, Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models.config import ModelConfig
-from repro.models.model import init_caches, init_params
+from repro.models.model import init_caches
 from repro.parallel.api import ParallelConfig
 from repro.train.step import make_serve_step
 
@@ -41,7 +39,13 @@ class Engine:
     def __init__(self, cfg: ModelConfig, pc: ParallelConfig, mesh, params, *,
                  batch_slots: int = 4, max_len: int = 256,
                  rolling: bool = False, prefill_chunk: int = 32,
-                 temperature: float = 0.0, seed: int = 0):
+                 temperature: float = 0.0, seed: int = 0,
+                 tuning: Optional[bool] = None):
+        # ``tuning`` overrides pc.tuning for this engine: opt the serve
+        # step's collectives into the measured tuning table without
+        # rebuilding the ParallelConfig at every call site.
+        if tuning is not None and tuning != pc.tuning:
+            pc = replace(pc, tuning=tuning)
         self.cfg, self.pc, self.mesh = cfg, pc, mesh
         self.params = params
         self.B = batch_slots

@@ -79,7 +79,7 @@ class Topology:
     # ---- shape -----------------------------------------------------------
     @property
     def sizes(self) -> Tuple[int, ...]:
-        return tuple(l.size for l in self.levels)
+        return tuple(lv.size for lv in self.levels)
 
     @property
     def P(self) -> int:
@@ -100,7 +100,7 @@ class Topology:
 
     @property
     def inner_size(self) -> int:
-        return math.prod(l.size for l in self.inner) if self.inner else 1
+        return math.prod(lv.size for lv in self.inner) if self.inner else 1
 
     # ---- rank <-> coordinate maps ---------------------------------------
     def coords(self, rank: int) -> Tuple[int, ...]:
@@ -118,8 +118,8 @@ class Topology:
         return x
 
     def describe(self) -> str:
-        return " > ".join(f"{l.name}[{l.size}]@{l.fabric.name}"
-                          for l in self.levels)
+        return " > ".join(f"{lv.name}[{lv.size}]@{lv.fabric.name}"
+                          for lv in self.levels)
 
     def __repr__(self):  # pragma: no cover - cosmetic
         return f"Topology({self.describe()})"
@@ -134,9 +134,9 @@ def bottleneck_fabric(topo: Topology) -> Fabric:
     complete only when the slowest transfer lands -- so each step of a
     flat schedule is gated by the worst per-level latency and bandwidth.
     """
-    return Fabric(alpha=max(l.fabric.alpha for l in topo.levels),
-                  beta=max(l.fabric.beta for l in topo.levels),
-                  gamma=max(l.fabric.gamma for l in topo.levels),
+    return Fabric(alpha=max(lv.fabric.alpha for lv in topo.levels),
+                  beta=max(lv.fabric.beta for lv in topo.levels),
+                  gamma=max(lv.fabric.gamma for lv in topo.levels),
                   name=f"bottleneck({topo.name})")
 
 

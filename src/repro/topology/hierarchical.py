@@ -28,11 +28,11 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass
 from functools import lru_cache
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.cost_model import (Fabric, best_schedule, choose_n_buckets,
+from repro.core.cost_model import (best_schedule, choose_n_buckets,
                                    pipelined_schedule_cost, schedule_cost)
 from repro.core.schedule import (Schedule, build_all_gather,
                                  build_generalized, build_reduce_scatter,
@@ -220,8 +220,9 @@ class CollectivePlan:
 
     kind: str          # "flat-generalized" | "flat-ring" | "hierarchical"
     r: int             # flat r, or outer-level r for hierarchical
-    cost: float
+    cost: float        # modeled seconds, or measured seconds when tuned
     n_buckets: int = 1
+    source: str = "model"  # "model" | "measured"
 
 
 def best_flat_plan(topo: Topology, nbytes: float,
@@ -263,15 +264,40 @@ def best_hierarchical_plan(topo: Topology,
     return best
 
 
-@lru_cache(maxsize=None)
 def choose_collective(topo: Topology, nbytes: int,
-                      allow_ring: bool = True) -> CollectivePlan:
+                      allow_ring: bool = True,
+                      tune: Optional[bool] = None) -> CollectivePlan:
     """Pick the cheapest plan: flat (any r, optionally ring) over the
     bottleneck fabric vs hierarchical (any outer r) over per-level
     fabrics.  Single-level topologies always resolve to a flat plan
-    costed on their only fabric."""
+    costed on their only fabric.
+
+    With ``tune`` enabled (explicitly, or via ``REPRO_TUNING=1`` when
+    ``tune=None``) the measured tuning table is consulted first.  A
+    stored flat-allreduce measurement over ``topo.P`` devices is only a
+    like-for-like answer on a *single-level* topology, so that is the
+    case it covers; multi-level fabrics keep the per-level analytic
+    comparison until hierarchical compositions are measured end-to-end
+    (measurements of the flat executor say nothing about the per-level
+    reduce-scatter / allreduce / all-gather pipeline).
+    """
     if topo.P <= 1:
         return CollectivePlan("flat-generalized", 0, 0.0)
+    from repro.core.autotune import _tune_default
+    if (_tune_default() if tune is None else tune) and topo.n_levels == 1:
+        from repro.tuning import policy
+        measured = policy.lookup(topo.P, int(nbytes), allow_ring=allow_ring)
+        if measured is not None:
+            kind = "flat-ring" if measured.kind == "ring" \
+                else "flat-generalized"
+            return CollectivePlan(kind, measured.r, measured.cost,
+                                  measured.n_buckets, source="measured")
+    return _choose_collective_model(topo, nbytes, allow_ring)
+
+
+@lru_cache(maxsize=None)
+def _choose_collective_model(topo: Topology, nbytes: int,
+                             allow_ring: bool) -> CollectivePlan:
     best = best_flat_plan(topo, nbytes, allow_ring)
     hier = best_hierarchical_plan(topo, nbytes)
     if hier is not None and hier.cost < best.cost:

@@ -15,17 +15,15 @@ All modes share the same AdamW math.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from repro.core.allreduce import (all_gather_flat, allreduce_tree,
-                                  reduce_scatter_flat)
-from repro.core.cost_model import TPU_V5E_ICI
-from repro.parallel.api import ParallelConfig, ParamSpec
+from repro.core.allreduce import all_gather_flat
+from repro.parallel.api import ParallelConfig
 
 
 @dataclass(frozen=True)
@@ -65,7 +63,7 @@ def _adam_math(g, m, v, p, oc: OptConfig, lr, bc1, bc2):
 # ---------------------------------------------------------------------------
 
 def _flat_size(params) -> int:
-    return sum(int(jnp.size(l)) for l in jax.tree.leaves(params))
+    return sum(int(jnp.size(leaf)) for leaf in jax.tree.leaves(params))
 
 
 def _padded_chunk(n: int, dp: int) -> int:
@@ -74,16 +72,17 @@ def _padded_chunk(n: int, dp: int) -> int:
 
 def flatten_params(params):
     leaves = jax.tree.leaves(params)
-    return jnp.concatenate([l.reshape(-1).astype(jnp.float32)
-                            for l in leaves])
+    return jnp.concatenate([leaf.reshape(-1).astype(jnp.float32)
+                            for leaf in leaves])
 
 
 def unflatten_like(flat, params):
     leaves, treedef = jax.tree.flatten(params)
     out, off = [], 0
-    for l in leaves:
-        n = int(jnp.size(l))
-        out.append(flat[off:off + n].reshape(l.shape).astype(l.dtype))
+    for leaf in leaves:
+        n = int(jnp.size(leaf))
+        out.append(flat[off:off + n].reshape(leaf.shape)
+                   .astype(leaf.dtype))
         off += n
     return jax.tree.unflatten(treedef, out)
 
@@ -142,8 +141,8 @@ def clip_by_global_norm(grads, oc: OptConfig, sq_psum_axes=None):
     """
     if oc.grad_clip is None:
         return grads
-    sumsq = sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
-                for l in jax.tree.leaves(grads))
+    sumsq = sum(jnp.sum(jnp.square(leaf.astype(jnp.float32)))
+                for leaf in jax.tree.leaves(grads))
     if sq_psum_axes:
         sumsq = lax.psum(sumsq, sq_psum_axes)
     norm = jnp.sqrt(sumsq)

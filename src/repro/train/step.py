@@ -21,11 +21,10 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
@@ -188,9 +187,10 @@ def make_train_step(cfg: ModelConfig, pc: ParallelConfig, mesh: Mesh,
             # accumulated grad is a sum of per-microbatch means
             grads = jax.tree.map(lambda g: g / microbatches, grads)
             aux = aux / microbatches
-            loss = total / jnp.maximum(count.astype(jnp.float32), 1.0)
         else:
-            (loss, (total, count, aux)), grads = grad_of(params, batch)
+            # the per-device loss is discarded: metrics recompute the
+            # global mean from the psum'd (total, count) below
+            (_loss, (total, count, aux)), grads = grad_of(params, batch)
         grads = sync_grads_tp(grads, specs, pc)
         grads = sync_grads_dp(grads, specs, pc, fabric)
         if pc.param_mode == "dp":

@@ -1,0 +1,41 @@
+"""Measured autotuning: a persistent, fingerprint-keyed tuning database.
+
+The analytic alpha-beta-gamma model predicts which schedule wins; this
+subsystem *measures* it and remembers the answer:
+
+* :mod:`~repro.tuning.measure` -- interleaved microbenchmarks over the
+  candidate grid (schedule kind x r x n_buckets x message size);
+* :mod:`~repro.tuning.cache` -- the versioned on-disk JSON table, keyed
+  by a backend fingerprint, with atomic writes and corrupt-file recovery
+  (location override: ``REPRO_TUNING_CACHE``);
+* :mod:`~repro.tuning.policy` -- lookups with nearest-size interpolation;
+  returns ``None`` (= fall back to the model) when nothing compatible is
+  measured.
+
+Opt in per call (``choose(..., tune=True)``), per run
+(``ParallelConfig(tuning=True)``), or globally (``REPRO_TUNING=1``).
+Populate the table with ``python benchmarks/run.py tune [--smoke]``.
+"""
+
+from .cache import (
+    Fingerprint,
+    Measurement,
+    TuningCache,
+    current_fingerprint,
+    default_cache_path,
+)
+from .measure import candidate_grid, run_tuning
+from .policy import best_measured, invalidate, lookup
+
+__all__ = [
+    "Fingerprint",
+    "Measurement",
+    "TuningCache",
+    "best_measured",
+    "candidate_grid",
+    "current_fingerprint",
+    "default_cache_path",
+    "invalidate",
+    "lookup",
+    "run_tuning",
+]

@@ -1,0 +1,206 @@
+"""Persistent on-disk tuning cache.
+
+One JSON file holds every measurement this machine has ever taken, grouped
+under a *backend fingerprint* (platform, device kind/count, jax version,
+package version).  A measurement taken on 8 forced-host CPU devices under
+jax 0.4.37 says nothing about a v5e pod under jax 0.6, so lookups only see
+entries whose fingerprint matches the running backend exactly; stale
+entries are kept on disk (they become live again when the matching backend
+returns) but never consulted.
+
+File handling rules:
+
+* **location** -- ``REPRO_TUNING_CACHE`` env var when set, else
+  ``$XDG_CACHE_HOME/repro-allreduce/tuning.json`` (``~/.cache`` fallback);
+* **atomic writes** -- serialized to a temp file in the same directory and
+  ``os.replace``d into place, so readers never observe a half-written
+  table;
+* **corrupt-file recovery** -- a truncated / garbage / wrong-schema file
+  is moved aside to ``<path>.corrupt`` and treated as empty instead of
+  raising; tuning degrades to the analytic model, it never breaks a run.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from dataclasses import asdict, dataclass, field
+from pathlib import Path
+from typing import Dict, List, Optional
+
+SCHEMA_VERSION = 1
+
+
+def _package_version() -> str:
+    try:
+        from importlib.metadata import version
+
+        return version("repro-allreduce")
+    except Exception:
+        return "unknown"
+
+
+@dataclass(frozen=True)
+class Fingerprint:
+    """Identity of the backend a measurement was taken on."""
+
+    platform: str
+    device_kind: str
+    device_count: int
+    jax_version: str
+    package_version: str
+
+    def key(self) -> str:
+        return (
+            f"{self.platform}|{self.device_kind}|{self.device_count}"
+            f"|{self.jax_version}|{self.package_version}"
+        )
+
+
+def current_fingerprint() -> Fingerprint:
+    """Fingerprint of the running backend (jax-free fallback: ``nojax``)."""
+    try:
+        import jax
+
+        devs = jax.devices()
+        return Fingerprint(
+            platform=jax.default_backend(),
+            device_kind=devs[0].device_kind if devs else "unknown",
+            device_count=len(devs),
+            jax_version=jax.__version__,
+            package_version=_package_version(),
+        )
+    except Exception:
+        return Fingerprint(
+            platform="nojax",
+            device_kind="none",
+            device_count=0,
+            jax_version="none",
+            package_version=_package_version(),
+        )
+
+
+def default_cache_path() -> Path:
+    env = os.environ.get("REPRO_TUNING_CACHE")
+    if env:
+        return Path(env)
+    base = os.environ.get("XDG_CACHE_HOME") or os.path.join(
+        os.path.expanduser("~"), ".cache"
+    )
+    return Path(base) / "repro-allreduce" / "tuning.json"
+
+
+@dataclass(frozen=True)
+class Measurement:
+    """One timed candidate: schedule family x pipelining x message size."""
+
+    P: int
+    nbytes: int
+    kind: str  # "generalized" | "ring"
+    r: int
+    n_buckets: int
+    us: float  # best-of-reps wallclock per call
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Measurement":
+        return cls(
+            P=int(d["P"]),
+            nbytes=int(d["nbytes"]),
+            kind=str(d["kind"]),
+            r=int(d["r"]),
+            n_buckets=int(d["n_buckets"]),
+            us=float(d["us"]),
+        )
+
+
+@dataclass
+class TuningCache:
+    """In-memory view of the on-disk tuning table."""
+
+    entries: Dict[str, dict] = field(default_factory=dict)
+    path: Optional[Path] = None
+
+    # ------------------------------------------------------------ loading
+    @classmethod
+    def load(cls, path: Optional[os.PathLike] = None) -> "TuningCache":
+        """Load the cache at ``path`` (default: :func:`default_cache_path`).
+
+        Any failure to read a well-formed schema-compatible table -- the
+        file missing, truncated, non-JSON, or written by a different
+        schema version -- yields an *empty* cache; corrupt files are moved
+        aside to ``<path>.corrupt`` so the next save starts clean.
+        """
+        p = Path(path) if path is not None else default_cache_path()
+        if not p.exists():
+            return cls(path=p)
+        try:
+            with open(p) as f:
+                raw = json.load(f)
+            if not isinstance(raw, dict) or raw.get("version") != SCHEMA_VERSION:
+                raise ValueError(f"unsupported tuning-cache schema in {p}")
+            entries = raw["entries"]
+            for ent in entries.values():
+                Fingerprint(**ent["fingerprint"])  # validate shape
+                for m in ent["measurements"]:
+                    Measurement.from_dict(m)
+        except Exception:
+            _quarantine(p)
+            return cls(path=p)
+        return cls(entries=entries, path=p)
+
+    # ------------------------------------------------------------ writing
+    def record(self, fp: Fingerprint, meas: Measurement) -> None:
+        """Insert/overwrite one measurement under ``fp``.
+
+        Re-measuring the same candidate at the same size replaces the old
+        number -- the table keeps one (latest) figure per grid point.
+        """
+        ent = self.entries.setdefault(
+            fp.key(), {"fingerprint": asdict(fp), "measurements": []}
+        )
+        ident = (meas.P, meas.nbytes, meas.kind, meas.r, meas.n_buckets)
+        ent["measurements"] = [
+            m
+            for m in ent["measurements"]
+            if (m["P"], m["nbytes"], m["kind"], m["r"], m["n_buckets"]) != ident
+        ]
+        ent["measurements"].append(asdict(meas))
+
+    def save(self, path: Optional[os.PathLike] = None) -> Path:
+        """Atomically write the table (temp file + ``os.replace``)."""
+        p = Path(path) if path is not None else (self.path or default_cache_path())
+        p.parent.mkdir(parents=True, exist_ok=True)
+        payload = {"version": SCHEMA_VERSION, "entries": self.entries}
+        fd, tmp = tempfile.mkstemp(dir=p.parent, prefix=p.name, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(payload, f, indent=1, sort_keys=True)
+            os.replace(tmp, p)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+        return p
+
+    # ------------------------------------------------------------ queries
+    def lookup(self, fp: Fingerprint, P: int) -> List[Measurement]:
+        """All measurements for ``P`` devices under exactly ``fp``."""
+        ent = self.entries.get(fp.key())
+        if ent is None:
+            return []
+        out = [Measurement.from_dict(m) for m in ent["measurements"]]
+        return [m for m in out if m.P == P]
+
+    @property
+    def n_measurements(self) -> int:
+        return sum(len(e["measurements"]) for e in self.entries.values())
+
+
+def _quarantine(p: Path) -> None:
+    try:
+        os.replace(p, p.with_suffix(p.suffix + ".corrupt"))
+    except OSError:
+        pass

@@ -1,0 +1,197 @@
+"""Measured autotuning: time the candidate grid on the running backend.
+
+The analytic model ranks schedules; this module *times* them.  For each
+message-size bucket it jits every candidate ``(kind, r, n_buckets)`` as
+the same shard_map ppermute program the real executor runs, verifies it
+against ``lax.psum`` once, and times all candidates interleaved
+round-robin (best-of-``reps``), so machine-load drift hits every
+candidate equally -- the timing discipline of
+``benchmarks/executor_worker.py``.  Results are recorded into the
+persistent :class:`~repro.tuning.cache.TuningCache` under the running
+backend's fingerprint and summarized into a JSON payload for
+``results/tuning.json``.
+
+Requires more than one jax device in-process; the CLI driver
+(``benchmarks/run.py tune``) spawns a worker with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` for that.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import asdict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.autotune import choose
+from repro.core.cost_model import HOST_CPU, Fabric
+from repro.core.schedule import build_generalized, build_ring, max_r
+
+from .cache import Measurement, TuningCache, current_fingerprint
+
+Candidate = Tuple[str, int, int]  # (kind, r, n_buckets)
+
+# candidates whose per-bucket chunk would shrink below this are skipped:
+# dispatch overhead dominates and the measurement is pure noise
+MIN_BUCKET_CHUNK_BYTES = 8 * 1024
+
+SMOKE_SIZES: Sequence[Tuple[str, int]] = (
+    ("64KiB", 64 << 10),
+    ("256KiB", 256 << 10),
+)
+FULL_SIZES: Sequence[Tuple[str, int]] = (
+    ("64KiB", 64 << 10),
+    ("256KiB", 256 << 10),
+    ("1MiB", 1 << 20),
+    ("4MiB", 4 << 20),
+)
+
+
+def candidate_grid(P: int, nbytes: int, *, smoke: bool = False) -> List[Candidate]:
+    """Schedule kind x r x n_buckets grid for one message size."""
+    buckets = (1, 2) if smoke else (1, 2, 4)
+    kinds: List[Tuple[str, int]] = [("generalized", r) for r in range(max_r(P) + 1)]
+    kinds.append(("ring", 0))
+    grid = []
+    for kind, r in kinds:
+        for b in buckets:
+            if b > 1 and nbytes / P / b < MIN_BUCKET_CHUNK_BYTES:
+                continue
+            grid.append((kind, r, b))
+    return grid
+
+
+def _schedule(kind: str, P: int, r: int):
+    return build_ring(P) if kind == "ring" else build_generalized(P, r)
+
+
+def _bench_interleaved(variants: Dict[str, object], x, iters: int, reps: int):
+    """{name: best_us_per_call} with round-robin repetitions."""
+    import jax
+
+    for fn in variants.values():
+        jax.block_until_ready(fn(x))  # warm-up / compile
+    best = {name: float("inf") for name in variants}
+    for _ in range(reps):
+        for name, fn in variants.items():
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                out = fn(x)
+            jax.block_until_ready(out)
+            best[name] = min(best[name], (time.perf_counter() - t0) / iters * 1e6)
+    return best
+
+
+def run_tuning(
+    *,
+    smoke: bool = False,
+    out: Optional[str] = None,
+    cache_path: Optional[os.PathLike] = None,
+    model_fabric: Fabric = HOST_CPU,
+    iters: Optional[int] = None,
+    reps: int = 3,
+) -> dict:
+    """Measure the grid, update the persistent cache, return the summary.
+
+    ``out`` additionally writes the summary JSON (``results/tuning.json``).
+    ``model_fabric`` is only used to report the analytic model's pick next
+    to the measured winner -- measurements never depend on it.
+    """
+    import json
+
+    import jax
+    import numpy as np
+    from jax import lax
+    from jax.sharding import PartitionSpec as P_
+
+    from repro.compat import shard_map
+    from repro.core.allreduce import allreduce_flat
+
+    n = len(jax.devices())
+    if n < 2:
+        raise RuntimeError(
+            "measured tuning needs >= 2 devices; launch via "
+            "'python benchmarks/run.py tune' which forces 8 host devices"
+        )
+    mesh = jax.make_mesh((n,), ("data",))
+    rng = np.random.default_rng(0)
+    sizes = SMOKE_SIZES if smoke else FULL_SIZES
+    iters = iters if iters is not None else (2 if smoke else 5)
+
+    def jit_collective(fn):
+        return jax.jit(
+            shard_map(
+                lambda v: fn(v[0])[None],
+                mesh=mesh,
+                in_specs=P_("data", None),
+                out_specs=P_("data", None),
+            )
+        )
+
+    fp = current_fingerprint()
+    cache = TuningCache.load(cache_path)
+    results = []
+    for label, nbytes in sizes:
+        m = nbytes // 4
+        x = rng.standard_normal((n, m)).astype(np.float32)
+        grid = candidate_grid(n, nbytes, smoke=smoke)
+        variants = {}
+        for kind, r, b in grid:
+            sched = _schedule(kind, n, r)
+            variants[(kind, r, b)] = jit_collective(
+                lambda v, s=sched, nb=b: allreduce_flat(v, "data", s, n_buckets=nb)
+            )
+        ref = np.asarray(jit_collective(lambda v: lax.psum(v, "data"))(x))[0]
+        for name, fn in variants.items():
+            np.testing.assert_allclose(
+                np.asarray(fn(x))[0],
+                ref,
+                rtol=1e-5,
+                atol=1e-5,
+                err_msg=f"candidate {name} disagrees with psum",
+            )
+        timed = _bench_interleaved(variants, x, iters, reps)
+        meas_rows = []
+        for (kind, r, b), us in sorted(timed.items(), key=lambda kv: kv[1]):
+            meas = Measurement(P=n, nbytes=nbytes, kind=kind, r=r, n_buckets=b, us=us)
+            cache.record(fp, meas)
+            meas_rows.append(asdict(meas))
+            print(f"tune,{label},{kind},r={r},b={b},{us:.1f}")
+        win = meas_rows[0]
+        model = choose(n, nbytes, model_fabric, tune=False)
+        results.append(
+            {
+                "label": label,
+                "bytes": nbytes,
+                "measured_winner": {
+                    k: win[k] for k in ("kind", "r", "n_buckets", "us")
+                },
+                "model_pick": {
+                    "kind": model.kind,
+                    "r": model.r,
+                    "n_buckets": model.n_buckets,
+                    "model_us": round(model.cost * 1e6, 1),
+                },
+                "measurements": meas_rows,
+            }
+        )
+    saved = cache.save(cache_path)
+    payload = {
+        "fingerprint": asdict(fp),
+        "mode": "smoke" if smoke else "full",
+        "model_fabric": model_fabric.name,
+        "cache_path": str(saved),
+        "notes": (
+            "best-of-reps interleaved wallclock per call; candidates are the "
+            "executor's own jitted shard_map programs, verified against "
+            "lax.psum before timing. The cache keeps one figure per "
+            "(fingerprint, P, size, kind, r, n_buckets) grid point."
+        ),
+        "results": results,
+    }
+    if out:
+        os.makedirs(os.path.dirname(os.path.abspath(out)), exist_ok=True)
+        with open(out, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"tune,WROTE,{out}")
+    return payload

@@ -1,0 +1,131 @@
+"""Answer ``choose()``-style queries from the measured tuning table.
+
+The policy layer is the read side of the tuning subsystem: given (P,
+message size) it returns the measured-fastest ``Choice`` for the *running
+backend*, or ``None`` when no compatible measurement exists -- the caller
+(:func:`repro.core.autotune.choose`) then falls back to the analytic
+alpha-beta-gamma model.  "Compatible" means the cache entry's backend
+fingerprint matches :func:`~repro.tuning.cache.current_fingerprint`
+exactly and the requested size sits within (or near) the measured range.
+
+Size handling is nearest-size interpolation: costs for each candidate
+``(kind, r, n_buckets)`` are interpolated log-linearly in message size
+between the two bracketing measured sizes; outside the measured range the
+nearest endpoint is used, but only up to a factor of
+``MAX_EXTRAPOLATION_RATIO`` -- a 64 KiB measurement is not allowed to
+decide a 1 GiB allreduce.
+"""
+
+from __future__ import annotations
+
+import math
+import os
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.autotune import Choice
+
+from .cache import (
+    Fingerprint,
+    Measurement,
+    TuningCache,
+    current_fingerprint,
+    default_cache_path,
+)
+
+# beyond this ratio between the requested and the nearest measured size,
+# the table is considered to have no opinion and the model decides
+MAX_EXTRAPOLATION_RATIO = 4.0
+
+# (path, mtime_ns, size) -> TuningCache; reloads automatically when the
+# file changes (e.g. after `benchmarks/run.py tune` repopulates it)
+_loaded: Dict[Tuple[str, int, int], TuningCache] = {}
+_fingerprint: Optional[Fingerprint] = None
+
+
+def invalidate() -> None:
+    """Drop every in-process cache (tests / after re-measuring)."""
+    _loaded.clear()
+    global _fingerprint
+    _fingerprint = None
+    from repro.core import autotune
+
+    autotune.clear_cache()
+
+
+def _cached_fingerprint() -> Fingerprint:
+    global _fingerprint
+    if _fingerprint is None:
+        _fingerprint = current_fingerprint()
+    return _fingerprint
+
+
+def _load(path: Optional[os.PathLike]) -> TuningCache:
+    p = str(path) if path is not None else str(default_cache_path())
+    try:
+        st = os.stat(p)
+        key = (p, st.st_mtime_ns, st.st_size)
+    except OSError:
+        key = (p, -1, -1)
+    cache = _loaded.get(key)
+    if cache is None:
+        _loaded.clear()  # at most one live table per process
+        cache = TuningCache.load(p)
+        _loaded[key] = cache
+    return cache
+
+
+def lookup(
+    P: int,
+    nbytes: int,
+    *,
+    allow_ring: bool = True,
+    fingerprint: Optional[Fingerprint] = None,
+    cache_path: Optional[os.PathLike] = None,
+) -> Optional[Choice]:
+    """Measured-fastest ``Choice`` for an allreduce of ``nbytes`` over
+    ``P`` devices, or ``None`` when the table has no compatible entry.
+    ``allow_ring=False`` honors the caller's schedule-family exclusion:
+    ring measurements are dropped before the argmin."""
+    if P <= 1:
+        return None
+    fp = fingerprint if fingerprint is not None else _cached_fingerprint()
+    meas = _load(cache_path).lookup(fp, P)
+    if not allow_ring:
+        meas = [m for m in meas if m.kind != "ring"]
+    if not meas:
+        return None
+    return best_measured(meas, nbytes)
+
+
+def best_measured(meas: List[Measurement], nbytes: int) -> Optional[Choice]:
+    """Nearest-size interpolation over a measurement list (one backend,
+    one P).  Exposed separately so tests can drive it without file I/O."""
+    if not meas or nbytes <= 0:
+        return None
+    sizes = sorted({m.nbytes for m in meas})
+    lo = max((s for s in sizes if s <= nbytes), default=None)
+    hi = min((s for s in sizes if s >= nbytes), default=None)
+    if lo is None:  # below the measured range: nearest is the smallest
+        if hi / nbytes > MAX_EXTRAPOLATION_RATIO:
+            return None
+        lo = hi
+    if hi is None:  # above the measured range: nearest is the largest
+        if nbytes / lo > MAX_EXTRAPOLATION_RATIO:
+            return None
+        hi = lo
+
+    at_lo = {(m.kind, m.r, m.n_buckets): m.us for m in meas if m.nbytes == lo}
+    at_hi = {(m.kind, m.r, m.n_buckets): m.us for m in meas if m.nbytes == hi}
+    best: Optional[Choice] = None
+    for cand in set(at_lo) | set(at_hi):
+        us_lo, us_hi = at_lo.get(cand), at_hi.get(cand)
+        if us_lo is not None and us_hi is not None and hi != lo:
+            t = (math.log(nbytes) - math.log(lo)) / (math.log(hi) - math.log(lo))
+            us = us_lo + (us_hi - us_lo) * min(max(t, 0.0), 1.0)
+        else:
+            us = us_lo if us_lo is not None else us_hi
+        cost = us * 1e-6
+        if best is None or cost < best.cost:
+            kind, r, n_buckets = cand
+            best = Choice(kind, r, cost, n_buckets, source="measured")
+    return best

@@ -10,7 +10,6 @@ assert "xla_force_host_platform_device_count" in os.environ.get("XLA_FLAGS", "")
     "must be launched with XLA_FLAGS=--xla_force_host_platform_device_count=N"
 
 import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
@@ -22,8 +21,7 @@ from repro.core.allreduce import (all_gather_flat, allreduce_flat,  # noqa: E402
                                   hierarchical_allreduce_flat, psum_tree,
                                   reduce_scatter_flat, tree_all_gather,
                                   tree_reduce_scatter)
-from repro.core.schedule import (build_all_gather, build_generalized,  # noqa: E402
-                                 build_reduce_scatter, build_ring, max_r)
+from repro.core.schedule import build_generalized, build_ring, max_r  # noqa: E402
 from repro.topology import Level, Topology, build_hierarchical  # noqa: E402
 from repro.topology.fabric import TPU_DCN  # noqa: E402
 from repro.core.cost_model import TPU_V5E_ICI  # noqa: E402

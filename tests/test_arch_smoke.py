@@ -7,7 +7,6 @@ import pytest
 
 from repro.configs import ARCHS, get_config, get_reduced
 from repro.launch.mesh import make_mesh
-from repro.models.config import SHAPES, shape_applicable
 from repro.models.model import init_caches, init_params
 from repro.parallel.api import ParallelConfig
 from repro.train.optimizer import OptConfig, init_opt_state

@@ -1,17 +1,15 @@
 """Cost model: closed forms (paper eqs 15/25/36/44/37) vs compiled schedules."""
-import math
 
 import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.core.cost_model import (Fabric, PAPER_10GE, optimal_r_analytic,
+from repro.core.cost_model import (PAPER_10GE, optimal_r_analytic,
                                    optimal_r_search, schedule_cost,
                                    tau_best_sota, tau_bw_optimal,
                                    tau_intermediate, tau_latency_optimal,
                                    tau_openmpi_policy, tau_recursive_doubling,
                                    tau_recursive_halving, tau_ring)
-from repro.core.schedule import (build_generalized, build_ring, max_r,
-                                 n_steps_log)
+from repro.core.schedule import build_generalized, max_r
 
 
 def test_closed_forms_match_paper_numbers():

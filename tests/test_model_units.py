@@ -3,7 +3,6 @@ RoPE, vocab-parallel CE, embeddings."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.models.config import ModelConfig, MoEConfig

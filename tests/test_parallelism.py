@@ -20,7 +20,8 @@ def _run(which: str, devices: int = 8, timeout: int = 1200):
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
     res = subprocess.run([sys.executable, _WORKER, which], env=env,
                          capture_output=True, text=True, timeout=timeout)
-    assert res.returncode == 0, f"{which} failed:\n{res.stdout[-4000:]}\n{res.stderr[-4000:]}"
+    assert res.returncode == 0, \
+        f"{which} failed:\n{res.stdout[-4000:]}\n{res.stderr[-4000:]}"
     assert "ALL-OK" in res.stdout
 
 

@@ -2,7 +2,6 @@
 serve engine, elastic runner (single device; multi-device elasticity is
 covered by examples/elastic_failover.py and test_parallelism)."""
 import os
-import shutil
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,7 @@ import numpy as np
 import pytest
 
 from repro.core.cost_model import TPU_V5E_ICI, schedule_cost
-from repro.core.schedule import build_generalized, build_ring, max_r
+from repro.core.schedule import max_r
 from repro.topology import (Level, MULTI_POD_2X256, Topology,
                             bottleneck_fabric, build_hierarchical,
                             choose_collective, flat_cost, gpu_cluster,

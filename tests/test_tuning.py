@@ -1,0 +1,306 @@
+"""Measured-autotuning subsystem: cache persistence, fingerprint gating,
+corrupt-file recovery, nearest-size interpolation, and the
+measurement-beats-model wiring of ``autotune.choose``."""
+
+import json
+
+import pytest
+
+from repro.core.autotune import choose
+from repro.core.cost_model import HOST_CPU
+from repro.tuning import (
+    Fingerprint,
+    Measurement,
+    TuningCache,
+    best_measured,
+    current_fingerprint,
+    policy,
+)
+from repro.tuning import cache as cache_mod
+
+FP = Fingerprint(
+    platform="cpu",
+    device_kind="cpu",
+    device_count=8,
+    jax_version="0.0.test",
+    package_version="0.0.test",
+)
+OTHER_FP = Fingerprint(
+    platform="tpu",
+    device_kind="v5e",
+    device_count=256,
+    jax_version="0.0.test",
+    package_version="0.0.test",
+)
+
+
+def meas(nbytes, kind, r, b, us, P=8):
+    return Measurement(P=P, nbytes=nbytes, kind=kind, r=r, n_buckets=b, us=us)
+
+
+@pytest.fixture
+def tuned_env(tmp_path, monkeypatch):
+    """Point the tuning subsystem at a throwaway cache file and reset all
+    in-process caches on entry and exit."""
+    path = tmp_path / "tuning.json"
+    monkeypatch.setenv("REPRO_TUNING_CACHE", str(path))
+    monkeypatch.delenv("REPRO_TUNING", raising=False)
+    policy.invalidate()
+    yield path
+    policy.invalidate()
+
+
+# ---------------------------------------------------------------------------
+#  cache persistence
+# ---------------------------------------------------------------------------
+
+
+def test_cache_roundtrip(tuned_env):
+    c = TuningCache.load(tuned_env)
+    c.record(FP, meas(1 << 20, "generalized", 1, 2, 123.4))
+    c.record(FP, meas(1 << 20, "ring", 0, 1, 456.7))
+    saved = c.save()
+    assert saved == tuned_env and tuned_env.exists()
+    # atomic write leaves no temp droppings
+    assert list(tuned_env.parent.glob("*.tmp")) == []
+
+    back = TuningCache.load(tuned_env)
+    assert back.n_measurements == 2
+    assert sorted(back.lookup(FP, 8), key=lambda m: m.us) == sorted(
+        c.lookup(FP, 8), key=lambda m: m.us
+    )
+
+
+def test_record_replaces_same_grid_point(tuned_env):
+    c = TuningCache.load(tuned_env)
+    c.record(FP, meas(1 << 20, "ring", 0, 1, 100.0))
+    c.record(FP, meas(1 << 20, "ring", 0, 1, 50.0))
+    assert c.n_measurements == 1
+    assert c.lookup(FP, 8)[0].us == 50.0
+
+
+def test_fingerprint_mismatch_invalidates(tuned_env):
+    c = TuningCache.load(tuned_env)
+    c.record(FP, meas(1 << 20, "ring", 0, 1, 100.0))
+    c.save()
+    back = TuningCache.load(tuned_env)
+    assert back.lookup(OTHER_FP, 8) == []
+    assert policy.lookup(8, 1 << 20, fingerprint=OTHER_FP) is None
+    assert policy.lookup(8, 1 << 20, fingerprint=FP) is not None
+
+
+@pytest.mark.parametrize(
+    "content",
+    [
+        "not json at all {",
+        '{"version": 1, "entries": {"x": {"fingerpr',  # truncated mid-write
+        '{"version": 99, "entries": {}}',  # future schema
+        '{"version": 1, "entries": {"k": {"fingerprint": {"bogus": 1},'
+        ' "measurements": []}}}',  # wrong shape
+        "[]",  # wrong top-level type
+    ],
+)
+def test_corrupt_cache_recovers_empty(tuned_env, content):
+    tuned_env.write_text(content)
+    c = TuningCache.load(tuned_env)
+    assert c.n_measurements == 0
+    # the corrupt file was quarantined, so the next save starts clean
+    assert not tuned_env.exists()
+    assert tuned_env.with_suffix(".json.corrupt").exists()
+    c.record(FP, meas(1 << 20, "ring", 0, 1, 1.0))
+    c.save()
+    assert TuningCache.load(tuned_env).n_measurements == 1
+
+
+def test_cache_version_field_written(tuned_env):
+    c = TuningCache.load(tuned_env)
+    c.record(FP, meas(1 << 20, "ring", 0, 1, 1.0))
+    c.save()
+    raw = json.loads(tuned_env.read_text())
+    assert raw["version"] == cache_mod.SCHEMA_VERSION
+
+
+# ---------------------------------------------------------------------------
+#  policy: nearest-size interpolation
+# ---------------------------------------------------------------------------
+
+
+def test_interpolation_picks_crossing_winner():
+    # candidate A wins at 64 KiB, candidate B wins at 4 MiB; the crossover
+    # sits between, so the interpolated argmin flips with the query size
+    rows = [
+        meas(64 << 10, "generalized", 3, 1, 10.0),
+        meas(4 << 20, "generalized", 3, 1, 500.0),
+        meas(64 << 10, "ring", 0, 1, 100.0),
+        meas(4 << 20, "ring", 0, 1, 120.0),
+    ]
+    small = best_measured(rows, 80 << 10)
+    big = best_measured(rows, 3 << 20)
+    assert (small.kind, small.r) == ("generalized", 3)
+    assert big.kind == "ring"
+    # measured cost is interpolated, not copied from an endpoint
+    mid = best_measured(rows, 512 << 10)
+    assert 10e-6 < mid.cost < 500e-6
+    assert mid.source == "measured"
+
+
+def test_extrapolation_bounded():
+    rows = [meas(64 << 10, "ring", 0, 1, 10.0)]
+    # within 4x of the only measured size: nearest measurement answers
+    assert best_measured(rows, 128 << 10) is not None
+    # far outside: the table has no opinion
+    assert best_measured(rows, 1 << 30) is None
+    assert best_measured(rows, 1 << 10) is None
+
+
+# ---------------------------------------------------------------------------
+#  choose() wiring: measurement-backed vs analytic fallback
+# ---------------------------------------------------------------------------
+
+
+def _flip_cache(path, nbytes=1 << 20):
+    """Write a synthetic cache whose winner differs from the model pick."""
+    model = choose(8, nbytes, HOST_CPU, tune=False)
+    flipped_kind = "ring" if model.kind != "ring" else "generalized"
+    flipped_r = 0 if model.kind != "ring" else 2
+    c = TuningCache.load(path)
+    fp = current_fingerprint()
+    for size in (nbytes // 4, nbytes * 4):
+        c.record(fp, meas(size, flipped_kind, flipped_r, 2, us=10.0))
+        c.record(fp, meas(size, model.kind, model.r, model.n_buckets, us=900.0))
+    c.save()
+    policy.invalidate()
+    return model, flipped_kind, flipped_r
+
+
+def test_synthetic_cache_flips_winner(tuned_env):
+    model, fkind, fr = _flip_cache(tuned_env)
+    tuned = choose(8, 1 << 20, HOST_CPU, tune=True)
+    assert tuned.source == "measured"
+    assert (tuned.kind, tuned.r, tuned.n_buckets) == (fkind, fr, 2)
+    assert (tuned.kind, tuned.r) != (model.kind, model.r)
+    # tune=False keeps the analytic answer
+    again = choose(8, 1 << 20, HOST_CPU, tune=False)
+    assert again.source == "model"
+    assert (again.kind, again.r) == (model.kind, model.r)
+
+
+def test_choose_falls_back_when_cache_empty(tuned_env):
+    assert not tuned_env.exists()
+    ch = choose(8, 1 << 20, HOST_CPU, tune=True)
+    assert ch.source == "model"
+
+
+def test_choose_falls_back_outside_measured_range(tuned_env):
+    _flip_cache(tuned_env)
+    far = choose(8, 1 << 30, HOST_CPU, tune=True)
+    assert far.source == "model"
+
+
+def test_allow_ring_respected_when_tuned(tuned_env):
+    # the cache says ring is fastest, but the caller excluded ring: the
+    # measured answer must honor the schedule-family restriction
+    c = TuningCache.load(tuned_env)
+    fp = current_fingerprint()
+    for size in (256 << 10, 4 << 20):
+        c.record(fp, meas(size, "ring", 0, 1, us=1.0))
+        c.record(fp, meas(size, "generalized", 1, 1, us=5.0))
+    c.save()
+    policy.invalidate()
+    ch = choose(8, 1 << 20, HOST_CPU, allow_ring=False, tune=True)
+    assert ch.source == "measured"
+    assert ch.kind == "generalized"
+    assert choose(8, 1 << 20, HOST_CPU, allow_ring=True, tune=True).kind == "ring"
+
+
+def test_env_var_opt_in(tuned_env, monkeypatch):
+    _flip_cache(tuned_env)
+    # default (no env, tune=None) stays analytic
+    assert choose(8, 1 << 20, HOST_CPU).source == "model"
+    monkeypatch.setenv("REPRO_TUNING", "1")
+    assert choose(8, 1 << 20, HOST_CPU).source == "measured"
+
+
+def test_choose_collective_consults_policy(tuned_env):
+    from repro.topology import MULTI_POD_2X256, choose_collective, v5e_pod
+
+    _flip_cache(tuned_env)
+    flat = choose_collective(v5e_pod(8), 1 << 20, tune=True)
+    assert flat.source == "measured"
+    assert flat.kind in ("flat-ring", "flat-generalized")
+    # the model's verdict is untouched without tuning
+    assert choose_collective(v5e_pod(8), 1 << 20, tune=False).source == "model"
+    # multi-level fabrics have no compatible flat measurement: model decides
+    hier = choose_collective(MULTI_POD_2X256, 1 << 20, tune=True)
+    assert hier.source == "model"
+
+
+def test_tuned_choice_executes_correctly(tuned_env, tmp_path):
+    """End to end: a measured Choice coming out of the cache drives the
+    real shard_map executor and still reduces correctly (2 forced host
+    devices; the synthetic cache pins an off-model candidate)."""
+    import os
+    import subprocess
+    import sys
+
+    import jax
+
+    from repro.tuning.cache import _package_version
+
+    fp = Fingerprint(
+        platform="cpu",
+        device_kind="cpu",
+        device_count=2,
+        jax_version=jax.__version__,
+        package_version=_package_version(),
+    )
+    c = TuningCache.load(tuned_env)
+    for size in (64 << 10, 1 << 20):
+        c.record(fp, meas(size, "ring", 0, 1, us=1.0, P=2))
+    c.save()
+
+    prog = """
+import numpy as np, jax, jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+from repro.compat import shard_map
+from repro.core.allreduce import allreduce_tree
+from repro.core.autotune import choose
+
+ch = choose(2, 256 << 10, tune=True)
+assert ch.source == "measured" and ch.kind == "ring", ch
+mesh = jax.make_mesh((2,), ("data",))
+x = np.random.default_rng(0).standard_normal((2, 65536)).astype(np.float32)
+fn = jax.jit(shard_map(
+    lambda v: allreduce_tree(v[0], "data", tune=True)[None],
+    mesh=mesh, in_specs=P("data", None), out_specs=P("data", None)))
+ref = jax.jit(shard_map(
+    lambda v: lax.psum(v, "data"), mesh=mesh,
+    in_specs=P("data", None), out_specs=P(None, None)))
+np.testing.assert_allclose(np.asarray(fn(x))[0], np.asarray(ref(x))[0],
+                           rtol=1e-6, atol=1e-6)
+print("TUNED_EXEC_OK")
+"""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["REPRO_TUNING_CACHE"] = str(tuned_env)
+    # the child doesn't go through pytest's pythonpath handling
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep + env.get("PYTHONPATH", "")
+    res = subprocess.run(
+        [sys.executable, "-c", prog], env=env, capture_output=True, text=True
+    )
+    assert res.returncode == 0, res.stderr[-4000:]
+    assert "TUNED_EXEC_OK" in res.stdout
+
+
+def test_measure_grid_prunes_tiny_buckets():
+    from repro.tuning import candidate_grid
+
+    grid = candidate_grid(8, 64 << 10, smoke=True)
+    assert all(b == 1 for _, _, b in grid)  # 8 KiB chunks: no pipelining
+    grid_big = candidate_grid(8, 4 << 20, smoke=False)
+    assert {b for _, _, b in grid_big} == {1, 2, 4}
+    kinds = {(k, r) for k, r, _ in grid_big}
+    assert ("ring", 0) in kinds and ("generalized", 0) in kinds
