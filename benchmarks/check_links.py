@@ -1,0 +1,98 @@
+"""CI markdown link checker for README.md and docs/.
+
+Offline by design (CI must not flake on the network): relative links are
+resolved against the containing file and must exist on disk, intra-file
+and cross-file ``#anchors`` must match a real heading (GitHub slug
+rules: lowercase, punctuation stripped, spaces to dashes), and
+``http(s)://`` / ``mailto:`` targets are only syntax-checked.  Exits 1
+listing every broken link.
+
+Usage (what the CI lint job runs):
+    python benchmarks/check_links.py README.md docs/*.md
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# [text](target) -- skipping images is unnecessary: their paths must
+# exist too.  Inline code spans are stripped first so `[i](x)` examples
+# in code do not count.
+LINK_RE = re.compile(r"\[[^\]\[]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+CODE_SPAN_RE = re.compile(r"`[^`]*`")
+FENCE_RE = re.compile(r"^(```|~~~)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: strip markup/punctuation, spaces to dashes."""
+    text = CODE_SPAN_RE.sub(lambda m: m.group(0)[1:-1], heading)
+    text = re.sub(r"[*_~]", "", text).strip().lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def markdown_lines(path: Path):
+    """Lines outside fenced code blocks."""
+    fenced = False
+    for line in path.read_text().splitlines():
+        if FENCE_RE.match(line.strip()):
+            fenced = not fenced
+            continue
+        if not fenced:
+            yield line
+
+
+def anchors_of(path: Path) -> set:
+    out = set()
+    for line in markdown_lines(path):
+        m = HEADING_RE.match(line)
+        if m:
+            out.add(github_slug(m.group(1)))
+    return out
+
+
+def check_file(path: Path) -> list:
+    errors = []
+    for line in markdown_lines(path):
+        for m in LINK_RE.finditer(CODE_SPAN_RE.sub("", line)):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            base, _, anchor = target.partition("#")
+            dest = (path.parent / base).resolve() if base else path
+            if base and not dest.is_relative_to(Path.cwd().resolve()):
+                # escapes the checkout (e.g. ../../actions badge URLs
+                # resolved by the GitHub web UI) -- not checkable offline
+                continue
+            if base and not dest.exists():
+                errors.append(f"{path}: broken link -> {target}")
+                continue
+            if anchor and dest.suffix == ".md":
+                if github_slug(anchor) not in anchors_of(dest):
+                    errors.append(f"{path}: missing anchor -> {target}")
+    return errors
+
+
+def main(argv=None) -> int:
+    paths = [Path(p) for p in (argv if argv is not None else sys.argv[1:])]
+    if not paths:
+        print("usage: check_links.py FILE.md [FILE.md ...]", file=sys.stderr)
+        return 2
+    errors = []
+    for p in paths:
+        if not p.exists():
+            errors.append(f"{p}: file not found")
+            continue
+        errors.extend(check_file(p))
+    for e in errors:
+        print(f"check_links,BROKEN,{e}", file=sys.stderr)
+    print(f"check_links,{len(paths)} files,"
+          f"{'FAIL' if errors else 'OK'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

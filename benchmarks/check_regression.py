@@ -22,7 +22,12 @@ envelope.  Override per-run with ``--tolerance`` or the
 Only labels (message sizes) present in BOTH files are compared -- the
 committed baseline is a full run, CI measures the smoke subset -- and at
 least one overlapping label is required, so a mis-wired gate fails loudly
-instead of green.
+instead of green.  The same rule protects the *ragged* executor path:
+once the committed baseline carries ragged datapoints (rows with
+``"ragged": true``, i.e. message sizes whose element count does not
+divide the device count), at least one ragged label must overlap with
+the current run -- a size-list edit cannot silently drop the
+exact-split path out of the gate.
 
 Usage (what CI runs):
     python benchmarks/run.py executor --smoke --out results/executor_smoke.json
@@ -40,6 +45,11 @@ import os
 import sys
 
 DEFAULT_KEYS = ("speedup_execplan", "speedup_pipelined")
+
+
+def is_ragged(row: dict) -> bool:
+    """Ragged datapoint: flagged by the worker (older files: none are)."""
+    return bool(row.get("ragged"))
 
 
 def load_rows(path: str) -> dict:
@@ -138,6 +148,20 @@ def main(argv=None) -> int:
             f"check_regression: no overlapping labels between "
             f"{args.current} ({sorted(current)}) and {args.baseline} "
             f"({sorted(baseline)}) -- gate is mis-wired",
+            file=sys.stderr,
+        )
+        return 2
+    # the baseline is the source of truth for what must stay gated: once
+    # it carries ragged datapoints, a current run with no overlapping
+    # ragged label (e.g. the ragged size silently dropped from the
+    # worker's size list) must fail, not pass
+    if any(is_ragged(r) for r in baseline.values()) and not any(
+        is_ragged(baseline[c["label"]]) for c in comparisons
+    ):
+        print(
+            "check_regression: the baseline carries ragged datapoints but "
+            "no ragged label overlaps with the current run -- the "
+            "exact-split executor path dropped out of the gate",
             file=sys.stderr,
         )
         return 2

@@ -139,11 +139,16 @@ def main():
     n = len(jax.devices())
     mesh = jax.make_mesh((n,), ("data",))
     rng = np.random.default_rng(0)
+    # "+36B" sizes are ragged (element count coprime with the 8 devices):
+    # the ExecPlan executor runs its native exact split there while the
+    # legacy baseline zero-pads, so these rows gate the ragged path.
     if args.smoke:
-        sizes = [("64KiB", 64 << 10), ("256KiB", 256 << 10)]
+        sizes = [("64KiB", 64 << 10), ("256KiB", 256 << 10),
+                 ("256KiB+36B", (256 << 10) + 36)]
         iters = 3
     else:
-        sizes = [("256KiB", 256 << 10), ("4MiB", 4 << 20),
+        sizes = [("256KiB", 256 << 10), ("256KiB+36B", (256 << 10) + 36),
+                 ("4MiB", 4 << 20), ("4MiB+36B", (4 << 20) + 36),
                  ("64MiB", 64 << 20)]
         iters = 5
 
@@ -156,7 +161,7 @@ def main():
     for label, nbytes in sizes:
         m = nbytes // 4
         x = rng.standard_normal((n, m)).astype(np.float32)
-        ch = choose(n, nbytes, HOST_CPU)
+        ch = choose(n, nbytes, HOST_CPU, itemsize=4)
         sched = schedule_for(ch, n)
         nb = max(2, ch.n_buckets)      # exercise the pipeline even if the
         # model's optimum degenerates to one bucket at this size
@@ -175,7 +180,7 @@ def main():
         for name in ("execplan", "pipelined"):
             np.testing.assert_allclose(np.asarray(variants[name](x))[0],
                                        ref, rtol=1e-6, atol=1e-6)
-        row = {"label": label, "bytes": nbytes,
+        row = {"label": label, "bytes": nbytes, "ragged": m % n != 0,
                "schedule": {"kind": ch.kind, "r": ch.r},
                "n_buckets": nb, "model_n_buckets": ch.n_buckets}
         timed = bench_interleaved(variants, x, iters)

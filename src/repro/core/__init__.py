@@ -10,16 +10,21 @@ Public API:
   allreduce    -- JAX shard_map executors (ppermute programs)
 """
 from .group import CyclicGroup, HypercubeGroup, MixedRadixGroup
-from .schedule import (InvalidScheduleError, Schedule, build_all_gather,
-                       build_generalized, build_reduce_scatter, build_ring,
-                       max_r, n_steps_log, schedule_summary)
+from .schedule import (InvalidScheduleError, Schedule, ShapeError,
+                       build_all_gather, build_generalized,
+                       build_reduce_scatter, build_ring, max_r, n_steps_log,
+                       ragged_offsets, ragged_sizes, ragged_step_units,
+                       schedule_summary)
 from .execplan import ExecPlan, compile_plan, simulate_plan
 from .cost_model import (Fabric, HOST_CPU, PAPER_10GE, TPU_V5E_ICI,
                          choose_n_buckets, optimal_r_analytic,
                          optimal_r_search, pipelined_schedule_cost,
+                         ragged_choose_n_buckets,
+                         ragged_pipelined_schedule_cost, ragged_schedule_cost,
                          schedule_cost, tau_best_sota, tau_bw_optimal,
                          tau_intermediate, tau_latency_optimal, tau_ring)
 from .allreduce import (all_gather_flat, allreduce_flat, allreduce_tree,
-                        hierarchical_allreduce, hierarchical_allreduce_flat,
-                        psum_tree, reduce_scatter_flat, tree_all_gather,
+                        exact_chunks, hierarchical_allreduce,
+                        hierarchical_allreduce_flat, psum_tree,
+                        reduce_scatter_flat, tree_all_gather,
                         tree_reduce_scatter)

@@ -50,6 +50,7 @@ by :func:`repro.topology.hierarchical.choose_collective`.
 from __future__ import annotations
 
 import math
+from functools import lru_cache
 from typing import (TYPE_CHECKING, Callable, List, Optional, Sequence,
                     Tuple, Union)
 
@@ -61,10 +62,12 @@ from jax import lax
 from repro import compat
 
 from .autotune import choose, schedule_for
-from .cost_model import Fabric, TPU_V5E_ICI, choose_n_buckets
+from .cost_model import (Fabric, TPU_V5E_ICI, choose_n_buckets,
+                         ragged_choose_n_buckets)
 from .execplan import ExecPlan, compile_plan, execute
-from .schedule import (Schedule, build_all_gather, build_generalized,
-                       build_reduce_scatter)
+from .schedule import (Schedule, ShapeError, build_all_gather,
+                       build_generalized, build_reduce_scatter,
+                       ragged_sizes)
 
 if TYPE_CHECKING:  # repro.topology is the layer above this one; importing
     # it at module scope would cycle through repro.core.__init__, so the
@@ -82,13 +85,92 @@ def axis_size(axis_name: AxisName) -> int:
     return compat.axis_size(axis_name)
 
 
-def _pad_to_chunks(x: jnp.ndarray, P: int):
+# ---------------------------------------------------------------------------
+#  ragged (exact-split) chunk plumbing
+# ---------------------------------------------------------------------------
+#  The balanced split of repro.core.schedule.ragged_sizes assigns chunk c
+#  exactly sizes[c] elements (never rounding m up to a multiple of P).
+#  ppermute rows must still be SPMD-uniform, so chunks share the physical
+#  width u_max = ceil(m / P) with a zero-filled tail; combines only pair
+#  rows holding the same chunk index per device, so the tails stay zero
+#  and the final gather extracts each chunk's exact valid prefix.  For
+#  divisible m every index table degenerates to a plain reshape.
+
+def _build_extract_index(sizes: Tuple[int, ...], w: int) -> np.ndarray:
+    idx = np.concatenate(
+        [c * w + np.arange(s, dtype=np.int64)
+         for c, s in enumerate(sizes)]) if sum(sizes) else \
+        np.zeros((0,), np.int64)
+    idx.setflags(write=False)
+    return idx
+
+
+_EXTRACT_CACHE_MAX_ELEMS = 1 << 20
+
+
+@lru_cache(maxsize=64)
+def _cached_extract_index(sizes: Tuple[int, ...], w: int) -> np.ndarray:
+    return _build_extract_index(sizes, w)
+
+
+def _ragged_extract_index(sizes: Tuple[int, ...], w: int) -> np.ndarray:
+    """(sum(sizes),) indices extracting each chunk's valid prefix from a
+    row-major ``(P, w)`` stacked buffer in chunk order.
+
+    Only the general (caller-provided, possibly unbalanced) allgatherv
+    path needs an index gather; the balanced split used everywhere else
+    goes through the reshape-based :func:`exact_chunks` /
+    :func:`_ragged_flatten`, which build no O(m) constants.  Caching is
+    capped per entry (vectors above ``_EXTRACT_CACHE_MAX_ELEMS`` are
+    rebuilt per call, never pinned) and by entry count; the worst-case
+    resident set is maxsize * cap * 8 bytes, not unbounded.
+    """
+    if sum(sizes) > _EXTRACT_CACHE_MAX_ELEMS:
+        return _build_extract_index(sizes, w)
+    return _cached_extract_index(sizes, w)
+
+
+def exact_chunks(x: jnp.ndarray, P: int):
+    """Split a flat vector into the ``(P, u_max)`` chunk buffer of the
+    balanced exact split (a plain reshape when ``P`` divides ``m``);
+    returns ``(chunks, m)``.  Public counterpart of
+    :func:`repro.core.schedule.ragged_sizes`: row ``c`` holds chunk
+    ``c``'s ``sizes[c]`` valid elements, zero-filled to the common
+    width.  Used by the executors here and by the zero1 optimizer to
+    slice parameters with the same geometry as their gradient shards.
+
+    The balanced split is two reshapes: the first ``rem = m % P`` chunks
+    are full rows of width ``u + 1``, the rest are rows of width ``u``
+    plus one zero column -- no O(m) gather or index constant.
+    """
     m = x.shape[0]
-    u = -(-m // P)
-    pad = u * P - m
-    if pad:
-        x = jnp.concatenate([x, jnp.zeros((pad,), x.dtype)])
-    return x.reshape(P, u), m
+    if m % P == 0 and m:
+        return x.reshape(P, m // P), m
+    u, rem = divmod(m, P)
+    w = u + 1                                   # ceil(m / P); rem >= 1
+    big = x[:rem * w].reshape(rem, w)
+    small = x[rem * w:].reshape(P - rem, u) if u else \
+        jnp.zeros((P - rem, 0), x.dtype)
+    small = jnp.concatenate(
+        [small, jnp.zeros((P - rem, 1), x.dtype)], axis=1)
+    return jnp.concatenate([big, small], axis=0), m
+
+
+def _ragged_flatten(stacked: jnp.ndarray, m: int) -> jnp.ndarray:
+    """Inverse of :func:`exact_chunks` for a ``(P, w)`` buffer whose rows
+    are reduced chunks in chunk order: exact ``(m,)`` concatenation
+    (again two reshapes -- the zero tails are sliced off, not gathered).
+    """
+    P, w = stacked.shape
+    if m == P * w:
+        return stacked.reshape(-1)
+    u, rem = divmod(m, P)
+    if w != u + 1:
+        raise ShapeError("_ragged_flatten: row width != ceil(m / P)",
+                         expected=u + 1, actual=w)
+    big = stacked[:rem].reshape(-1)
+    small = stacked[rem:, :u].reshape(-1)
+    return jnp.concatenate([big, small])
 
 
 def _lazy_init_rows(chunks: jnp.ndarray, plan: ExecPlan, d) -> List:
@@ -165,26 +247,33 @@ def allreduce_flat(x: jnp.ndarray, axis_name: AxisName,
                    n_buckets: int = 1) -> jnp.ndarray:
     """Generalized allreduce of a flat vector using a compiled schedule.
 
-    ``n_buckets`` pipelines the message across equal buckets (see module
-    docstring); ``combine`` selects the combine implementation ("auto",
-    "add", "pallas", or a binary callable).
+    Accepts **any** length: uneven sizes run natively on the balanced
+    exact split (chunk ``c`` carries ``sched.chunk_sizes(m)[c]``
+    elements; the physical rows share the width ``ceil(m / P)`` with
+    zero tails that the final gather drops).  ``n_buckets`` pipelines
+    the message across equal buckets (see module docstring); ``combine``
+    selects the combine implementation ("auto", "add", "pallas", or a
+    binary callable).
     """
     P = sched.P
-    assert P == axis_size(axis_name), (P, axis_name)
+    actual = axis_size(axis_name)
+    if P != actual:
+        raise ShapeError(f"schedule P != size of axis {axis_name!r}",
+                         expected=P, actual=actual)
     if P == 1:
         return x
     orig_dtype = x.dtype
     if accum_dtype is not None:
         x = x.astype(accum_dtype)
-    chunks, m = _pad_to_chunks(x, P)                       # (P, u)
+    chunks, m = exact_chunks(x, P)                        # (P, u_max)
     plan = compile_plan(sched)
     d = _linear_axis_index(axis_name)
     rows = _lazy_init_rows(chunks, plan, d)
     bucket_rows, u = _bucket_rows(rows, n_buckets)
     bucket_rows = execute(plan, bucket_rows, axis_name, combine=combine)
     rows = _merge_rows(bucket_rows, u)
-    out = _final_gather(rows, plan, d)                     # (P, u)
-    out = out.reshape(-1)[:m]
+    out = _final_gather(rows, plan, d)                     # (P, u_max)
+    out = _ragged_flatten(out, m)                          # exact (m,)
     return out.astype(orig_dtype)
 
 
@@ -195,19 +284,27 @@ def reduce_scatter_flat(x: jnp.ndarray, axis_name: AxisName,
                         n_buckets: int = 1) -> jnp.ndarray:
     """Reduction phase only: returns this device's fully reduced chunk.
 
-    Device d ends up owning chunk d (canonical place-0 layout).  The input
-    length must already be padded to a multiple of P.
+    Device d ends up owning chunk d (canonical place-0 layout).  Any
+    input length is accepted: under the balanced exact split device d's
+    chunk is ``x[offsets[d] : offsets[d] + sizes[d]]`` with ``sizes =
+    ragged_sizes(m, P)``; the returned buffer always has the physical
+    width ``ceil(m / P)``, zero-filled past the valid prefix on devices
+    whose chunk is one element short (for ``m`` divisible by ``P`` the
+    whole buffer is valid, exactly as before).  Use
+    :func:`all_gather_flat` with ``sizes=`` to reassemble exactly.
     """
     P = axis_size(axis_name)
     if sched is None:
         sched = build_reduce_scatter(P)
+    elif sched.P != P:
+        raise ShapeError(f"schedule P != size of axis {axis_name!r}",
+                         expected=sched.P, actual=P)
     if P == 1:
         return x
     orig_dtype = x.dtype
     if accum_dtype is not None:
         x = x.astype(accum_dtype)
-    assert x.shape[0] % P == 0, "reduce_scatter_flat needs padded input"
-    chunks = x.reshape(P, -1)
+    chunks, _ = exact_chunks(x, P)
     plan = compile_plan(sched)
     d = _linear_axis_index(axis_name)
     rows = _lazy_init_rows(chunks, plan, d)
@@ -222,21 +319,53 @@ def reduce_scatter_flat(x: jnp.ndarray, axis_name: AxisName,
 
 def all_gather_flat(chunk: jnp.ndarray, axis_name: AxisName,
                     sched: Optional[Schedule] = None, *,
-                    n_buckets: int = 1) -> jnp.ndarray:
+                    n_buckets: int = 1,
+                    sizes: Optional[Sequence[int]] = None) -> jnp.ndarray:
     """Distribution phase only: device d contributes chunk d, all devices
-    end with the concatenation of all chunks."""
+    end with the concatenation of all chunks.
+
+    ``sizes`` turns this into an exact **allgatherv**: entry d is the
+    valid prefix length of rank d's chunk (the physical rows stay
+    uniform at ``chunk.shape[0]``), and the result is the exact
+    ``sum(sizes)``-element concatenation of the prefixes -- the inverse
+    of a ragged :func:`reduce_scatter_flat` when ``sizes =
+    ragged_sizes(m, P)``.
+    """
     P = axis_size(axis_name)
     if sched is None:
         sched = build_all_gather(P)
+    elif sched.P != P:
+        raise ShapeError(f"schedule P != size of axis {axis_name!r}",
+                         expected=sched.P, actual=P)
+    if sizes is not None:
+        sizes = tuple(int(s) for s in sizes)
+        if len(sizes) != P:
+            raise ShapeError("all_gather_flat: sizes must have one entry "
+                             "per rank", expected=P, actual=len(sizes))
+        w = int(chunk.shape[0])
+        if sizes and (max(sizes) > w or min(sizes) < 0):
+            raise ShapeError("all_gather_flat: chunk valid prefix outside "
+                             f"the physical row width {w}",
+                             expected=f"0 <= size <= {w}",
+                             actual=(min(sizes), max(sizes)))
     if P == 1:
-        return chunk
+        return chunk if sizes is None else chunk[:sizes[0]]
     plan = compile_plan(sched)
     rows = [chunk] + [None] * (plan.n_slots - 1)
     bucket_rows, u = _bucket_rows(rows, n_buckets)
     bucket_rows = execute(plan, bucket_rows, axis_name)
     rows = _merge_rows(bucket_rows, u)
     d = _linear_axis_index(axis_name)
-    return _final_gather(rows, plan, d).reshape(-1)
+    out = _final_gather(rows, plan, d)                     # (P, w)
+    if sizes is None:
+        return out.reshape(-1)
+    total = sum(sizes)
+    w = int(out.shape[1])
+    if sizes == ragged_sizes(total, P) and \
+            (total == P * w or w == total // P + 1):
+        return _ragged_flatten(out, total)     # balanced: two reshapes
+    idx = _ragged_extract_index(sizes, w)      # general allgatherv
+    return jnp.take(out.reshape(-1), jnp.asarray(idx))
 
 
 # ---------------------------------------------------------------------------
@@ -290,16 +419,24 @@ def allreduce_tree(tree, axis_name: AxisName, *,
     if P == 1:
         return tree
     flat, spec = _flatten_tree(tree)
-    nbytes = flat.size * flat.dtype.itemsize
+    itemsize = int(flat.dtype.itemsize)
+    nbytes = flat.size * itemsize
     if r is None:
-        ch = choose(P, int(nbytes), fabric, tune=tune)
+        # raggedness is an *element*-count property: the executor splits
+        # elements, so the chooser needs the itemsize, not just bytes
+        ch = choose(P, int(nbytes), fabric, tune=tune, itemsize=itemsize)
         sched = schedule_for(ch, P)
         if n_buckets is None:
             n_buckets = ch.n_buckets
     else:
         sched = build_generalized(P, r)
         if n_buckets is None:
-            n_buckets = choose_n_buckets(sched, int(nbytes), fabric)
+            if flat.size % P:
+                n_buckets = ragged_choose_n_buckets(sched, int(nbytes),
+                                                    fabric,
+                                                    itemsize=itemsize)
+            else:
+                n_buckets = choose_n_buckets(sched, int(nbytes), fabric)
     out = allreduce_flat(flat, axis_name, sched, accum_dtype=accum_dtype,
                          combine=combine, n_buckets=n_buckets)
     if mean:
@@ -325,10 +462,15 @@ def hierarchical_allreduce_flat(x: jnp.ndarray, axis_names: Sequence[str],
     links and so profits most from comm/combine overlap.
     """
     topo = hs.topology
-    assert len(axis_names) == topo.n_levels, (axis_names, topo.describe())
+    if len(axis_names) != topo.n_levels:
+        raise ShapeError(f"axis names {axis_names!r} != levels of "
+                         f"{topo.describe()}", expected=topo.n_levels,
+                         actual=len(axis_names))
     for name, lvl in zip(axis_names, topo.levels):
-        assert compat.axis_size(name) == lvl.size, \
-            f"axis {name!r} size != topology level {lvl.name}[{lvl.size}]"
+        if compat.axis_size(name) != lvl.size:
+            raise ShapeError(f"axis {name!r} size != topology level "
+                             f"{lvl.name}", expected=lvl.size,
+                             actual=compat.axis_size(name))
     if topo.P == 1:
         return x
     orig_dtype = x.dtype
@@ -336,6 +478,13 @@ def hierarchical_allreduce_flat(x: jnp.ndarray, axis_names: Sequence[str],
         x = x.astype(accum_dtype)
     m = x.shape[0]
     inner = topo.inner_size
+    # The per-level composition is kept on the divisible layout: each
+    # inner reduce-scatter must hand the next level a chunk whose
+    # boundaries all ranks agree on, and chaining *balanced* ragged
+    # splits level-by-level would make the final all-gather's extraction
+    # depend on every intermediate width.  One explicit pad to the inner
+    # multiple (at most inner_size - 1 zeros) keeps the composition
+    # exact; the outer allreduce below is ragged-native regardless.
     mp = -(-m // inner) * inner
     if mp != m:
         x = jnp.concatenate([x, jnp.zeros((mp - m,), x.dtype)])
@@ -382,7 +531,8 @@ def hierarchical_allreduce(tree, axis_names: Sequence[str],
     flat, spec = _flatten_tree(tree)
     nbytes = flat.size * flat.dtype.itemsize
     if r is None:
-        plan = choose_collective(topology, int(nbytes), tune=tune)
+        plan = choose_collective(topology, int(nbytes), tune=tune,
+                                 itemsize=int(flat.dtype.itemsize))
         sched = schedules_for_plan(plan, topology)
         if n_buckets is None:
             n_buckets = plan.n_buckets
@@ -419,14 +569,13 @@ def psum_tree(tree, axis_name: AxisName, *, mean: bool = False):
 def tree_reduce_scatter(tree, axis_name: AxisName, *, mean: bool = False,
                         accum_dtype=jnp.float32):
     """Fuse a pytree into one buffer, reduce-scatter it, and return this
-    device's (padded_size/P,) shard plus the spec needed to reassemble."""
+    device's ``(ceil(size / P),)`` shard plus the spec needed to
+    reassemble.  The total size need not divide ``P``: the shard is the
+    exact ragged chunk of the balanced split, zero-filled past its valid
+    prefix (``ragged_sizes(size, P)[d]`` elements)."""
     P = axis_size(axis_name)
     flat, spec = _flatten_tree(tree)
     m = flat.shape[0]
-    u = -(-m // P)
-    pad = u * P - m
-    if pad:
-        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
     shard = reduce_scatter_flat(flat, axis_name, accum_dtype=accum_dtype)
     if mean and P > 1:
         shard = shard / P
@@ -434,7 +583,10 @@ def tree_reduce_scatter(tree, axis_name: AxisName, *, mean: bool = False,
 
 
 def tree_all_gather(shard, spec_m, axis_name: AxisName):
-    """Inverse of :func:`tree_reduce_scatter`."""
+    """Inverse of :func:`tree_reduce_scatter` (exact allgatherv: each
+    rank contributes only its ragged chunk's valid prefix)."""
     spec, m = spec_m
-    flat = all_gather_flat(shard, axis_name)
+    P = axis_size(axis_name)
+    flat = all_gather_flat(shard, axis_name,
+                           sizes=ragged_sizes(m, P) if P > 1 else None)
     return _unflatten_tree(flat[:m], spec)

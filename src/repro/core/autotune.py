@@ -28,7 +28,9 @@ from functools import lru_cache
 from typing import Optional
 
 from .cost_model import (Fabric, TPU_V5E_ICI, choose_n_buckets,
-                         pipelined_schedule_cost, schedule_cost)
+                         pipelined_schedule_cost, ragged_choose_n_buckets,
+                         ragged_pipelined_schedule_cost, ragged_schedule_cost,
+                         schedule_cost)
 from .schedule import Schedule, build_generalized, build_ring, n_steps_log
 
 
@@ -46,46 +48,83 @@ def _tune_default() -> bool:
 
 
 def choose(P: int, nbytes: int, fabric: Fabric = TPU_V5E_ICI,
-           allow_ring: bool = True, tune: Optional[bool] = None) -> Choice:
+           allow_ring: bool = True, tune: Optional[bool] = None,
+           itemsize: int = 1) -> Choice:
     """Pick (kind, r, n_buckets) minimizing time for an allreduce of
     ``nbytes`` over ``P`` devices.
+
+    ``itemsize`` is the element width in bytes: the executor splits
+    *elements*, so raggedness (and the exact ragged chunk geometry) is
+    decided by ``nbytes // itemsize`` -- an f32 message of 16394
+    elements is ragged over P=8 even though its 65576 bytes divide 8.
 
     With ``tune`` enabled (explicitly, or via ``REPRO_TUNING=1`` when
     ``tune=None``) the measured tuning table is consulted first; it
     answers only when it holds measurements taken on a backend whose
     fingerprint matches this process (see :mod:`repro.tuning.policy`).
     Everything else falls through to the analytic model.
+
+    >>> choose(8, 1 << 26, tune=False)      # big message: bandwidth-optimal
+    Choice(kind='generalized', r=0, cost=0.00235581024, n_buckets=2, \
+source='model')
+    >>> choose(8, 512, tune=False).r        # tiny message: latency-optimal
+    3
     """
     if P <= 1:
         return Choice("generalized", 0, 0.0)
     if _tune_default() if tune is None else tune:
         from repro.tuning import policy  # deferred: tuning sits above core
-        measured = policy.lookup(P, int(nbytes), allow_ring=allow_ring)
+        measured = policy.lookup(P, int(nbytes), allow_ring=allow_ring,
+                                 itemsize=max(int(itemsize), 1))
         if measured is not None:
             return measured
-    return _choose_model(P, int(nbytes), fabric, allow_ring)
+    return _choose_model(P, int(nbytes), fabric, allow_ring,
+                         max(int(itemsize), 1))
 
 
 @lru_cache(maxsize=None)
 def _choose_model(P: int, nbytes: int, fabric: Fabric,
-                  allow_ring: bool) -> Choice:
-    """Analytic pick from the exact schedule-derived cost model."""
+                  allow_ring: bool, itemsize: int = 1) -> Choice:
+    """Analytic pick from the exact schedule-derived cost model.
+
+    For a message whose *element count* (``nbytes // itemsize``) does
+    not divide ``P`` the candidates are priced by the ragged cost (true
+    per-device moved bytes of the balanced exact split, see
+    :func:`repro.core.cost_model.ragged_schedule_cost`) instead of the
+    uniform ``m / P`` approximation, so badly-divisible sizes can
+    legitimately flip the winner.
+    """
+    ragged = (nbytes // itemsize) % P != 0
     best: Optional[Choice] = None
     for r in range(n_steps_log(P) + 1):
-        c = schedule_cost(build_generalized(P, r), nbytes, fabric)
+        s = build_generalized(P, r)
+        c = (ragged_schedule_cost(s, nbytes, fabric, itemsize) if ragged
+             else schedule_cost(s, nbytes, fabric))
         if best is None or c < best.cost:
             best = Choice("generalized", r, c)
     if allow_ring:
-        c = schedule_cost(build_ring(P), nbytes, fabric)
+        s = build_ring(P)
+        c = (ragged_schedule_cost(s, nbytes, fabric, itemsize) if ragged
+             else schedule_cost(s, nbytes, fabric))
         if c < best.cost:
             best = Choice("ring", 0, c)
     # re-cost the winner with software pipelining: the bucket count that
     # overlaps its wire time with its combine time (fill/drain charged)
     sched = schedule_for(best, P)
-    b = choose_n_buckets(sched, nbytes, fabric)
-    if b > 1:
-        best = Choice(best.kind, best.r,
-                      pipelined_schedule_cost(sched, nbytes, fabric, b), b)
+    if ragged:
+        b = ragged_choose_n_buckets(sched, nbytes, fabric,
+                                    itemsize=itemsize)
+        if b > 1:
+            best = Choice(best.kind, best.r,
+                          ragged_pipelined_schedule_cost(sched, nbytes,
+                                                         fabric, b,
+                                                         itemsize), b)
+    else:
+        b = choose_n_buckets(sched, nbytes, fabric)
+        if b > 1:
+            best = Choice(best.kind, best.r,
+                          pipelined_schedule_cost(sched, nbytes, fabric, b),
+                          b)
     return best
 
 

@@ -25,7 +25,8 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass
 
-from .schedule import Schedule, build_generalized, build_ring, n_steps_log
+from .schedule import (Schedule, build_generalized, build_ring, n_steps_log,
+                       ragged_step_units)
 
 
 @dataclass(frozen=True)
@@ -165,7 +166,13 @@ def optimal_r_analytic(P: int, m: float, f: Fabric) -> int:
 
 
 def optimal_r_search(P: int, m: float, f: Fabric) -> int:
-    """argmin over eq (36) -- exact discrete search (cheap: L+1 options)."""
+    """argmin over eq (36) -- exact discrete search (cheap: L+1 options).
+
+    >>> optimal_r_search(127, 425.0, PAPER_10GE)    # small msg: latency
+    7
+    >>> optimal_r_search(127, 2.0 ** 26, PAPER_10GE)  # huge msg: bandwidth
+    0
+    """
     L = n_steps_log(P)
     return min(range(L + 1), key=lambda r: tau_intermediate(P, m, r, f))
 
@@ -187,6 +194,73 @@ def schedule_cost(sched: Schedule, m: float, f: Fabric) -> float:
         if st.n_tx == 0 and st.n_adds == 0:
             continue  # bookkeeping-only step
         t += f.alpha + st.n_tx * u * f.beta + st.n_adds * u * f.gamma
+    return t
+
+
+def ragged_schedule_cost(sched: Schedule, m: int, f: Fabric,
+                         itemsize: int = 1) -> float:
+    """Exact alpha-beta-gamma cost of a schedule under the *ragged* split.
+
+    :func:`schedule_cost` prices every transmitted unit at a uniform
+    ``m / P``; for a message whose *element count* does not divide ``P``
+    the executor's chunks have unequal sizes, and an SPMD step only
+    takes as long as its slowest device.  This charges, per step, the
+    true per-device moved and reduced bytes of the balanced exact split
+    (via :func:`repro.core.schedule.ragged_step_units`) -- no padding
+    bytes ever enter the price.  ``m`` is bytes and ``itemsize`` the
+    element width: the executor splits *elements*, so the chunk geometry
+    is ``ragged_sizes(m // itemsize, P)`` scaled back to bytes.  For
+    messages whose element count divides ``P`` it equals
+    :func:`schedule_cost` exactly.
+
+    >>> from repro.core.schedule import build_reduce_scatter
+    >>> s = build_reduce_scatter(8)
+    >>> ragged_schedule_cost(s, 1 << 20, PAPER_10GE) == schedule_cost(
+    ...     s, 1 << 20, PAPER_10GE)
+    True
+    >>> # 1 MiB + 1: the padded executor would move ceil-width units
+    >>> ragged_schedule_cost(s, (1 << 20) + 1, PAPER_10GE) < schedule_cost(
+    ...     s, 8 * (((1 << 20) + 1 + 7) // 8), PAPER_10GE)
+    True
+    """
+    elems = max(int(m) // max(int(itemsize), 1), 0)
+    tx_units, add_units = ragged_step_units(sched, elems)
+    t = 0.0
+    for st, tx, add in zip(sched.steps, tx_units, add_units):
+        if st.n_tx == 0 and st.n_adds == 0:
+            continue  # bookkeeping-only step
+        # alpha is charged even when every transmitted chunk is empty
+        # (m < P): the SPMD executor still runs the ppermute rendezvous
+        t += (f.alpha + tx * itemsize * f.beta
+              + add * itemsize * f.gamma)
+    return t
+
+
+def ragged_pipelined_schedule_cost(sched: Schedule, m: int, f: Fabric,
+                                   n_buckets: int,
+                                   itemsize: int = 1) -> float:
+    """Ragged analogue of :func:`pipelined_schedule_cost`: the bucketed
+    replay splits every chunk column-wise into ``n_buckets`` equal
+    slices, so each bucket carries ``1 / n_buckets`` of every true
+    per-step byte count; ticks overlap comm and combine across buckets
+    exactly as in the uniform model."""
+    if n_buckets <= 1:
+        return ragged_schedule_cost(sched, m, f, itemsize)
+    elems = max(int(m) // max(int(itemsize), 1), 0)
+    tx_units, add_units = ragged_step_units(sched, elems)
+    live = [(tx * itemsize, add * itemsize) for st, tx, add in
+            zip(sched.steps, tx_units, add_units)
+            if st.n_tx or st.n_adds]
+    S = len(live)
+    t = 0.0
+    for tick in range(S + n_buckets - 1):
+        comm = comb = 0.0
+        for j in range(n_buckets):
+            s = tick - j
+            if 0 <= s < S:
+                comm += live[s][0] / n_buckets * f.beta
+                comb += live[s][1] / n_buckets * f.gamma
+        t += f.alpha + max(comm, comb)
     return t
 
 
@@ -239,6 +313,24 @@ def choose_n_buckets(sched: Schedule, m: float, f: Fabric,
         if chunk_size(m, sched.P) / b < min_bucket_bytes:
             break
         c = pipelined_schedule_cost(sched, m, f, b)
+        if c < best_c:
+            best_b, best_c = b, c
+    return best_b
+
+
+def ragged_choose_n_buckets(sched: Schedule, m: int, f: Fabric,
+                            max_buckets: int = 8,
+                            min_bucket_bytes: float = 32 * 1024,
+                            itemsize: int = 1) -> int:
+    """argmin over the *ragged* pipelined cost of the bucket count; same
+    small-bucket guard as :func:`choose_n_buckets`."""
+    if sched.P <= 1 or m <= 0:
+        return 1
+    best_b, best_c = 1, ragged_schedule_cost(sched, m, f, itemsize)
+    for b in range(2, max_buckets + 1):
+        if chunk_size(m, sched.P) / b < min_bucket_bytes:
+            break
+        c = ragged_pipelined_schedule_cost(sched, m, f, b, itemsize)
         if c < best_c:
             best_b, best_c = b, c
     return best_b

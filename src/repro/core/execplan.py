@@ -48,7 +48,7 @@ from typing import Callable, List, Sequence, Tuple, Union
 
 import numpy as np
 
-from .schedule import Schedule
+from .schedule import Schedule, ragged_offsets, ragged_sizes
 
 
 def _frozen(a) -> np.ndarray:
@@ -166,6 +166,13 @@ def compile_plan(sched: Schedule) -> ExecPlan:
     received rows fill the lowest freed/unused slots in arrival order --
     which keeps hot index ranges contiguous, so the executor's gathers
     and updates lower to static slices wherever the schedule allows.
+
+    >>> from repro.core.schedule import build_generalized
+    >>> plan = compile_plan(build_generalized(4, 0))
+    >>> plan.n_steps, plan.n_slots, plan.n_rows0
+    (4, 4, 4)
+    >>> plan is compile_plan(build_generalized(4, 0))   # cached
+    True
     """
     g = sched.group
     P = sched.P
@@ -368,27 +375,43 @@ def execute(plan: ExecPlan, bucket_rows: Sequence[List], axis_name, *,
 # ---------------------------------------------------------------------------
 
 def _np_chunks(vec: np.ndarray, P: int) -> np.ndarray:
+    """(P, u_max) chunk buffer under the balanced ragged split: chunk c
+    holds ``ragged_sizes(m, P)[c]`` real elements, zero-filled to the
+    common physical width ``u_max = ceil(m / P)`` (the ppermute rows of
+    an SPMD program must be uniform; only the *valid* prefix varies)."""
     m = vec.shape[0]
-    u = -(-m // P)
-    pad = u * P - m
-    if pad:
-        vec = np.concatenate([vec, np.zeros((pad,), vec.dtype)])
-    return vec.reshape(P, u)
+    sizes = ragged_sizes(m, P)
+    offs = ragged_offsets(sizes)
+    u = max(-(-m // P), 1)
+    out = np.zeros((P, u), vec.dtype)
+    for c in range(P):
+        out[c, :sizes[c]] = vec[offs[c]:offs[c] + sizes[c]]
+    return out
 
 
 def simulate_plan(sched: Schedule, vectors: List[np.ndarray],
                   n_buckets: int = 1) -> List[np.ndarray]:
     """Replay the *lowered* plan tables over P explicit numpy processes.
 
-    Mirrors :func:`execute` table-for-table (including the bucket split
-    and the in-place slot updates), so bit-exact agreement with
-    :func:`repro.core.simulator.simulate` proves the lowering correct
-    independently of JAX.  Handles every schedule kind:
+    Mirrors :func:`execute` table-for-table (including the bucket split,
+    the in-place slot updates, and the ragged zero-filled chunk tails),
+    so bit-exact agreement with :func:`repro.core.simulator.simulate`
+    proves the lowering correct independently of JAX.  Handles every
+    schedule kind and *any* message length -- uneven sizes use the
+    balanced exact split of :func:`repro.core.schedule.ragged_sizes`:
 
     * ``generalized`` / ``ring``: full input vectors, full results;
-    * ``reduce_scatter``: padded inputs, device d returns its owned chunk;
+    * ``reduce_scatter``: any-length inputs, device d returns its owned
+      chunk zero-padded to the common physical width ``ceil(m / P)``;
     * ``all_gather`` / ``bruck_all_gather``: device d contributes chunk d
-      (``vectors[d]``), every device returns the concatenation.
+      (``vectors[d]``, lengths may differ by one), every device returns
+      the exact concatenation.
+
+    >>> import numpy as np
+    >>> from repro.core.schedule import build_generalized
+    >>> vecs = [np.full(7, d) for d in range(4)]        # 7 % 4 != 0
+    >>> simulate_plan(build_generalized(4, 0), vecs)[0].tolist()
+    [6, 6, 6, 6, 6, 6, 6]
     """
     plan = compile_plan(sched)
     P = plan.P
@@ -396,8 +419,16 @@ def simulate_plan(sched: Schedule, vectors: List[np.ndarray],
     gather_kinds = ("all_gather", "bruck_all_gather")
 
     if plan.kind in gather_kinds:
-        init = [vectors[d].reshape(1, -1) for d in range(P)]
+        chunk_sizes = tuple(v.shape[0] for v in vectors)
+        w = max(max(chunk_sizes), 1)
+        init = []
+        for d in range(P):
+            row = np.zeros((1, w), vectors[d].dtype)
+            row[0, :chunk_sizes[d]] = vectors[d]
+            init.append(row)
     else:
+        m = vectors[0].shape[0]
+        chunk_sizes = ragged_sizes(m, P)
         init = []
         for d in range(P):
             ch = _np_chunks(vectors[d], P)
@@ -437,13 +468,12 @@ def simulate_plan(sched: Schedule, vectors: List[np.ndarray],
     for d in range(P):
         cols = plan.final_rows[:, d]
         if (cols >= 0).all():
-            out = state[d][cols].reshape(-1)
-            if plan.kind in gather_kinds:
-                results.append(out)
-            else:
-                results.append(out[:vectors[d].shape[0]])
+            # ragged gather: chunk c contributes only its valid prefix
+            results.append(np.concatenate(
+                [state[d][cols[c]][:chunk_sizes[c]] for c in range(P)]))
         else:
-            # reduce-scatter: only the owned chunk is materialized
+            # reduce-scatter: only the owned chunk is materialized; it is
+            # returned at the physical width (zero tail where ragged)
             c = int(np.nonzero(cols >= 0)[0][0])
             results.append(state[d][cols[c]])
     return results

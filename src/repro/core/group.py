@@ -100,6 +100,14 @@ def CyclicGroup(P: int) -> MixedRadixGroup:
     Works for every P (including primes); this is the default group of the
     generalized allreduce and maps directly onto a TPU ICI ring via
     ``lax.ppermute`` with a constant shift.
+
+    >>> g = CyclicGroup(5)
+    >>> g.apply(2, 4)                  # t_2 maps rank 4 to rank 1
+    1
+    >>> g.compose(3, 4), g.inverse(3)  # index arithmetic mod 5
+    (2, 2)
+    >>> g.perm(1)                      # the generator's ppermute table
+    [1, 2, 3, 4, 0]
     """
     return MixedRadixGroup((P,))
 

@@ -51,6 +51,27 @@ class InvalidScheduleError(ValueError):
     pass
 
 
+class ShapeError(ValueError):
+    """A collective was handed data whose shape violates its contract.
+
+    Unlike a bare ``assert`` (stripped under ``python -O``), this always
+    fires and carries the offending sizes:
+
+    >>> err = ShapeError("axis size mismatch", expected=8, actual=6)
+    >>> err.expected, err.actual
+    (8, 6)
+    >>> str(err)
+    'axis size mismatch (expected 8, got 6)'
+    """
+
+    def __init__(self, message: str, *, expected=None, actual=None):
+        self.expected = expected
+        self.actual = actual
+        if expected is not None or actual is not None:
+            message = f"{message} (expected {expected}, got {actual})"
+        super().__init__(message)
+
+
 @dataclass(frozen=True)
 class Slot:
     """A live distributed vector: placement group-element + summed contents."""
@@ -155,6 +176,65 @@ class Schedule:
         """Which fully-reduced chunk final row ``row`` holds on ``device``."""
         e = self.final_slots[row].place
         return self.group.apply(self.group.inverse(e), device)
+
+    def chunk_sizes(self, m: int) -> Tuple[int, ...]:
+        """Per-rank chunk-size vector for an ``m``-element message.
+
+        Chunk ``c`` (the c-th entry of the group enumeration ``g_0 ..
+        g_{P-1}``, owned by rank ``c`` after the reduction phase) carries
+        ``chunk_sizes(m)[c]`` elements under the balanced exact split --
+        no chunk is ever rounded up to a common width, so the sizes sum
+        to exactly ``m``.  The symbolic verification is size-independent:
+        slots track *which* chunks were summed, and a combine only ever
+        pairs rows holding the same chunk index on each device, so every
+        per-chunk width is preserved through every step.
+
+        >>> build_generalized(5, r=1).chunk_sizes(12)
+        (3, 3, 2, 2, 2)
+        """
+        return ragged_sizes(m, self.P)
+
+
+# --------------------------------------------------------------------------
+#  ragged (uneven) chunk geometry
+# --------------------------------------------------------------------------
+
+def ragged_sizes(m: int, P: int) -> Tuple[int, ...]:
+    """Balanced exact split of ``m`` elements into ``P`` chunks.
+
+    The first ``m % P`` chunks get one extra element, so no chunk is ever
+    pure padding and sizes differ by at most one -- the uneven-shard
+    analogue of the paper's non-power-of-two process counts (it never
+    rounds ``m`` up to a multiple of ``P``).  Chunks are indexed by the
+    group enumeration, so rank ``d`` owns chunk ``d`` of ``sizes[d]``
+    elements after a reduce-scatter.
+
+    >>> ragged_sizes(10, 4)
+    (3, 3, 2, 2)
+    >>> ragged_sizes(3, 5)          # fewer elements than ranks
+    (1, 1, 1, 0, 0)
+    >>> sum(ragged_sizes(1000003, 7))
+    1000003
+    """
+    if P < 1:
+        raise ShapeError("ragged_sizes needs P >= 1", expected=">= 1", actual=P)
+    if m < 0:
+        raise ShapeError("ragged_sizes needs m >= 0", expected=">= 0", actual=m)
+    u, rem = divmod(m, P)
+    return tuple(u + 1 if c < rem else u for c in range(P))
+
+
+def ragged_offsets(sizes: Tuple[int, ...]) -> Tuple[int, ...]:
+    """Start offset of each chunk of a ragged split.
+
+    >>> ragged_offsets(ragged_sizes(10, 4))
+    (0, 3, 6, 8)
+    """
+    out, off = [], 0
+    for s in sizes:
+        out.append(off)
+        off += s
+    return tuple(out)
 
 
 # --------------------------------------------------------------------------
@@ -374,6 +454,14 @@ def build_generalized(P: int, r: int = 0,
     true iff every halving boundary is digit-borrow-free (e.g. Z2xZ3
     works for P=6, Z3xZ2 provably does not); an unsuitable group raises
     InvalidScheduleError rather than miscompiling.
+
+    >>> s = build_generalized(6, r=1)      # P=6: non-power-of-two
+    >>> s.n_steps, s.units_sent, s.units_reduced, s.s
+    (5, 12, 8, 2)
+    >>> build_generalized(6, r=99)
+    Traceback (most recent call last):
+        ...
+    repro.core.schedule.InvalidScheduleError: r=99 out of range [0, 3] for P=6
     """
     if P < 1:
         raise InvalidScheduleError("P must be >= 1")
@@ -570,6 +658,107 @@ def _verify(sched: Schedule, expect_final_rows: Optional[int] = None,
 
 
 # --------------------------------------------------------------------------
+#  per-step placement tables (ragged true-byte accounting)
+# --------------------------------------------------------------------------
+
+@lru_cache(maxsize=None)
+def step_place_tables(sched: Schedule) -> Tuple[Tuple[Tuple[int, ...], ...],
+                                                Tuple[Tuple[int, ...], ...]]:
+    """Per-step group-element places of the TX rows and the combine outputs.
+
+    Returns ``(tx_places, add_places)``: for step ``k``, ``tx_places[k][j]``
+    is the place of the j-th transmitted slot *before* the shift (device
+    ``d`` therefore sends its piece of chunk ``t_e^{-1}(d)``), and
+    ``add_places[k][i]`` is the place of the i-th combined output slot.
+    These are what turn a per-chunk size vector into exact per-device,
+    per-step moved/reduced element counts -- the quantities the ragged
+    cost model charges instead of a uniform ``m / P``.
+    """
+    rows: Tuple[Slot, ...] = sched.initial_slots
+    tx_places: List[Tuple[int, ...]] = []
+    add_places: List[Tuple[int, ...]] = []
+    for st in sched.steps:
+        tx_places.append(tuple(rows[ri].place for ri in st.tx_rows))
+        add_places.append(tuple(meta.place
+                                for op, meta in zip(st.out, st.out_slots)
+                                if op.kind == "add"))
+        rows = st.out_slots
+    return tuple(tx_places), tuple(add_places)
+
+
+@lru_cache(maxsize=None)
+def _place_chunk_table(sched: Schedule):
+    """For every group-element place a schedule's steps mention:
+    ``tbl[e][d] = t_e^{-1}(d)``, the chunk the slot placed at ``e``
+    holds on device ``d``.  Vectorized over the mixed-radix digits and
+    built only for the places actually used (O(P) per place), so large
+    flattened device indexes never materialize an O(P^2) action table.
+    Cached per schedule: the key set is the small set of compiled
+    schedules, each entry O(n_places * P)."""
+    import numpy as np
+    g = sched.group
+    P = g.order
+    x = np.arange(P, dtype=np.int64)
+    digs = []
+    for r in reversed(g.radices):
+        digs.append(x % r)
+        x = x // r
+    digs = np.stack(list(reversed(digs)), axis=1)            # (P, n)
+    radices = np.asarray(g.radices, dtype=np.int64)
+    tx_places, add_places = step_place_tables(sched)
+    needed = sorted({e for places in tx_places + add_places
+                     for e in places})
+    out = {}
+    for e in needed:
+        diff = (digs - digs[e]) % radices                    # (P, n)
+        idx = np.zeros(P, dtype=np.int64)
+        for k, r in enumerate(g.radices):
+            idx = idx * r + diff[:, k]
+        idx.setflags(write=False)
+        out[e] = idx
+    return out
+
+
+# bounded: keyed by message length, whose cardinality is unbounded in a
+# long-lived process (entries are small tuples, but they never die)
+@lru_cache(maxsize=4096)
+def ragged_step_units(sched: Schedule, m: int) -> Tuple[Tuple[int, ...],
+                                                        Tuple[int, ...]]:
+    """Exact per-step SPMD element counts for an ``m``-element message.
+
+    For every step, the *maximum over devices* of the true elements that
+    device transmits / combines under the balanced ragged split -- an
+    SPMD step completes when the slowest transfer lands, so this is the
+    width the alpha-beta-gamma model should charge.  For ``m`` divisible
+    by ``P`` every chunk has ``m // P`` elements and the counts collapse
+    to the uniform ``n_tx * m/P`` / ``n_adds * m/P``.
+
+    >>> sched = build_reduce_scatter(4)
+    >>> ragged_step_units(sched, 8)     # uniform: 2 elements per chunk
+    ((4, 2), (4, 2))
+    >>> ragged_step_units(sched, 9)     # ragged: no device moves 2*ceil
+    ((5, 3), (5, 3))
+    """
+    import numpy as np
+    P = sched.P
+    sizes = np.asarray(ragged_sizes(m, P), dtype=np.int64)
+    tbl = _place_chunk_table(sched)
+    tx_places, add_places = step_place_tables(sched)
+
+    def units(places: Tuple[int, ...]) -> int:
+        if not places:
+            return 0
+        # per-device true elements: sum over slots of this device's chunk
+        per_dev = np.zeros(P, dtype=np.int64)
+        for e in places:
+            per_dev += sizes[tbl[e]]
+        return int(per_dev.max())
+
+    return (tuple(units(txp) for txp in tx_places),
+            tuple(units(addp) for addp in add_places))
+
+
+# --------------------------------------------------------------------------
 #  convenience
 # --------------------------------------------------------------------------
 
@@ -578,6 +767,12 @@ def max_r(P: int) -> int:
 
 
 def schedule_summary(sched: Schedule) -> dict:
+    """Step/traffic accounting of a compiled schedule (units of one chunk).
+
+    >>> schedule_summary(build_ring(4))  # doctest: +NORMALIZE_WHITESPACE
+    {'P': 4, 'kind': 'ring', 'group': 'Z4', 'r': 0, 's': 4, 'steps': 7,
+     'units_sent': 6, 'units_reduced': 3, 'max_rows': 4}
+    """
     return {
         "P": sched.P,
         "kind": sched.kind,

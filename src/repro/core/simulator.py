@@ -16,7 +16,7 @@ from typing import Callable, List, Optional
 import numpy as np
 
 from .execplan import final_row_table, initial_row_table
-from .schedule import Schedule
+from .schedule import Schedule, ragged_offsets, ragged_sizes
 
 
 @dataclass
@@ -29,13 +29,17 @@ class SimTrace:
 
 
 def _chunks(vec: np.ndarray, P: int) -> List[np.ndarray]:
-    """Split (padded) vector into P equal chunks."""
-    m = vec.shape[0]
-    u = -(-m // P)
-    pad = u * P - m
-    if pad:
-        vec = np.concatenate([vec, np.zeros((pad,) + vec.shape[1:], vec.dtype)])
-    return [vec[i * u:(i + 1) * u] for i in range(P)]
+    """Split a vector into P exact ragged chunks (balanced split).
+
+    No padding: chunk ``c`` really has ``ragged_sizes(m, P)[c]`` elements.
+    The symbolic replay moves whole rows between processes and only ever
+    combines rows holding the *same* chunk index on each device, so
+    variable-width chunks flow through every schedule unchanged -- this
+    is the true-moved-bytes oracle the ragged cost model prices.
+    """
+    sizes = ragged_sizes(vec.shape[0], P)
+    offs = ragged_offsets(sizes)
+    return [vec[offs[c]:offs[c] + sizes[c]] for c in range(P)]
 
 
 def _initial_state(sched: Schedule,
@@ -96,11 +100,18 @@ def simulate(sched: Schedule, vectors: List[np.ndarray],
 
     vectors: list of P arrays of identical shape (m, ...).
     Returns list of P result arrays (each the full reduction), optionally
-    with a :class:`SimTrace`.
+    with a :class:`SimTrace`.  Any length works -- uneven sizes flow
+    through as true variable-width chunks (see :func:`_chunks`).
+
+    >>> import numpy as np
+    >>> from repro.core.schedule import build_generalized
+    >>> vecs = [np.arange(5) + 10 * d for d in range(3)]   # 5 % 3 != 0
+    >>> out = simulate(build_generalized(3, 0), vecs)
+    >>> out[0].tolist()                 # every rank: the exact full sum
+    [30, 33, 36, 39, 42]
     """
     P = sched.P
     assert len(vectors) == P
-    m = vectors[0].shape[0]
 
     state = _initial_state(sched, vectors)
     units_sent, adds = _replay(sched, state, op)
@@ -117,7 +128,8 @@ def simulate(sched: Schedule, vectors: List[np.ndarray],
             # partial results (reduce-scatter): return rows as-is
             results.append([c for c in out_chunks if c is not None])
         else:
-            results.append(np.concatenate(out_chunks)[:m])
+            # exact ragged chunks concatenate back to exactly m elements
+            results.append(np.concatenate(out_chunks))
     trace = SimTrace(steps=sched.n_steps, units_sent_per_device=units_sent,
                      adds_per_device=adds)
     return (results, trace) if return_trace else results

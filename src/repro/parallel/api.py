@@ -37,7 +37,7 @@ from repro.core.allreduce import (all_gather_flat, allreduce_tree,
                                   hierarchical_allreduce,
                                   reduce_scatter_flat)
 from repro.core.cost_model import Fabric, TPU_V5E_ICI
-from repro.core.schedule import max_r
+from repro.core.schedule import ShapeError, max_r
 from repro.topology.fabric import Topology
 
 AxisName = Union[str, Tuple[str, ...]]
@@ -84,6 +84,13 @@ def dp_grad_allreduce(tree, pc: ParallelConfig, *, mean: bool = True,
     generalized allreduce with tunable r on the slow outer level,
     all-gather back); otherwise the flat generalized allreduce over the
     (possibly flattened) DP axis tuple.
+
+    Gradient buckets of **any** size ride the DP split: the fused flat
+    buffer is rarely divisible by ``dp``, and the collectives now run
+    the balanced exact (ragged) split natively -- the autotuner prices
+    such buckets by true moved bytes (no padding bytes), and the zero1
+    path shards them exactly (see
+    :func:`repro.core.allreduce.tree_reduce_scatter`).
 
     ``fabric`` tunes the *flat* path only; the hierarchical path reads
     per-level alpha/beta/gamma from ``pc.topology`` (override it via
@@ -146,9 +153,20 @@ def seq_all_gather(x: jnp.ndarray, pc: ParallelConfig, axis: int = 1):
 
 
 def seq_reduce_scatter(x: jnp.ndarray, pc: ParallelConfig, axis: int = 1):
-    """(B, S, d) partial-sums -> (B, S/tp, d) reduced shards over TP."""
+    """(B, S, d) partial-sums -> (B, S/tp, d) reduced shards over TP.
+
+    The sequence dim must divide ``tp`` (both the XLA ``psum_scatter``
+    and the shard reshape below need uniform per-rank shards; the ragged
+    flat collectives cover uneven *flat* buffers, not uneven tensor
+    dims) -- a violation raises :class:`~repro.core.schedule.ShapeError`
+    instead of silently mis-reshaping.
+    """
     if pc.tp == 1:
         return x
+    if x.shape[axis] % pc.tp:
+        raise ShapeError(
+            f"seq_reduce_scatter: dim {axis} not divisible by tp={pc.tp}",
+            expected=f"multiple of {pc.tp}", actual=x.shape[axis])
     if pc.collective_impl == "group":
         moved = jnp.moveaxis(x, axis, 0)
         flat = moved.reshape(-1)
@@ -192,7 +210,14 @@ class ParamSpec:
 
 def choose_fsdp_dim(shape: Tuple[int, ...], dp: int,
                     avoid: Optional[int] = None) -> Optional[int]:
-    """Largest dim divisible by dp (excluding ``avoid``, the tp dim)."""
+    """Largest dim divisible by dp (excluding ``avoid``, the tp dim).
+
+    Divisibility here is a hard ``shard_map`` constraint (per-device
+    param shards enter the step function as static equal shapes), not a
+    collectives limitation: leaves left unsharded (``None``) still sync
+    their gradients through the ragged flat allreduce, which charges
+    and moves only true bytes for awkward sizes.
+    """
     best, best_size = None, 0
     for i, s in enumerate(shape):
         if i == avoid:

@@ -32,7 +32,7 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.cost_model import (best_schedule, choose_n_buckets,
+from repro.core.cost_model import (choose_n_buckets,
                                    pipelined_schedule_cost, schedule_cost)
 from repro.core.schedule import (Schedule, build_all_gather,
                                  build_generalized, build_reduce_scatter,
@@ -226,19 +226,21 @@ class CollectivePlan:
 
 
 def best_flat_plan(topo: Topology, nbytes: float,
-                   allow_ring: bool = True) -> CollectivePlan:
+                   allow_ring: bool = True,
+                   itemsize: int = 1) -> CollectivePlan:
     """Cheapest *flat* plan (any r, optionally ring, any bucket count)
     over the flattened device index, costed on the bottleneck fabric (or
-    the only fabric of a single-level topology)."""
+    the only fabric of a single-level topology).  Delegates to the core
+    autotuner's model path, so messages whose *element count*
+    (``nbytes // itemsize``) does not divide ``P`` are priced by the
+    ragged true-byte cost -- one implementation, not two."""
+    from repro.core.autotune import choose
     flat_fabric = topo.levels[0].fabric if topo.n_levels == 1 \
         else bottleneck_fabric(topo)
-    sched, cost = best_schedule(topo.P, nbytes, flat_fabric,
-                                include_ring=allow_ring)
-    kind = "flat-ring" if sched.kind == "ring" else "flat-generalized"
-    b = choose_n_buckets(sched, nbytes, flat_fabric)
-    if b > 1:
-        cost = pipelined_schedule_cost(sched, nbytes, flat_fabric, b)
-    return CollectivePlan(kind, sched.r, cost, b)
+    ch = choose(topo.P, int(nbytes), flat_fabric, allow_ring,
+                tune=False, itemsize=itemsize)
+    kind = "flat-ring" if ch.kind == "ring" else "flat-generalized"
+    return CollectivePlan(kind, ch.r, ch.cost, ch.n_buckets)
 
 
 def best_hierarchical_plan(topo: Topology,
@@ -266,7 +268,8 @@ def best_hierarchical_plan(topo: Topology,
 
 def choose_collective(topo: Topology, nbytes: int,
                       allow_ring: bool = True,
-                      tune: Optional[bool] = None) -> CollectivePlan:
+                      tune: Optional[bool] = None,
+                      itemsize: int = 1) -> CollectivePlan:
     """Pick the cheapest plan: flat (any r, optionally ring) over the
     bottleneck fabric vs hierarchical (any outer r) over per-level
     fabrics.  Single-level topologies always resolve to a flat plan
@@ -286,19 +289,22 @@ def choose_collective(topo: Topology, nbytes: int,
     from repro.core.autotune import _tune_default
     if (_tune_default() if tune is None else tune) and topo.n_levels == 1:
         from repro.tuning import policy
-        measured = policy.lookup(topo.P, int(nbytes), allow_ring=allow_ring)
+        measured = policy.lookup(topo.P, int(nbytes), allow_ring=allow_ring,
+                                 itemsize=max(int(itemsize), 1))
         if measured is not None:
             kind = "flat-ring" if measured.kind == "ring" \
                 else "flat-generalized"
             return CollectivePlan(kind, measured.r, measured.cost,
                                   measured.n_buckets, source="measured")
-    return _choose_collective_model(topo, nbytes, allow_ring)
+    return _choose_collective_model(topo, nbytes, allow_ring,
+                                    max(int(itemsize), 1))
 
 
 @lru_cache(maxsize=None)
 def _choose_collective_model(topo: Topology, nbytes: int,
-                             allow_ring: bool) -> CollectivePlan:
-    best = best_flat_plan(topo, nbytes, allow_ring)
+                             allow_ring: bool,
+                             itemsize: int = 1) -> CollectivePlan:
+    best = best_flat_plan(topo, nbytes, allow_ring, itemsize)
     hier = best_hierarchical_plan(topo, nbytes)
     if hier is not None and hier.cost < best.cost:
         best = hier

@@ -22,7 +22,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from repro.core.allreduce import all_gather_flat
+from repro.core.allreduce import all_gather_flat, exact_chunks
+from repro.core.schedule import ShapeError, ragged_sizes
 from repro.parallel.api import ParallelConfig
 
 
@@ -180,7 +181,24 @@ def apply_updates_dp(params, grads, opt_state, oc: OptConfig,
 def apply_updates_zero1(params, grad_shard, opt_state, oc: OptConfig,
                         pc: ParallelConfig):
     """ZeRO-1: AdamW on this device's flat parameter chunk, then the
-    distribution phase (all-gather) rebuilds the full parameters."""
+    distribution phase (all-gather) rebuilds the full parameters.
+
+    The flat size need not divide ``dp``: the gradient shard arriving
+    from :func:`repro.core.allreduce.tree_reduce_scatter` is the exact
+    ragged chunk of the balanced split (zero-filled to the common
+    ``ceil(n / dp)`` width), the matching parameter chunk is sliced with
+    the same geometry, and the all-gather back is an exact allgatherv --
+    no element is ever updated twice and no padding survives.
+
+    Checkpoint note: this changed the zero1 chunk boundaries for
+    non-divisible flat sizes from ``[d*u, (d+1)*u)`` (trailing-pad) to
+    the balanced split.  The global moment-buffer *shape* is unchanged,
+    so an old checkpoint restores cleanly only for ``dp | n_params``;
+    resuming an old non-divisible zero1 run re-warms the (bounded)
+    moment mismatch near chunk boundaries rather than erroring --
+    acceptable for this repo's short-lived runs, flagged here for
+    anyone carrying long-lived checkpoints across this change.
+    """
     step = opt_state["step"] + 1
     lr = lr_at(oc, step)
     bc1 = 1 - oc.b1 ** step.astype(jnp.float32)
@@ -188,19 +206,21 @@ def apply_updates_zero1(params, grad_shard, opt_state, oc: OptConfig,
 
     flat = flatten_params(params)
     n = flat.shape[0]
-    u = grad_shard.shape[0]
-    pad = u * pc.dp - n
-    if pad:
-        flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.float32)])
+    u = _padded_chunk(n, pc.dp)
+    if pc.dp > 1 and grad_shard.shape[0] != u:
+        raise ShapeError("zero1 gradient shard width != ceil(n_params/dp)",
+                         expected=u, actual=grad_shard.shape[0])
     if pc.dp > 1:
+        chunks, _ = exact_chunks(flat, pc.dp)      # (dp, u) ragged rows
         d = lax.axis_index(pc.dp_axis_name)
-        my = lax.dynamic_slice_in_dim(flat.reshape(pc.dp, u), d, 1, 0)[0]
+        my = lax.dynamic_index_in_dim(chunks, d, keepdims=False)
     else:
         my = flat
     p2, m2, v2 = _adam_math(grad_shard, opt_state["m"], opt_state["v"],
                             my, oc, lr, bc1, bc2)
     if pc.dp > 1:
-        full = all_gather_flat(p2, pc.dp_axis_name)[:n]
+        full = all_gather_flat(p2, pc.dp_axis_name,
+                               sizes=ragged_sizes(n, pc.dp))
     else:
         full = p2[:n]
     new_params = unflatten_like(full, params)

@@ -93,7 +93,14 @@ def default_cache_path() -> Path:
 
 @dataclass(frozen=True)
 class Measurement:
-    """One timed candidate: schedule family x pipelining x message size."""
+    """One timed candidate: schedule family x pipelining x message size.
+
+    ``itemsize`` records the element width of the benchmarked buffer
+    (the grid runner times f32, so 4): raggedness is an *element*-count
+    property, and a lookup must not answer a query whose element-ragged
+    classification differs from what was measured.  Entries written
+    before the field existed load with the benchmark default.
+    """
 
     P: int
     nbytes: int
@@ -101,6 +108,12 @@ class Measurement:
     r: int
     n_buckets: int
     us: float  # best-of-reps wallclock per call
+    itemsize: int = 4  # element width of the measured buffer (f32 grid)
+
+    @property
+    def ragged(self) -> bool:
+        """Element count of the measured message does not divide P."""
+        return (self.nbytes // max(self.itemsize, 1)) % self.P != 0
 
     @classmethod
     def from_dict(cls, d: dict) -> "Measurement":
@@ -111,12 +124,24 @@ class Measurement:
             r=int(d["r"]),
             n_buckets=int(d["n_buckets"]),
             us=float(d["us"]),
+            itemsize=int(d.get("itemsize", 4)),
         )
 
 
 @dataclass
 class TuningCache:
-    """In-memory view of the on-disk tuning table."""
+    """In-memory view of the on-disk tuning table.
+
+    >>> import os, tempfile
+    >>> fp = Fingerprint("cpu", "host", 8, "0.4.37", "1.0.0")
+    >>> cache = TuningCache()
+    >>> cache.record(fp, Measurement(8, 1024, "generalized", 2, 1, 42.0))
+    >>> cache.n_measurements
+    1
+    >>> path = cache.save(os.path.join(tempfile.mkdtemp(), "t.json"))
+    >>> TuningCache.load(path).lookup(fp, 8)[0].us
+    42.0
+    """
 
     entries: Dict[str, dict] = field(default_factory=dict)
     path: Optional[Path] = None

@@ -11,6 +11,12 @@ persistent :class:`~repro.tuning.cache.TuningCache` under the running
 backend's fingerprint and summarized into a JSON payload for
 ``results/tuning.json``.
 
+The size grid includes *ragged* entries (element counts coprime with the
+device count) so the table measures the executor's exact-split path on
+true moved bytes; the analytic pick reported next to each winner prices
+those sizes with the ragged cost model
+(:func:`repro.core.cost_model.ragged_schedule_cost`).
+
 Requires more than one jax device in-process; the CLI driver
 (``benchmarks/run.py tune``) spawns a worker with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` for that.
@@ -35,20 +41,34 @@ Candidate = Tuple[str, int, int]  # (kind, r, n_buckets)
 # dispatch overhead dominates and the measurement is pure noise
 MIN_BUCKET_CHUNK_BYTES = 8 * 1024
 
+# "+36B" entries are deliberately *ragged*: 36 extra bytes = 9 extra f32
+# elements, so the element count is coprime with the 8-device grid and
+# the executor runs the balanced exact split -- these datapoints let the
+# measured table pick different winners for badly-divisible sizes than
+# the model's uniform-chunk ranking would.
 SMOKE_SIZES: Sequence[Tuple[str, int]] = (
     ("64KiB", 64 << 10),
+    ("64KiB+36B", (64 << 10) + 36),
     ("256KiB", 256 << 10),
 )
 FULL_SIZES: Sequence[Tuple[str, int]] = (
     ("64KiB", 64 << 10),
+    ("64KiB+36B", (64 << 10) + 36),
     ("256KiB", 256 << 10),
     ("1MiB", 1 << 20),
+    ("1MiB+36B", (1 << 20) + 36),
     ("4MiB", 4 << 20),
 )
 
 
 def candidate_grid(P: int, nbytes: int, *, smoke: bool = False) -> List[Candidate]:
-    """Schedule kind x r x n_buckets grid for one message size."""
+    """Schedule kind x r x n_buckets grid for one message size.
+
+    >>> candidate_grid(8, 1 << 20)[:3]
+    [('generalized', 0, 1), ('generalized', 0, 2), ('generalized', 0, 4)]
+    >>> [c for c in candidate_grid(8, 1 << 20) if c[0] == "ring"]
+    [('ring', 0, 1), ('ring', 0, 2), ('ring', 0, 4)]
+    """
     buckets = (1, 2) if smoke else (1, 2, 4)
     kinds: List[Tuple[str, int]] = [("generalized", r) for r in range(max_r(P) + 1)]
     kinds.append(("ring", 0))
@@ -153,12 +173,16 @@ def run_tuning(
         timed = _bench_interleaved(variants, x, iters, reps)
         meas_rows = []
         for (kind, r, b), us in sorted(timed.items(), key=lambda kv: kv[1]):
-            meas = Measurement(P=n, nbytes=nbytes, kind=kind, r=r, n_buckets=b, us=us)
+            meas = Measurement(
+                P=n, nbytes=nbytes, kind=kind, r=r, n_buckets=b, us=us,
+                itemsize=4,  # the grid times f32 buffers
+            )
             cache.record(fp, meas)
             meas_rows.append(asdict(meas))
             print(f"tune,{label},{kind},r={r},b={b},{us:.1f}")
         win = meas_rows[0]
-        model = choose(n, nbytes, model_fabric, tune=False)
+        # benchmarks run f32 buffers: raggedness is per-element (itemsize=4)
+        model = choose(n, nbytes, model_fabric, tune=False, itemsize=4)
         results.append(
             {
                 "label": label,

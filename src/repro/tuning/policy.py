@@ -79,13 +79,18 @@ def lookup(
     nbytes: int,
     *,
     allow_ring: bool = True,
+    itemsize: int = 1,
     fingerprint: Optional[Fingerprint] = None,
     cache_path: Optional[os.PathLike] = None,
 ) -> Optional[Choice]:
     """Measured-fastest ``Choice`` for an allreduce of ``nbytes`` over
     ``P`` devices, or ``None`` when the table has no compatible entry.
     ``allow_ring=False`` honors the caller's schedule-family exclusion:
-    ring measurements are dropped before the argmin."""
+    ring measurements are dropped before the argmin.  ``itemsize`` is
+    the query's element width: only measurements whose element-ragged
+    classification (see :attr:`~repro.tuning.cache.Measurement.ragged`)
+    matches the query's are considered, so an f32-measured ragged
+    winner never answers a uniform-geometry message of another dtype."""
     if P <= 1:
         return None
     fp = fingerprint if fingerprint is not None else _cached_fingerprint()
@@ -94,13 +99,30 @@ def lookup(
         meas = [m for m in meas if m.kind != "ring"]
     if not meas:
         return None
-    return best_measured(meas, nbytes)
+    return best_measured(meas, nbytes, itemsize=itemsize)
 
 
-def best_measured(meas: List[Measurement], nbytes: int) -> Optional[Choice]:
+def best_measured(meas: List[Measurement], nbytes: int, *,
+                  itemsize: int = 1) -> Optional[Choice]:
     """Nearest-size interpolation over a measurement list (one backend,
-    one P).  Exposed separately so tests can drive it without file I/O."""
+    one P).  Exposed separately so tests can drive it without file I/O.
+    Measurements whose element-ragged classification differs from the
+    query's are dropped before bracketing.
+
+    >>> from repro.tuning.cache import Measurement
+    >>> meas = [Measurement(8, 1024, "generalized", 1, 1, 50.0),
+    ...         Measurement(8, 1024, "ring", 0, 1, 80.0)]
+    >>> c = best_measured(meas, 1024)
+    >>> (c.kind, c.r, c.source)
+    ('generalized', 1, 'measured')
+    >>> best_measured(meas, 1 << 30) is None    # > 4x past the table
+    True
+    """
     if not meas or nbytes <= 0:
+        return None
+    ragged_q = (nbytes // max(int(itemsize), 1)) % meas[0].P != 0
+    meas = [m for m in meas if m.ragged == ragged_q]
+    if not meas:
         return None
     sizes = sorted({m.nbytes for m in meas})
     lo = max((s for s in sizes if s <= nbytes), default=None)

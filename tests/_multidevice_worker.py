@@ -187,6 +187,88 @@ def check_hierarchical():
     print("ok hierarchical")
 
 
+def check_ragged():
+    """Ragged (uneven-shard) collectives on real devices.
+
+    1. ``dp_grad_allreduce`` of an int32 pytree whose fused flat size is
+       coprime with the device count must match ``psum`` bit-exactly
+       (sums stay far below 2^24, so the f32 accumulation is exact).
+    2. The ragged reduce-scatter owns the exact balanced chunk, and the
+       allgatherv inverse reassembles the exact vector.
+    3. A schedule compiled for the wrong P raises ShapeError (typed, not
+       a stripped-under-``-O`` assert).
+    """
+    n = len(jax.devices())
+    mesh = jax.make_mesh((n,), ("data",))
+    rng = np.random.default_rng(11)
+    from repro.core.allreduce import psum_tree
+    from repro.core.schedule import ShapeError, ragged_offsets, ragged_sizes
+    from repro.parallel.api import ParallelConfig, dp_grad_allreduce
+
+    pc = ParallelConfig(dp_axes=("data",), dp=n)
+    # leaf sizes chosen so the fused flat buffer (13 + 2*5 = 23 elems
+    # at n=8, 23 % 8 != 0) rides the ragged split
+    tree = {"a": rng.integers(-1000, 1000, (n, 13)).astype(np.int32),
+            "b": rng.integers(-1000, 1000, (n, 2, 5)).astype(np.int32)}
+
+    def ours(t):
+        loc = jax.tree.map(lambda v: v[0], t)
+        out = dp_grad_allreduce(loc, pc, mean=False)
+        return jax.tree.map(lambda v: v[None], out)
+
+    def theirs(t):
+        loc = jax.tree.map(lambda v: v[0], t)
+        out = psum_tree(loc, "data")
+        return jax.tree.map(lambda v: v[None], out)
+
+    a = jax.jit(shard_map(ours, mesh=mesh, in_specs=P("data"),
+                          out_specs=P("data")))(tree)
+    b = jax.jit(shard_map(theirs, mesh=mesh, in_specs=P("data"),
+                          out_specs=P("data")))(tree)
+    for k in tree:
+        assert (np.asarray(a[k]) == np.asarray(b[k])).all(), k
+        assert (np.asarray(a[k])[0] == tree[k].sum(0)).all(), k
+
+    # ragged reduce-scatter + allgatherv round trip, exact shard contents
+    for m in (1, n - 1, n + 1, 3 * n + 5, 257):
+        x = rng.integers(-1000, 1000, (n, m)).astype(np.int32)
+        want = x.sum(0)
+        sizes = ragged_sizes(m, n)
+        offs = ragged_offsets(sizes)
+
+        def rs(v):
+            return reduce_scatter_flat(v[0], "data")[None]
+        shards = np.asarray(jax.jit(shard_map(
+            rs, mesh=mesh, in_specs=P("data", None),
+            out_specs=P("data", None)))(x))
+        for d in range(n):
+            assert (shards[d][:sizes[d]]
+                    == want[offs[d]:offs[d] + sizes[d]]).all(), (m, d)
+            assert (shards[d][sizes[d]:] == 0).all(), (m, d)
+
+        def rt(v):
+            shard = reduce_scatter_flat(v[0], "data")
+            return all_gather_flat(shard, "data", sizes=sizes)[None]
+        out = np.asarray(jax.jit(shard_map(
+            rt, mesh=mesh, in_specs=P("data", None),
+            out_specs=P("data", None)))(x))
+        for d in range(n):
+            assert (out[d] == want).all(), (m, d)
+
+    # typed shape errors fire at trace time
+    wrong = build_generalized(n + 1, 0)
+    try:
+        jax.jit(shard_map(
+            lambda v: allreduce_flat(v[0], "data", wrong)[None],
+            mesh=mesh, in_specs=P("data", None),
+            out_specs=P("data", None)))(np.zeros((n, 8), np.float32))
+    except ShapeError as e:
+        assert e.expected == n + 1 and e.actual == n
+    else:
+        raise AssertionError("wrong-P schedule did not raise ShapeError")
+    print("ok ragged")
+
+
 def check_execplan():
     """The ExecPlan executor on real forced-host devices: integer inputs
     must reproduce the numpy sum *bit-exactly* for every bucket count,
@@ -240,7 +322,7 @@ if __name__ == "__main__":
     checks = dict(allreduce=check_allreduce_flat, psum=check_vs_psum,
                   rsag=check_rs_ag, multiaxis=check_multiaxis,
                   zero=check_tree_zero, hier=check_hierarchical,
-                  execplan=check_execplan)
+                  execplan=check_execplan, ragged=check_ragged)
     if which == "all":
         for fn in checks.values():
             fn()

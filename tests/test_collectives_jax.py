@@ -73,3 +73,14 @@ def test_execplan_nonpower2_6dev():
 def test_hierarchical_nonpower2_6dev():
     # (2, 3): non-power-of-two inner level
     _run("hier", devices=6)
+
+
+def test_ragged_dp_allreduce_8dev():
+    """Ragged dp_grad_allreduce == psum bit-exactly on int dtypes, exact
+    ragged reduce-scatter shards + allgatherv inverse, typed ShapeError."""
+    _run("ragged")
+
+
+def test_ragged_dp_allreduce_6dev():
+    # non-power-of-two device count: every size in the check is uneven
+    _run("ragged", devices=6)

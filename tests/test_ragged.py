@@ -1,0 +1,256 @@
+"""Ragged (uneven-shard) collectives: property grid over every schedule
+kind for sizes that do not divide the process count.
+
+The oracle chain is the same as PR 2's: the symbolic simulator
+(:mod:`repro.core.simulator`) runs *true* variable-width chunks (the
+ideal ragged fabric an MPI implementation would use), the lowered
+:func:`repro.core.execplan.simulate_plan` runs the padded physical
+layout the JAX executor uses, and the two must agree bit-exactly on
+integer inputs for every (P, r, kind, size, n_buckets).  The JAX side is
+covered on real forced-host devices by
+``tests/_multidevice_worker.py ragged``.
+"""
+import numpy as np
+import pytest
+
+from repro.core.autotune import choose
+from repro.core.cost_model import (HOST_CPU, PAPER_10GE,
+                                   ragged_pipelined_schedule_cost,
+                                   ragged_schedule_cost, schedule_cost)
+from repro.core.execplan import simulate_plan
+from repro.core.schedule import (ShapeError, build_all_gather,
+                                 build_bruck_all_gather, build_generalized,
+                                 build_reduce_scatter, build_ring, max_r,
+                                 ragged_offsets, ragged_sizes,
+                                 ragged_step_units)
+from repro.core.simulator import (simulate, simulate_all_gather,
+                                  simulate_reduce_scatter)
+
+PS = [2, 3, 5, 6, 7, 8]
+
+
+def _sizes_grid(P):
+    """Uneven sizes: below P, equal to 1, coprime with P, off-by-one."""
+    grid = {1, 2, max(P - 1, 1), P, P + 1, 17, 29, 3 * P + 5}
+    return sorted(m for m in grid if m >= 1)
+
+
+def _ivecs(rng, P, m):
+    return [rng.integers(-1000, 1000, m).astype(np.int64) for _ in range(P)]
+
+
+# ---------------------------------------------------------------- geometry
+def test_ragged_sizes_properties():
+    for P in PS:
+        for m in (0, 1, P - 1, P, P + 1, 1000003):
+            sizes = ragged_sizes(m, P)
+            assert len(sizes) == P
+            assert sum(sizes) == m
+            assert max(sizes) - min(sizes) <= 1
+            assert sizes == tuple(sorted(sizes, reverse=True))
+            offs = ragged_offsets(sizes)
+            assert offs[0] == 0
+            assert all(offs[c + 1] == offs[c] + sizes[c]
+                       for c in range(P - 1))
+
+
+def test_ragged_sizes_shape_errors():
+    with pytest.raises(ShapeError) as ei:
+        ragged_sizes(10, 0)
+    assert ei.value.actual == 0
+    with pytest.raises(ShapeError) as ei:
+        ragged_sizes(-1, 4)
+    assert ei.value.actual == -1
+    err = ShapeError("boom", expected=8, actual=6)
+    assert (err.expected, err.actual) == (8, 6)
+    assert "expected 8" in str(err) and "got 6" in str(err)
+
+
+def test_chunk_sizes_on_schedule():
+    s = build_generalized(6, 1)
+    assert s.chunk_sizes(20) == ragged_sizes(20, 6) == (4, 4, 3, 3, 3, 3)
+
+
+# ----------------------------------------------- full ragged grid, exact
+@pytest.mark.parametrize("P", PS)
+def test_generalized_ragged_bit_exact(P):
+    rng = np.random.default_rng(P)
+    for r in range(max_r(P) + 1):
+        sched = build_generalized(P, r)
+        for m in _sizes_grid(P):
+            vecs = _ivecs(rng, P, m)
+            want = np.sum(vecs, axis=0)
+            for out in simulate(sched, vecs):
+                assert np.array_equal(out, want), (P, r, m)
+            for out in simulate_plan(sched, vecs):
+                assert np.array_equal(out, want), (P, r, m)
+
+
+@pytest.mark.parametrize("P", PS)
+def test_ring_ragged_bit_exact(P):
+    rng = np.random.default_rng(P + 100)
+    sched = build_ring(P)
+    for m in _sizes_grid(P):
+        vecs = _ivecs(rng, P, m)
+        want = np.sum(vecs, axis=0)
+        for out in simulate(sched, vecs):
+            assert np.array_equal(out, want), (P, m)
+        for out in simulate_plan(sched, vecs):
+            assert np.array_equal(out, want), (P, m)
+
+
+@pytest.mark.parametrize("P", PS)
+def test_reduce_scatter_ragged_bit_exact(P):
+    """The symbolic oracle returns the exact ragged chunk; the lowered
+    plan returns it zero-filled to the physical width."""
+    rng = np.random.default_rng(P + 200)
+    sched = build_reduce_scatter(P)
+    for m in _sizes_grid(P):
+        vecs = _ivecs(rng, P, m)
+        want = np.sum(vecs, axis=0)
+        sizes = ragged_sizes(m, P)
+        offs = ragged_offsets(sizes)
+        chunks, owners = simulate_reduce_scatter(sched, vecs)
+        got = simulate_plan(sched, vecs)
+        assert owners == list(range(P))
+        for d in range(P):
+            exact = want[offs[d]:offs[d] + sizes[d]]
+            assert np.array_equal(chunks[d], exact), (P, m, d)
+            assert np.array_equal(got[d][:sizes[d]], exact), (P, m, d)
+            assert (got[d][sizes[d]:] == 0).all(), (P, m, d)
+
+
+@pytest.mark.parametrize("P", PS)
+@pytest.mark.parametrize("builder", [build_all_gather,
+                                     build_bruck_all_gather])
+def test_all_gatherv_ragged_bit_exact(P, builder):
+    """allgatherv: per-rank chunks whose lengths differ by one."""
+    rng = np.random.default_rng(P + 300)
+    sched = builder(P)
+    for m in _sizes_grid(P):
+        sizes = ragged_sizes(m, P)
+        chunks = [rng.integers(-1000, 1000, sizes[d]).astype(np.int64)
+                  for d in range(P)]
+        want = np.concatenate(chunks)
+        for out in simulate_all_gather(sched, chunks):
+            assert np.array_equal(out, want), (P, m)
+        for out in simulate_plan(sched, chunks):
+            assert np.array_equal(out, want), (P, m)
+
+
+@pytest.mark.parametrize("n_buckets", [2, 3, 4])
+def test_bucketed_ragged_replay_identical(n_buckets):
+    """Pipelined bucket splits must not change a bit on ragged sizes."""
+    for P in (3, 6, 8):
+        rng = np.random.default_rng(P * 10 + n_buckets)
+        for r in (0, max_r(P)):
+            sched = build_generalized(P, r)
+            for m in (1, P + 1, 29):
+                vecs = _ivecs(rng, P, m)
+                want = np.sum(vecs, axis=0)
+                for out in simulate_plan(sched, vecs, n_buckets=n_buckets):
+                    assert np.array_equal(out, want), (P, r, m)
+
+
+# ----------------------------------------------------- true-byte pricing
+def test_ragged_cost_equals_uniform_when_divisible():
+    for P in (4, 6, 8):
+        for r in range(max_r(P) + 1):
+            s = build_generalized(P, r)
+            m = 64 * P
+            assert ragged_schedule_cost(s, m, PAPER_10GE) == \
+                schedule_cost(s, m, PAPER_10GE)
+
+
+def test_ragged_cost_charges_no_padding_bytes():
+    """The old executor padded every chunk to ceil(m/P); the ragged price
+    must be strictly below that padded-uniform price and at least the
+    ideal continuous m/P price."""
+    for P in (5, 6, 7, 8):
+        for r in range(max_r(P) + 1):
+            s = build_generalized(P, r)
+            m = 1024 * P + 1
+            padded = P * (-(-m // P))
+            c = ragged_schedule_cost(s, m, PAPER_10GE)
+            assert c < schedule_cost(s, padded, PAPER_10GE), (P, r)
+            assert c >= schedule_cost(s, m, PAPER_10GE) - 1e-12, (P, r)
+
+
+def test_ragged_step_units_bounds():
+    """Per-step maxima: between the floor-width and ceil-width uniform
+    counts, and exactly n_tx * u for divisible sizes."""
+    for P in (5, 8):
+        s = build_reduce_scatter(P)
+        m = 7 * P
+        tx, _ = ragged_step_units(s, m)
+        assert list(tx) == [st.n_tx * (m // P) for st in s.steps]
+        m = 7 * P + 3
+        lo, hi = m // P, -(-m // P)
+        tx, add = ragged_step_units(s, m)
+        for t, st in zip(tx, s.steps):
+            assert st.n_tx * lo <= t <= st.n_tx * hi
+        for a, st in zip(add, s.steps):
+            assert st.n_adds * lo <= a <= st.n_adds * hi
+
+
+def test_ragged_pipelined_degenerates_to_serial():
+    s = build_generalized(8, 1)
+    m = 8 * 4096 + 5
+    assert ragged_pipelined_schedule_cost(s, m, HOST_CPU, 1) == \
+        ragged_schedule_cost(s, m, HOST_CPU)
+    # more buckets never beat the serial cost by more than the overlap
+    # bound (total alpha grows with fill/drain ticks)
+    c4 = ragged_pipelined_schedule_cost(s, m, HOST_CPU, 4)
+    assert c4 > 0
+
+
+def test_choose_prices_ragged_sizes_exactly():
+    """The autotuner's model path must report the ragged cost for
+    non-divisible sizes (not the uniform approximation)."""
+    from repro.core.autotune import schedule_for
+    from repro.core.cost_model import (ragged_choose_n_buckets,
+                                       ragged_pipelined_schedule_cost)
+    P, nbytes = 8, (1 << 16) + 36
+    ch = choose(P, nbytes, HOST_CPU, tune=False)
+    sched = schedule_for(ch, P)
+    b = ragged_choose_n_buckets(sched, nbytes, HOST_CPU)
+    want = (ragged_schedule_cost(sched, nbytes, HOST_CPU) if b == 1
+            else ragged_pipelined_schedule_cost(sched, nbytes, HOST_CPU, b))
+    assert ch.n_buckets == b
+    assert ch.cost == pytest.approx(want, rel=1e-12)
+
+
+def test_choose_classifies_raggedness_by_elements_not_bytes():
+    """An f32 message of 16394 elements is 65576 bytes: the bytes divide
+    P=8 but the elements do not -- the executor runs the ragged split,
+    so the model must price it raggedly; and a byte count that is not a
+    multiple of P can still be a *uniform* element split."""
+    from repro.core.autotune import schedule_for
+    from repro.core.cost_model import ragged_pipelined_schedule_cost as rpc
+    P = 8
+    # ragged elements, divisible bytes
+    nbytes = 16394 * 4
+    assert nbytes % P == 0 and (nbytes // 4) % P != 0
+    ch = choose(P, nbytes, HOST_CPU, tune=False, itemsize=4)
+    sched = schedule_for(ch, P)
+    want = (ragged_schedule_cost(sched, nbytes, HOST_CPU, itemsize=4)
+            if ch.n_buckets == 1
+            else rpc(sched, nbytes, HOST_CPU, ch.n_buckets, 4))
+    assert ch.cost == pytest.approx(want, rel=1e-12)
+    # scaling check: pricing 16393 f32 elements must charge 4x the
+    # element units, not the byte-granular split of 65572 bytes
+    s = build_generalized(P, 0)
+    tx_el, add_el = ragged_step_units(s, 16393)
+    manual = sum(PAPER_10GE.alpha + 4 * tx * PAPER_10GE.beta
+                 + 4 * add * PAPER_10GE.gamma
+                 for tx, add, st in zip(tx_el, add_el, s.steps)
+                 if st.n_tx or st.n_adds)
+    c = ragged_schedule_cost(s, 16393 * 4, PAPER_10GE, itemsize=4)
+    assert c == pytest.approx(manual, rel=1e-12)
+
+
+def test_measured_grid_contains_ragged_sizes():
+    from repro.tuning.measure import FULL_SIZES, SMOKE_SIZES
+    for sizes in (SMOKE_SIZES, FULL_SIZES):
+        assert any((nbytes // 4) % 8 for _, nbytes in sizes), \
+            "tuning grid lost its ragged datapoints"
