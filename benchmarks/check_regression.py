@@ -22,12 +22,14 @@ envelope.  Override per-run with ``--tolerance`` or the
 Only labels (message sizes) present in BOTH files are compared -- the
 committed baseline is a full run, CI measures the smoke subset -- and at
 least one overlapping label is required, so a mis-wired gate fails loudly
-instead of green.  The same rule protects the *ragged* executor path:
-once the committed baseline carries ragged datapoints (rows with
-``"ragged": true``, i.e. message sizes whose element count does not
-divide the device count), at least one ragged label must overlap with
-the current run -- a size-list edit cannot silently drop the
-exact-split path out of the gate.
+instead of green.  The same rule protects every *class* of datapoint the
+baseline carries: ragged rows (``"ragged": true``), non-sum-operator
+rows (``"op"`` other than "sum", e.g. the ``@max`` monoid rows), and
+all-to-all rows (``"collective": "a2a"``).  Once the committed baseline
+has a class, at least one of its labels must overlap with the current
+run -- a size- or family-list edit cannot silently drop the ragged
+split, the monoid combines, or the schedule-driven all-to-all out of
+the gate.
 
 Usage (what CI runs):
     python benchmarks/run.py executor --smoke --out results/executor_smoke.json
@@ -44,12 +46,33 @@ import json
 import os
 import sys
 
-DEFAULT_KEYS = ("speedup_execplan", "speedup_pipelined")
+# a2a rows gate on bruck-vs-direct (both our own executors, measured
+# interleaved); the vs-XLA a2a ratios stay informational because XLA
+# CPU's all_to_all wallclock is bimodal across processes on the
+# baseline host
+DEFAULT_KEYS = ("speedup_execplan", "speedup_pipelined", "speedup_bruck_vs_direct")
 
 
 def is_ragged(row: dict) -> bool:
     """Ragged datapoint: flagged by the worker (older files: none are)."""
     return bool(row.get("ragged"))
+
+
+def is_nonsum_op(row: dict) -> bool:
+    """Non-sum monoid datapoint (e.g. the ``@max`` rows)."""
+    return row.get("op", "sum") not in ("sum", "a2a")
+
+
+def is_a2a(row: dict) -> bool:
+    """Schedule-driven all-to-all datapoint."""
+    return row.get("collective") == "a2a" or row.get("op") == "a2a"
+
+
+ROW_CLASSES = (
+    ("ragged", is_ragged, "the exact-split executor path"),
+    ("non-sum-op", is_nonsum_op, "the monoid (non-sum combine) path"),
+    ("a2a", is_a2a, "the schedule-driven all-to-all path"),
+)
 
 
 def load_rows(path: str) -> dict:
@@ -151,20 +174,22 @@ def main(argv=None) -> int:
             file=sys.stderr,
         )
         return 2
-    # the baseline is the source of truth for what must stay gated: once
-    # it carries ragged datapoints, a current run with no overlapping
-    # ragged label (e.g. the ragged size silently dropped from the
-    # worker's size list) must fail, not pass
-    if any(is_ragged(r) for r in baseline.values()) and not any(
-        is_ragged(baseline[c["label"]]) for c in comparisons
-    ):
-        print(
-            "check_regression: the baseline carries ragged datapoints but "
-            "no ragged label overlaps with the current run -- the "
-            "exact-split executor path dropped out of the gate",
-            file=sys.stderr,
-        )
-        return 2
+    # the baseline is the source of truth for what must stay gated: for
+    # every row class it carries (ragged sizes, non-sum monoids,
+    # all-to-all), a current run with no overlapping label of that class
+    # (e.g. the size or family silently dropped from the worker's lists)
+    # must fail, not pass
+    for cls_name, pred, what in ROW_CLASSES:
+        if any(pred(r) for r in baseline.values()) and not any(
+            pred(baseline[c["label"]]) for c in comparisons
+        ):
+            print(
+                f"check_regression: the baseline carries {cls_name} "
+                f"datapoints but no {cls_name} label overlaps with the "
+                f"current run -- {what} dropped out of the gate",
+                file=sys.stderr,
+            )
+            return 2
     for c in comparisons:
         status = "REGRESSED" if c["regressed"] else "ok"
         print(

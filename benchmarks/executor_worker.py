@@ -17,6 +17,21 @@ same ppermute rendezvous and move the same bytes, so the *relative* cost
 isolates exactly what the lowering removed: per-row op dispatch, the
 stack/unstack copies, and the double final gather.
 
+Beyond the sum rows, the benchmark covers the generalized collective
+family (select families with ``--op``, repeatable; default all):
+
+* ``<label>@max`` rows run the same three executors under the max
+  monoid (``combine="max"``) -- gating that non-sum combines keep the
+  lowering's speedup;
+* ``<label>@a2a`` rows time the schedule-driven all-to-all (direct and
+  Bruck plans) against in-process ``lax.all_to_all``.  The *gated*
+  quantity is ``speedup_bruck_vs_direct`` (both sides our own stable
+  ExecPlan replays); the ``speedup_direct`` / ``speedup_bruck``
+  vs-XLA ratios are informational only -- XLA CPU's all_to_all
+  wallclock is bimodal across processes on this host (order-of-
+  magnitude swings between identical runs), so a ratio against it
+  cannot hold a 35% gate.
+
 Prints ``executor,<label>,<variant>,<us_per_call>`` rows and writes a
 JSON summary (the repo's first BENCH datapoint) to the path given by
 ``--out``.
@@ -37,10 +52,11 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.core.allreduce import allreduce_flat
+from repro.core.allreduce import all_to_all_flat, allreduce_flat
 from repro.core.autotune import choose, schedule_for
-from repro.core.cost_model import (HOST_CPU, pipelined_schedule_cost,
-                                   schedule_cost)
+from repro.core.cost_model import (HOST_CPU, choose_a2a,
+                                   pipelined_schedule_cost, schedule_cost)
+from repro.core.monoid import MONOIDS
 from repro.core.schedule import Schedule
 
 
@@ -72,7 +88,7 @@ def _final_row_table(sched: Schedule) -> np.ndarray:
     return tbl
 
 
-def _run_steps(rows, sched: Schedule, axis_name):
+def _run_steps(rows, sched: Schedule, axis_name, combine=jnp.add):
     for st in sched.steps:
         if st.n_tx:
             tx = jnp.stack([rows[i] for i in st.tx_rows])
@@ -84,12 +100,12 @@ def _run_steps(rows, sched: Schedule, axis_name):
             elif op.kind == "recv":
                 new_rows.append(rx[op.arr])
             else:
-                new_rows.append(jnp.add(rows[op.res], rx[op.arr]))
+                new_rows.append(combine(rows[op.res], rx[op.arr]))
         rows = new_rows
     return rows
 
 
-def legacy_allreduce_flat(x, axis_name, sched: Schedule):
+def legacy_allreduce_flat(x, axis_name, sched: Schedule, combine=jnp.add):
     P_ = sched.P
     m = x.shape[0]
     u = -(-m // P_)
@@ -102,7 +118,7 @@ def legacy_allreduce_flat(x, axis_name, sched: Schedule):
     rows_idx = jnp.take(init_tbl, d, axis=1)
     stacked = jnp.take(chunks, rows_idx, axis=0)
     rows = [stacked[i] for i in range(stacked.shape[0])]
-    rows = _run_steps(rows, sched, axis_name)
+    rows = _run_steps(rows, sched, axis_name, combine)
     fin_tbl = jnp.asarray(_final_row_table(sched))
     order = jnp.take(fin_tbl, d, axis=1)
     out = jnp.take(jnp.stack(rows), order, axis=0)
@@ -134,7 +150,11 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", required=True)
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--op", action="append", default=None,
+                    choices=["sum", "max", "a2a"],
+                    help="benchmark family to run (repeatable; default all)")
     args = ap.parse_args()
+    ops = args.op or ["sum", "max", "a2a"]
 
     n = len(jax.devices())
     mesh = jax.make_mesh((n,), ("data",))
@@ -145,11 +165,15 @@ def main():
     if args.smoke:
         sizes = [("64KiB", 64 << 10), ("256KiB", 256 << 10),
                  ("256KiB+36B", (256 << 10) + 36)]
+        max_sizes = [("256KiB", 256 << 10)]
+        a2a_sizes = [("256KiB", 256 << 10)]
         iters = 3
     else:
         sizes = [("256KiB", 256 << 10), ("256KiB+36B", (256 << 10) + 36),
                  ("4MiB", 4 << 20), ("4MiB+36B", (4 << 20) + 36),
                  ("64MiB", 64 << 20)]
+        max_sizes = [("256KiB", 256 << 10), ("4MiB+36B", (4 << 20) + 36)]
+        a2a_sizes = [("256KiB", 256 << 10), ("4MiB", 4 << 20)]
         iters = 5
 
     def jit_collective(fn):
@@ -158,45 +182,99 @@ def main():
             in_specs=P("data", None), out_specs=P("data", None)))
 
     results = []
-    for label, nbytes in sizes:
-        m = nbytes // 4
-        x = rng.standard_normal((n, m)).astype(np.float32)
-        ch = choose(n, nbytes, HOST_CPU, itemsize=4)
-        sched = schedule_for(ch, n)
-        nb = max(2, ch.n_buckets)      # exercise the pipeline even if the
-        # model's optimum degenerates to one bucket at this size
-        variants = {
-            "legacy": jit_collective(
-                lambda v: legacy_allreduce_flat(v, "data", sched)),
-            "execplan": jit_collective(
-                lambda v: allreduce_flat(v, "data", sched, n_buckets=1)),
-            "pipelined": jit_collective(
-                lambda v: allreduce_flat(v, "data", sched, n_buckets=nb)),
-            "xla_psum": jit_collective(
-                lambda v: lax.psum(v, "data")),
-        }
-        # all variants must agree before any timing counts
-        ref = np.asarray(variants["legacy"](x))[0]
-        for name in ("execplan", "pipelined"):
-            np.testing.assert_allclose(np.asarray(variants[name](x))[0],
-                                       ref, rtol=1e-6, atol=1e-6)
-        row = {"label": label, "bytes": nbytes, "ragged": m % n != 0,
-               "schedule": {"kind": ch.kind, "r": ch.r},
-               "n_buckets": nb, "model_n_buckets": ch.n_buckets}
-        timed = bench_interleaved(variants, x, iters)
-        for name, us in timed.items():
-            row[f"{name}_us"] = round(us, 1)
-            print(f"executor,{label},{name},{us:.1f}")
-        row["speedup_execplan"] = round(row["legacy_us"]
-                                        / row["execplan_us"], 3)
-        row["speedup_pipelined"] = round(row["legacy_us"]
-                                         / row["pipelined_us"], 3)
-        # what the extended cost model predicts pipelining buys on a
-        # fabric where comm and combine genuinely overlap
-        row["model_speedup_pipelined"] = round(
-            schedule_cost(sched, nbytes, HOST_CPU)
-            / pipelined_schedule_cost(sched, nbytes, HOST_CPU, nb), 3)
-        results.append(row)
+
+    def reduce_rows(bench_sizes, op):
+        suffix = "" if op == "sum" else f"@{op}"
+        for label, nbytes in bench_sizes:
+            m = nbytes // 4
+            x = rng.standard_normal((n, m)).astype(np.float32)
+            ch = choose(n, nbytes, HOST_CPU, itemsize=4,
+                        monoid=MONOIDS[op])
+            sched = schedule_for(ch, n)
+            nb = max(2, ch.n_buckets)  # exercise the pipeline even if the
+            # model's optimum degenerates to one bucket at this size
+            legacy_comb = jnp.add if op == "sum" else jnp.maximum
+            variants = {
+                "legacy": jit_collective(
+                    lambda v: legacy_allreduce_flat(v, "data", sched,
+                                                    legacy_comb)),
+                "execplan": jit_collective(
+                    lambda v: allreduce_flat(v, "data", sched, n_buckets=1,
+                                             combine=op)),
+                "pipelined": jit_collective(
+                    lambda v: allreduce_flat(v, "data", sched, n_buckets=nb,
+                                             combine=op)),
+                "xla_psum": jit_collective(
+                    (lambda v: lax.psum(v, "data")) if op == "sum"
+                    else (lambda v: lax.pmax(v, "data"))),
+            }
+            # all variants must agree before any timing counts
+            ref = np.asarray(variants["legacy"](x))[0]
+            for name in ("execplan", "pipelined"):
+                np.testing.assert_allclose(np.asarray(variants[name](x))[0],
+                                           ref, rtol=1e-6, atol=1e-6)
+            row = {"label": label + suffix, "bytes": nbytes,
+                   "ragged": m % n != 0, "op": op,
+                   "schedule": {"kind": ch.kind, "r": ch.r},
+                   "n_buckets": nb, "model_n_buckets": ch.n_buckets}
+            timed = bench_interleaved(variants, x, iters)
+            for name, us in timed.items():
+                row[f"{name}_us"] = round(us, 1)
+                print(f"executor,{label}{suffix},{name},{us:.1f}")
+            row["speedup_execplan"] = round(row["legacy_us"]
+                                            / row["execplan_us"], 3)
+            row["speedup_pipelined"] = round(row["legacy_us"]
+                                             / row["pipelined_us"], 3)
+            # what the extended cost model predicts pipelining buys on a
+            # fabric where comm and combine genuinely overlap
+            row["model_speedup_pipelined"] = round(
+                schedule_cost(sched, nbytes, HOST_CPU, MONOIDS[op])
+                / pipelined_schedule_cost(sched, nbytes, HOST_CPU, nb,
+                                          MONOIDS[op]), 3)
+            results.append(row)
+
+    def a2a_rows(bench_sizes):
+        for label, nbytes in bench_sizes:
+            m = nbytes // 4
+            assert m % n == 0, "a2a sizes must divide the device count"
+            x = rng.standard_normal((n, m)).astype(np.float32)
+            variants = {
+                "xla_a2a": jit_collective(
+                    lambda v: lax.all_to_all(
+                        v.reshape(n, -1), "data", 0, 0).reshape(-1)),
+                "direct": jit_collective(
+                    lambda v: all_to_all_flat(v, "data", kind="direct")),
+                "bruck": jit_collective(
+                    lambda v: all_to_all_flat(v, "data", kind="bruck")),
+            }
+            ref = np.asarray(variants["xla_a2a"](x))[0]
+            for name in ("direct", "bruck"):
+                np.testing.assert_allclose(np.asarray(variants[name](x))[0],
+                                           ref, rtol=0, atol=0)
+            row = {"label": f"{label}@a2a", "bytes": nbytes,
+                   "ragged": False, "op": "a2a", "collective": "a2a",
+                   "model_kind": choose_a2a(n, float(nbytes), HOST_CPU)}
+            timed = bench_interleaved(variants, x, iters)
+            for name, us in timed.items():
+                row[f"{name}_us"] = round(us, 1)
+                print(f"executor,{label}@a2a,{name},{us:.1f}")
+            # informational: XLA CPU a2a wallclock is bimodal across
+            # processes here, so these two are not gate-stable
+            row["speedup_direct"] = round(row["xla_a2a_us"]
+                                          / row["direct_us"], 3)
+            row["speedup_bruck"] = round(row["xla_a2a_us"]
+                                         / row["bruck_us"], 3)
+            # gated: both sides are our own interleaved ExecPlan replays
+            row["speedup_bruck_vs_direct"] = round(row["direct_us"]
+                                                   / row["bruck_us"], 3)
+            results.append(row)
+
+    if "sum" in ops:
+        reduce_rows(sizes, "sum")
+    if "max" in ops:
+        reduce_rows(max_sizes, "max")
+    if "a2a" in ops:
+        a2a_rows(a2a_sizes)
 
     payload = {"P": n, "platform": jax.default_backend(),
                "mode": "smoke" if args.smoke else "full",
@@ -207,7 +285,10 @@ def main():
                          "converges across executors at large sizes; the "
                          "pipelining win shows in model_speedup_pipelined "
                          "and on asynchronous fabrics. xla_psum bounds "
-                         "what a native fused collective achieves here."),
+                         "what a native fused collective achieves here. "
+                         "@max rows run the same executors under the max "
+                         "monoid; @a2a rows compare the schedule-driven "
+                         "all-to-all plans against lax.all_to_all."),
                "results": results}
     os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
     with open(args.out, "w") as f:

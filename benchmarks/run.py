@@ -17,10 +17,11 @@ plus:
   wall   -- real wall-clock of the JAX executor on 8 host devices
 
 Modes (first positional arg): ``figures`` (default), ``executor
-[--smoke] [--out PATH]`` (executor wallclock comparison ->
+[--smoke] [--out PATH] [--op sum|max|a2a ...]`` (executor wallclock
+comparison incl. max-monoid and all-to-all rows ->
 results/executor.json), ``tune [--smoke] [--out PATH] [--cache PATH]``
-(measured autotuning grid -> persistent tuning cache +
-results/tuning.json).
+(measured autotuning grid, sum + max operators ->
+persistent tuning cache + results/tuning.json).
 """
 from __future__ import annotations
 
@@ -172,11 +173,17 @@ def _worker_bench(script_name: str, prefix: str, extra, timeout=1800) -> None:
 
 
 def executor_bench(smoke: bool = False,
-                   out: str = "results/executor.json") -> None:
+                   out: str = "results/executor.json",
+                   ops=()) -> None:
     """Old per-row replay vs ExecPlan vs pipelined ExecPlan wallclock on
     8 simulated CPU devices (the perf trajectory's BENCH datapoint);
-    writes ``results/executor.json``."""
+    writes ``results/executor.json``.  ``--op {sum,max,a2a}``
+    (repeatable) restricts the benchmark families: ``max`` rows run the
+    executors under the max monoid, ``a2a`` rows time the
+    schedule-driven all-to-all against ``lax.all_to_all``."""
     extra = ["--out", out] + (["--smoke"] if smoke else [])
+    for op in ops:
+        extra += ["--op", op]
     _worker_bench("executor_worker.py", "executor", extra)
 
 
@@ -217,8 +224,11 @@ def main(argv=None) -> None:
     if mode == "figures":
         figures()
     elif mode == "executor":
+        ops = tuple(argv[i + 1] for i, a in enumerate(argv)
+                    if a == "--op" and i + 1 < len(argv))
         executor_bench(smoke="--smoke" in argv,
-                       out=_opt(argv, "--out", "results/executor.json"))
+                       out=_opt(argv, "--out", "results/executor.json"),
+                       ops=ops)
     elif mode == "tune":
         tune_bench(smoke="--smoke" in argv,
                    out=_opt(argv, "--out", "results/tuning.json"),

@@ -3,8 +3,10 @@
 Public API:
   group        -- abelian permutation groups (cyclic / hypercube / mixed-radix)
   schedule     -- symbolic schedule compiler + verification
+  monoid       -- first-class combine operators (sum/max/min/mean/premul/custom)
   simulator    -- numpy oracle executing schedules process-by-process
   execplan     -- Schedule -> ExecPlan lowering + vectorized/pipelined replay
+                  (incl. the permutation-group all-to-all plan tables)
   cost_model   -- alpha-beta-gamma model, the paper's closed forms
   autotune     -- per-message-size algorithm / step / bucket selection
   allreduce    -- JAX shard_map executors (ppermute programs)
@@ -15,16 +17,19 @@ from .schedule import (InvalidScheduleError, Schedule, ShapeError,
                        build_reduce_scatter, build_ring, max_r, n_steps_log,
                        ragged_offsets, ragged_sizes, ragged_step_units,
                        schedule_summary)
-from .execplan import ExecPlan, compile_plan, simulate_plan
+from .monoid import (MAX, MEAN, MIN, MONOIDS, SUM, Monoid, custom,
+                     premul_sum, resolve_combine)
+from .execplan import (ExecPlan, compile_a2a_plan, compile_plan,
+                       simulate_a2a, simulate_plan)
 from .cost_model import (Fabric, HOST_CPU, PAPER_10GE, TPU_V5E_ICI,
-                         choose_n_buckets, optimal_r_analytic,
-                         optimal_r_search, pipelined_schedule_cost,
-                         ragged_choose_n_buckets,
+                         a2a_cost, choose_a2a, choose_n_buckets,
+                         optimal_r_analytic, optimal_r_search,
+                         pipelined_schedule_cost, ragged_choose_n_buckets,
                          ragged_pipelined_schedule_cost, ragged_schedule_cost,
                          schedule_cost, tau_best_sota, tau_bw_optimal,
                          tau_intermediate, tau_latency_optimal, tau_ring)
-from .allreduce import (all_gather_flat, allreduce_flat, allreduce_tree,
-                        exact_chunks, hierarchical_allreduce,
+from .allreduce import (all_gather_flat, all_to_all_flat, allreduce_flat,
+                        allreduce_tree, exact_chunks, hierarchical_allreduce,
                         hierarchical_allreduce_flat, psum_tree,
                         reduce_scatter_flat, tree_all_gather,
                         tree_reduce_scatter)

@@ -49,6 +49,7 @@ by :func:`repro.topology.hierarchical.choose_collective`.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from functools import lru_cache
 from typing import (TYPE_CHECKING, Callable, List, Optional, Sequence,
@@ -62,9 +63,10 @@ from jax import lax
 from repro import compat
 
 from .autotune import choose, schedule_for
-from .cost_model import (Fabric, TPU_V5E_ICI, choose_n_buckets,
+from .cost_model import (Fabric, TPU_V5E_ICI, choose_a2a, choose_n_buckets,
                          ragged_choose_n_buckets)
-from .execplan import ExecPlan, compile_plan, execute
+from .execplan import (ExecPlan, compile_a2a_plan, compile_plan, execute)
+from .monoid import CombineLike, resolve_combine
 from .schedule import (Schedule, ShapeError, build_all_gather,
                        build_generalized, build_reduce_scatter,
                        ragged_sizes)
@@ -76,7 +78,7 @@ if TYPE_CHECKING:  # repro.topology is the layer above this one; importing
     from repro.topology.hierarchical import HierarchicalSchedule
 
 AxisName = Union[str, Tuple[str, ...]]
-CombineFn = Union[str, Callable]
+CombineFn = CombineLike   # legacy alias; combine= is monoid-aware now
 
 
 def axis_size(axis_name: AxisName) -> int:
@@ -252,19 +254,24 @@ def allreduce_flat(x: jnp.ndarray, axis_name: AxisName,
     elements; the physical rows share the width ``ceil(m / P)`` with
     zero tails that the final gather drops).  ``n_buckets`` pipelines
     the message across equal buckets (see module docstring); ``combine``
-    selects the combine implementation ("auto", "add", "pallas", or a
-    binary callable).
+    selects the combine *operator* (a Monoid, "sum" / "max" / "min" /
+    "mean", or a binary callable) and/or its implementation ("auto",
+    "add", "pallas" -- see
+    :func:`repro.core.monoid.resolve_combine`).  Mean's divide and
+    premul_sum's input scale run here, once over the whole message.
     """
     P = sched.P
     actual = axis_size(axis_name)
     if P != actual:
         raise ShapeError(f"schedule P != size of axis {axis_name!r}",
                          expected=P, actual=actual)
+    monoid, _ = resolve_combine(combine)
     if P == 1:
-        return x
+        return monoid.finalize(monoid.prepare(x, P), P).astype(x.dtype)
     orig_dtype = x.dtype
     if accum_dtype is not None:
         x = x.astype(accum_dtype)
+    x = monoid.prepare(x, P)
     chunks, m = exact_chunks(x, P)                        # (P, u_max)
     plan = compile_plan(sched)
     d = _linear_axis_index(axis_name)
@@ -274,6 +281,7 @@ def allreduce_flat(x: jnp.ndarray, axis_name: AxisName,
     rows = _merge_rows(bucket_rows, u)
     out = _final_gather(rows, plan, d)                     # (P, u_max)
     out = _ragged_flatten(out, m)                          # exact (m,)
+    out = monoid.finalize(out, P)
     return out.astype(orig_dtype)
 
 
@@ -292,6 +300,8 @@ def reduce_scatter_flat(x: jnp.ndarray, axis_name: AxisName,
     whose chunk is one element short (for ``m`` divisible by ``P`` the
     whole buffer is valid, exactly as before).  Use
     :func:`all_gather_flat` with ``sizes=`` to reassemble exactly.
+    ``combine`` selects the operator exactly as in
+    :func:`allreduce_flat` (monoid bookends included).
     """
     P = axis_size(axis_name)
     if sched is None:
@@ -299,11 +309,13 @@ def reduce_scatter_flat(x: jnp.ndarray, axis_name: AxisName,
     elif sched.P != P:
         raise ShapeError(f"schedule P != size of axis {axis_name!r}",
                          expected=sched.P, actual=P)
+    monoid, _ = resolve_combine(combine)
     if P == 1:
-        return x
+        return monoid.finalize(monoid.prepare(x, P), P).astype(x.dtype)
     orig_dtype = x.dtype
     if accum_dtype is not None:
         x = x.astype(accum_dtype)
+    x = monoid.prepare(x, P)
     chunks, _ = exact_chunks(x, P)
     plan = compile_plan(sched)
     d = _linear_axis_index(axis_name)
@@ -314,7 +326,7 @@ def reduce_scatter_flat(x: jnp.ndarray, axis_name: AxisName,
     # the single final row's slot is SPMD-uniform; canonical place-0
     # layout means device d already owns chunk d.
     slot = int(plan.final_rows.max())
-    return rows[slot].astype(orig_dtype)
+    return monoid.finalize(rows[slot], P).astype(orig_dtype)
 
 
 def all_gather_flat(chunk: jnp.ndarray, axis_name: AxisName,
@@ -368,6 +380,54 @@ def all_gather_flat(chunk: jnp.ndarray, axis_name: AxisName,
     return jnp.take(out.reshape(-1), jnp.asarray(idx))
 
 
+def all_to_all_flat(x: jnp.ndarray, axis_name: AxisName, *,
+                    kind: str = "auto",
+                    fabric: Fabric = TPU_V5E_ICI,
+                    n_buckets: int = 1) -> jnp.ndarray:
+    """Permutation-group all-to-all of a flat vector over ``axis_name``.
+
+    Device ``d`` contributes ``P`` equal chunks ``x[c*u:(c+1)*u]``
+    (chunk ``c`` destined for rank ``c``) and receives the concatenation
+    of every rank's chunk ``d`` -- the exact transpose
+    ``lax.all_to_all`` computes on equally-split buffers, replayed as
+    the same static ``ppermute`` step tables the reductions use (see
+    :func:`repro.core.execplan.compile_a2a_plan`).
+
+    ``kind``: "direct" (P-1 single-row steps, minimal traffic),
+    "bruck" (ceil(lg P) steps of ~P/2 rows, minimal latency), or
+    "auto" -- picked per message size by the alpha-beta cost model
+    (:func:`repro.core.cost_model.choose_a2a`).  ``n_buckets`` software-
+    pipelines the exchange exactly like the reductions (there are no
+    combines to overlap, but staging bucket ``k``'s ppermute behind
+    bucket ``k-1``'s still splits the wire serialization on
+    asynchronous fabrics).
+
+    All-to-all is a pure permutation of P*P distinct blocks, so unlike
+    the reductions it has no ragged form whose tails an SPMD program
+    could drop uniformly: the length must divide ``P`` (the same
+    contract as ``lax.all_to_all``), enforced as a typed
+    :class:`~repro.core.schedule.ShapeError`.
+    """
+    P = axis_size(axis_name)
+    if P == 1:
+        return x
+    m = x.shape[0]
+    if m % P:
+        raise ShapeError(
+            f"all_to_all_flat needs P | m over axis {axis_name!r}",
+            expected=f"multiple of {P}", actual=m)
+    if kind == "auto":
+        kind = choose_a2a(P, m * x.dtype.itemsize, fabric)
+    plan = compile_a2a_plan(P, kind)
+    chunks = x.reshape(P, m // P)
+    d = _linear_axis_index(axis_name)
+    rows = _lazy_init_rows(chunks, plan, d)
+    bucket_rows, u = _bucket_rows(rows, n_buckets)
+    bucket_rows = execute(plan, bucket_rows, axis_name)
+    rows = _merge_rows(bucket_rows, u)
+    return _final_gather(rows, plan, d).reshape(-1)
+
+
 # ---------------------------------------------------------------------------
 #  pytree API with bucketing + autotuned schedule choice
 # ---------------------------------------------------------------------------
@@ -414,8 +474,21 @@ def allreduce_tree(tree, axis_name: AxisName, *,
     extended cost model) so communication of bucket k overlaps combines
     of bucket k-1.  ``tune`` opts the autotuner into the measured tuning
     table (see :mod:`repro.tuning`; None reads ``REPRO_TUNING``).
+
+    ``combine`` selects the operator for the whole family (any Monoid /
+    "sum" / "max" / "min" / "mean" / callable): the autotuner prices
+    candidates with the monoid's own gamma, and for non-add monoids the
+    f32 accumulation cast is skipped (max/min lose nothing to the
+    accumulator, and an int max must stay bit-exact past 2**24).
+    ``mean`` composes only with the sum operator.
     """
     P = axis_size(axis_name)
+    monoid, _ = resolve_combine(combine)
+    if mean and monoid.name not in ("sum", "mean"):
+        raise ValueError(f"mean=True only composes with the sum operator, "
+                         f"not {monoid.name!r}")
+    if monoid.kind != "add":
+        accum_dtype = None
     if P == 1:
         return tree
     flat, spec = _flatten_tree(tree)
@@ -424,7 +497,8 @@ def allreduce_tree(tree, axis_name: AxisName, *,
     if r is None:
         # raggedness is an *element*-count property: the executor splits
         # elements, so the chooser needs the itemsize, not just bytes
-        ch = choose(P, int(nbytes), fabric, tune=tune, itemsize=itemsize)
+        ch = choose(P, int(nbytes), fabric, tune=tune, itemsize=itemsize,
+                    monoid=monoid)
         sched = schedule_for(ch, P)
         if n_buckets is None:
             n_buckets = ch.n_buckets
@@ -434,12 +508,14 @@ def allreduce_tree(tree, axis_name: AxisName, *,
             if flat.size % P:
                 n_buckets = ragged_choose_n_buckets(sched, int(nbytes),
                                                     fabric,
-                                                    itemsize=itemsize)
+                                                    itemsize=itemsize,
+                                                    monoid=monoid)
             else:
-                n_buckets = choose_n_buckets(sched, int(nbytes), fabric)
+                n_buckets = choose_n_buckets(sched, int(nbytes), fabric,
+                                             monoid=monoid)
     out = allreduce_flat(flat, axis_name, sched, accum_dtype=accum_dtype,
                          combine=combine, n_buckets=n_buckets)
-    if mean:
+    if mean and monoid.name == "sum":
         out = out / P
     return _unflatten_tree(out, spec)
 
@@ -460,6 +536,13 @@ def hierarchical_allreduce_flat(x: jnp.ndarray, axis_names: Sequence[str],
     inner-level steps never touch the outer (DCN) links.  ``n_buckets``
     pipelines the outer-level allreduce -- the phase that rides the slow
     links and so profits most from comm/combine overlap.
+
+    The monoid's affine bookends act on the *whole* composition, not per
+    level: premul's scale is applied once before the first inner
+    reduce-scatter and mean's divide once after the last all-gather
+    (the per-level executors run the bookend-free core combine), so a
+    2-level mesh scales by f -- not f^2 -- and mean divides by the full
+    ``topology.P`` in one exact step.
     """
     topo = hs.topology
     if len(axis_names) != topo.n_levels:
@@ -471,11 +554,22 @@ def hierarchical_allreduce_flat(x: jnp.ndarray, axis_names: Sequence[str],
             raise ShapeError(f"axis {name!r} size != topology level "
                              f"{lvl.name}", expected=lvl.size,
                              actual=compat.axis_size(name))
+    monoid, impl = resolve_combine(combine)
+    if monoid.pre_scale is not None or monoid.post_divide:
+        # strip the bookends off what the per-level executors see (they
+        # must run the bare core combine -- a per-level prepare/finalize
+        # would compound the scale once per stage); keep the caller's
+        # Pallas hint where the string form can still express it
+        core = dataclasses.replace(monoid, pre_scale=None,
+                                   post_divide=False)
+        combine = "pallas" if (impl == "pallas" and core.kind == "add") \
+            else core
     if topo.P == 1:
-        return x
+        return monoid.finalize(monoid.prepare(x, 1), 1).astype(x.dtype)
     orig_dtype = x.dtype
     if accum_dtype is not None:
         x = x.astype(accum_dtype)
+    x = monoid.prepare(x, topo.P)
     m = x.shape[0]
     inner = topo.inner_size
     # The per-level composition is kept on the divisible layout: each
@@ -499,7 +593,7 @@ def hierarchical_allreduce_flat(x: jnp.ndarray, axis_names: Sequence[str],
     # all-gather back up, reverse order
     for sched, axis in zip(hs.ag, reversed(inner_axes)):
         cur = all_gather_flat(cur, axis, sched)
-    return cur[:m].astype(orig_dtype)
+    return monoid.finalize(cur[:m], topo.P).astype(orig_dtype)
 
 
 def hierarchical_allreduce(tree, axis_names: Sequence[str],
@@ -526,6 +620,12 @@ def hierarchical_allreduce(tree, axis_names: Sequence[str],
                                              choose_collective,
                                              schedules_for_plan)
     P = topology.P
+    monoid, _ = resolve_combine(combine)
+    if mean and monoid.name not in ("sum", "mean"):
+        raise ValueError(f"mean=True only composes with the sum operator, "
+                         f"not {monoid.name!r}")
+    if monoid.kind != "add":
+        accum_dtype = None
     if P == 1:
         return tree
     flat, spec = _flatten_tree(tree)
@@ -549,7 +649,7 @@ def hierarchical_allreduce(tree, axis_names: Sequence[str],
         out = allreduce_flat(flat, tuple(axis_names), sched,
                              accum_dtype=accum_dtype, combine=combine,
                              n_buckets=n_buckets)
-    if mean:
+    if mean and monoid.name == "sum":
         out = out / P
     return _unflatten_tree(out, spec)
 

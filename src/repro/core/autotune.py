@@ -31,6 +31,7 @@ from .cost_model import (Fabric, TPU_V5E_ICI, choose_n_buckets,
                          pipelined_schedule_cost, ragged_choose_n_buckets,
                          ragged_pipelined_schedule_cost, ragged_schedule_cost,
                          schedule_cost)
+from .monoid import Monoid
 from .schedule import Schedule, build_generalized, build_ring, n_steps_log
 
 
@@ -49,7 +50,7 @@ def _tune_default() -> bool:
 
 def choose(P: int, nbytes: int, fabric: Fabric = TPU_V5E_ICI,
            allow_ring: bool = True, tune: Optional[bool] = None,
-           itemsize: int = 1) -> Choice:
+           itemsize: int = 1, monoid: Optional[Monoid] = None) -> Choice:
     """Pick (kind, r, n_buckets) minimizing time for an allreduce of
     ``nbytes`` over ``P`` devices.
 
@@ -57,6 +58,11 @@ def choose(P: int, nbytes: int, fabric: Fabric = TPU_V5E_ICI,
     *elements*, so raggedness (and the exact ragged chunk geometry) is
     decided by ``nbytes // itemsize`` -- an f32 message of 16394
     elements is ragged over P=8 even though its 65576 bytes divide 8.
+
+    ``monoid`` is the combine operator: its per-element cost scales the
+    gamma term of every candidate (see
+    :func:`repro.core.cost_model.schedule_cost`), and measured-table
+    lookups only consider measurements taken under the same operator.
 
     With ``tune`` enabled (explicitly, or via ``REPRO_TUNING=1`` when
     ``tune=None``) the measured tuning table is consulted first; it
@@ -75,16 +81,19 @@ source='model')
     if _tune_default() if tune is None else tune:
         from repro.tuning import policy  # deferred: tuning sits above core
         measured = policy.lookup(P, int(nbytes), allow_ring=allow_ring,
-                                 itemsize=max(int(itemsize), 1))
+                                 itemsize=max(int(itemsize), 1),
+                                 op=monoid.name if monoid is not None
+                                 else "sum")
         if measured is not None:
             return measured
     return _choose_model(P, int(nbytes), fabric, allow_ring,
-                         max(int(itemsize), 1))
+                         max(int(itemsize), 1), monoid)
 
 
 @lru_cache(maxsize=None)
 def _choose_model(P: int, nbytes: int, fabric: Fabric,
-                  allow_ring: bool, itemsize: int = 1) -> Choice:
+                  allow_ring: bool, itemsize: int = 1,
+                  monoid: Optional[Monoid] = None) -> Choice:
     """Analytic pick from the exact schedule-derived cost model.
 
     For a message whose *element count* (``nbytes // itemsize``) does
@@ -98,14 +107,14 @@ def _choose_model(P: int, nbytes: int, fabric: Fabric,
     best: Optional[Choice] = None
     for r in range(n_steps_log(P) + 1):
         s = build_generalized(P, r)
-        c = (ragged_schedule_cost(s, nbytes, fabric, itemsize) if ragged
-             else schedule_cost(s, nbytes, fabric))
+        c = (ragged_schedule_cost(s, nbytes, fabric, itemsize, monoid)
+             if ragged else schedule_cost(s, nbytes, fabric, monoid))
         if best is None or c < best.cost:
             best = Choice("generalized", r, c)
     if allow_ring:
         s = build_ring(P)
-        c = (ragged_schedule_cost(s, nbytes, fabric, itemsize) if ragged
-             else schedule_cost(s, nbytes, fabric))
+        c = (ragged_schedule_cost(s, nbytes, fabric, itemsize, monoid)
+             if ragged else schedule_cost(s, nbytes, fabric, monoid))
         if c < best.cost:
             best = Choice("ring", 0, c)
     # re-cost the winner with software pipelining: the bucket count that
@@ -113,18 +122,19 @@ def _choose_model(P: int, nbytes: int, fabric: Fabric,
     sched = schedule_for(best, P)
     if ragged:
         b = ragged_choose_n_buckets(sched, nbytes, fabric,
-                                    itemsize=itemsize)
+                                    itemsize=itemsize, monoid=monoid)
         if b > 1:
             best = Choice(best.kind, best.r,
                           ragged_pipelined_schedule_cost(sched, nbytes,
                                                          fabric, b,
-                                                         itemsize), b)
+                                                         itemsize, monoid),
+                          b)
     else:
-        b = choose_n_buckets(sched, nbytes, fabric)
+        b = choose_n_buckets(sched, nbytes, fabric, monoid=monoid)
         if b > 1:
             best = Choice(best.kind, best.r,
-                          pipelined_schedule_cost(sched, nbytes, fabric, b),
-                          b)
+                          pipelined_schedule_cost(sched, nbytes, fabric, b,
+                                                  monoid), b)
     return best
 
 

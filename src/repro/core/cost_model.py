@@ -24,9 +24,19 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
+from typing import Optional
 
+from .monoid import Monoid
 from .schedule import (Schedule, build_generalized, build_ring, n_steps_log,
                        ragged_step_units)
+
+
+def _gamma(f: "Fabric", monoid: Optional[Monoid]) -> float:
+    """Per-monoid combine speed: the fabric's gamma scaled by the
+    operator's cost relative to a plain add (1.0 for every built-in --
+    add/max/min are each one VPU instruction per element and the kernel
+    is memory-bound; a custom monoid carries its own factor)."""
+    return f.gamma * (monoid.gamma_scale if monoid is not None else 1.0)
 
 
 @dataclass(frozen=True)
@@ -181,24 +191,28 @@ def optimal_r_search(P: int, m: float, f: Fabric) -> int:
 #  exact schedule-derived cost
 # ---------------------------------------------------------------------------
 
-def schedule_cost(sched: Schedule, m: float, f: Fabric) -> float:
+def schedule_cost(sched: Schedule, m: float, f: Fabric,
+                  monoid: Optional[Monoid] = None) -> float:
     """Exact alpha-beta-gamma cost of a compiled schedule.
 
     Counts the real per-device traffic: sum over steps of
-    alpha + (n_tx * u) * beta + (n_adds * u) * gamma.
+    alpha + (n_tx * u) * beta + (n_adds * u) * gamma, with gamma scaled
+    by the monoid's per-element combine cost (see :func:`_gamma`).
     """
     P = sched.P
     u = chunk_size(m, P)
+    g = _gamma(f, monoid)
     t = 0.0
     for st in sched.steps:
         if st.n_tx == 0 and st.n_adds == 0:
             continue  # bookkeeping-only step
-        t += f.alpha + st.n_tx * u * f.beta + st.n_adds * u * f.gamma
+        t += f.alpha + st.n_tx * u * f.beta + st.n_adds * u * g
     return t
 
 
 def ragged_schedule_cost(sched: Schedule, m: int, f: Fabric,
-                         itemsize: int = 1) -> float:
+                         itemsize: int = 1,
+                         monoid: Optional[Monoid] = None) -> float:
     """Exact alpha-beta-gamma cost of a schedule under the *ragged* split.
 
     :func:`schedule_cost` prices every transmitted unit at a uniform
@@ -225,6 +239,7 @@ def ragged_schedule_cost(sched: Schedule, m: int, f: Fabric,
     """
     elems = max(int(m) // max(int(itemsize), 1), 0)
     tx_units, add_units = ragged_step_units(sched, elems)
+    g = _gamma(f, monoid)
     t = 0.0
     for st, tx, add in zip(sched.steps, tx_units, add_units):
         if st.n_tx == 0 and st.n_adds == 0:
@@ -232,22 +247,24 @@ def ragged_schedule_cost(sched: Schedule, m: int, f: Fabric,
         # alpha is charged even when every transmitted chunk is empty
         # (m < P): the SPMD executor still runs the ppermute rendezvous
         t += (f.alpha + tx * itemsize * f.beta
-              + add * itemsize * f.gamma)
+              + add * itemsize * g)
     return t
 
 
 def ragged_pipelined_schedule_cost(sched: Schedule, m: int, f: Fabric,
                                    n_buckets: int,
-                                   itemsize: int = 1) -> float:
+                                   itemsize: int = 1,
+                                   monoid: Optional[Monoid] = None) -> float:
     """Ragged analogue of :func:`pipelined_schedule_cost`: the bucketed
     replay splits every chunk column-wise into ``n_buckets`` equal
     slices, so each bucket carries ``1 / n_buckets`` of every true
     per-step byte count; ticks overlap comm and combine across buckets
     exactly as in the uniform model."""
     if n_buckets <= 1:
-        return ragged_schedule_cost(sched, m, f, itemsize)
+        return ragged_schedule_cost(sched, m, f, itemsize, monoid)
     elems = max(int(m) // max(int(itemsize), 1), 0)
     tx_units, add_units = ragged_step_units(sched, elems)
+    g = _gamma(f, monoid)
     live = [(tx * itemsize, add * itemsize) for st, tx, add in
             zip(sched.steps, tx_units, add_units)
             if st.n_tx or st.n_adds]
@@ -259,13 +276,14 @@ def ragged_pipelined_schedule_cost(sched: Schedule, m: int, f: Fabric,
             s = tick - j
             if 0 <= s < S:
                 comm += live[s][0] / n_buckets * f.beta
-                comb += live[s][1] / n_buckets * f.gamma
+                comb += live[s][1] / n_buckets * g
         t += f.alpha + max(comm, comb)
     return t
 
 
 def pipelined_schedule_cost(sched: Schedule, m: float, f: Fabric,
-                            n_buckets: int) -> float:
+                            n_buckets: int,
+                            monoid: Optional[Monoid] = None) -> float:
     """Extended cost model: the schedule replayed over ``n_buckets``
     software-pipelined buckets of ``m / n_buckets`` bytes each.
 
@@ -279,9 +297,10 @@ def pipelined_schedule_cost(sched: Schedule, m: float, f: Fabric,
     :func:`schedule_cost` exactly.
     """
     if n_buckets <= 1:
-        return schedule_cost(sched, m, f)
+        return schedule_cost(sched, m, f, monoid)
     P = sched.P
     u = chunk_size(m, P) / n_buckets
+    g = _gamma(f, monoid)
     steps = [st for st in sched.steps if st.n_tx or st.n_adds]
     S = len(steps)
     t = 0.0
@@ -291,14 +310,15 @@ def pipelined_schedule_cost(sched: Schedule, m: float, f: Fabric,
             s = tick - j
             if 0 <= s < S:
                 comm += steps[s].n_tx * u * f.beta
-                comb += steps[s].n_adds * u * f.gamma
+                comb += steps[s].n_adds * u * g
         t += f.alpha + max(comm, comb)
     return t
 
 
 def choose_n_buckets(sched: Schedule, m: float, f: Fabric,
                      max_buckets: int = 8,
-                     min_bucket_bytes: float = 32 * 1024) -> int:
+                     min_bucket_bytes: float = 32 * 1024,
+                     monoid: Optional[Monoid] = None) -> int:
     """argmin over the pipelined cost of the bucket count for ``m`` bytes.
 
     Buckets below ``min_bucket_bytes`` of per-chunk payload are never
@@ -308,11 +328,11 @@ def choose_n_buckets(sched: Schedule, m: float, f: Fabric,
     """
     if sched.P <= 1 or m <= 0:
         return 1
-    best_b, best_c = 1, schedule_cost(sched, m, f)
+    best_b, best_c = 1, schedule_cost(sched, m, f, monoid)
     for b in range(2, max_buckets + 1):
         if chunk_size(m, sched.P) / b < min_bucket_bytes:
             break
-        c = pipelined_schedule_cost(sched, m, f, b)
+        c = pipelined_schedule_cost(sched, m, f, b, monoid)
         if c < best_c:
             best_b, best_c = b, c
     return best_b
@@ -321,19 +341,66 @@ def choose_n_buckets(sched: Schedule, m: float, f: Fabric,
 def ragged_choose_n_buckets(sched: Schedule, m: int, f: Fabric,
                             max_buckets: int = 8,
                             min_bucket_bytes: float = 32 * 1024,
-                            itemsize: int = 1) -> int:
+                            itemsize: int = 1,
+                            monoid: Optional[Monoid] = None) -> int:
     """argmin over the *ragged* pipelined cost of the bucket count; same
     small-bucket guard as :func:`choose_n_buckets`."""
     if sched.P <= 1 or m <= 0:
         return 1
-    best_b, best_c = 1, ragged_schedule_cost(sched, m, f, itemsize)
+    best_b, best_c = 1, ragged_schedule_cost(sched, m, f, itemsize, monoid)
     for b in range(2, max_buckets + 1):
         if chunk_size(m, sched.P) / b < min_bucket_bytes:
             break
-        c = ragged_pipelined_schedule_cost(sched, m, f, b, itemsize)
+        c = ragged_pipelined_schedule_cost(sched, m, f, b, itemsize, monoid)
         if c < best_c:
             best_b, best_c = b, c
     return best_b
+
+
+# ---------------------------------------------------------------------------
+#  all-to-all (pure data movement: alpha + beta only, never gamma)
+# ---------------------------------------------------------------------------
+
+def a2a_cost(P: int, m: float, f: Fabric, kind: str = "direct") -> float:
+    """Exact alpha-beta cost of the schedule-driven all-to-all.
+
+    Matches the compiled plan tables step for step
+    (:func:`repro.core.execplan.compile_a2a_plan`): ``direct`` pays P-1
+    steps of one u-byte row each; ``bruck`` pays ceil(lg P) steps, step
+    k moving the rows whose displacement has bit k set.
+
+    >>> a2a_cost(8, 8 * 1024.0, PAPER_10GE, "direct") > \
+        a2a_cost(8, 8 * 1024.0, PAPER_10GE, "bruck")   # tiny: latency wins
+    True
+    """
+    if P <= 1:
+        return 0.0
+    u = chunk_size(m, P)
+    if kind == "direct":
+        return (P - 1) * (f.alpha + u * f.beta)
+    if kind == "bruck":
+        t, n = 0.0, 1
+        while n < P:
+            rows = sum(1 for e in range(1, P) if e & n)
+            t += f.alpha + rows * u * f.beta
+            n <<= 1
+        return t
+    raise ValueError(f"unknown all-to-all kind {kind!r}")
+
+
+def choose_a2a(P: int, m: float, f: Fabric) -> str:
+    """Pick the cheaper all-to-all family for an ``m``-byte local buffer:
+    Bruck's log-step combining for latency-bound small messages, the
+    direct exchange's minimal traffic for bandwidth-bound large ones.
+
+    >>> choose_a2a(127, 425.0, PAPER_10GE)
+    'bruck'
+    >>> choose_a2a(127, float(1 << 26), PAPER_10GE)
+    'direct'
+    """
+    if P <= 2:
+        return "direct"   # identical plans at P <= 2; direct is canonical
+    return min(("direct", "bruck"), key=lambda k: a2a_cost(P, m, f, k))
 
 
 def best_schedule(P: int, m: float, f: Fabric,

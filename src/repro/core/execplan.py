@@ -44,11 +44,12 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass
 from functools import lru_cache
-from typing import Callable, List, Sequence, Tuple, Union
+from typing import List, Sequence, Tuple
 
 import numpy as np
 
-from .schedule import Schedule, ragged_offsets, ragged_sizes
+from .monoid import CombineLike, Monoid, resolve_combine
+from .schedule import Schedule, ShapeError, ragged_offsets, ragged_sizes
 
 
 def _frozen(a) -> np.ndarray:
@@ -256,37 +257,46 @@ def _take(buf, idx: np.ndarray):
     return buf[idx]
 
 
-def _pallas_combine(jobs):
+def _pallas_combine(jobs, monoid: Monoid = None):
     """Fuse all (res, arr) pairwise combines of a tick into ONE Pallas
     ``combine_n`` call over the concatenated flat buffers.
 
     ``jobs`` is a list of (res_mat, arr_mat) with matching shapes; the
     K-way kernel (K=2 here) reads both operands once from HBM and writes
-    the sum, instead of one chained ``jnp.add`` dispatch per bucket.
-    Interpret mode is used automatically off-TPU.
+    the combine (``monoid.kind``: add / max / min -- all one VPU op per
+    element over the same VMEM tiling), instead of one chained elementwise
+    dispatch per bucket.  Interpret mode is used automatically off-TPU.
 
     Some shard_map replication checkers have no rule for ``pallas_call``
     (jax <= 0.4.x ``check_rep``); there the kernel cannot trace and we
-    fall back to the identical-numerics ``jnp.add`` (same fp32 pairwise
-    sums).  Build the shard_map with ``check_vma=False`` (see
-    :func:`repro.compat.shard_map`) to route through the real kernel.
+    fall back to the identical-numerics elementwise op (same fp32
+    pairwise combines).  Build the shard_map with ``check_vma=False``
+    (see :func:`repro.compat.shard_map`) to route through the real
+    kernel.
     """
     import jax
     import jax.numpy as jnp
 
     from repro.kernels.fused_combine import _BLOCK, combine_n
 
+    from .monoid import SUM
+    if monoid is None:
+        monoid = SUM
+    op = monoid.jax_op
     res_flat = jnp.concatenate([r.reshape(-1) for r, _ in jobs])
     arr_flat = jnp.concatenate([a.reshape(-1) for _, a in jobs])
     n = res_flat.shape[0]
     dt = res_flat.dtype
-    accum = jnp.float32 if jnp.issubdtype(dt, jnp.inexact) else dt
+    # max/min never lose precision to the accumulator: skip the widening
+    accum = jnp.float32 if (monoid.kind == "add"
+                            and jnp.issubdtype(dt, jnp.inexact)) else dt
     block = min(_BLOCK, 128 * max(1, math.ceil(n / 128)))
     try:
         out = combine_n(jnp.stack([res_flat, arr_flat]), accum_dtype=accum,
-                        interpret=jax.default_backend() != "tpu", block=block)
+                        interpret=jax.default_backend() != "tpu",
+                        block=block, op=monoid.kind)
     except NotImplementedError:
-        return [r + a for r, a in jobs]
+        return [op(r, a) for r, a in jobs]
     outs, off = [], 0
     for r, _ in jobs:
         sz = int(np.prod(r.shape))
@@ -296,7 +306,7 @@ def _pallas_combine(jobs):
 
 
 def execute(plan: ExecPlan, bucket_rows: Sequence[List], axis_name, *,
-            combine: Union[str, Callable] = "auto") -> List[List]:
+            combine: CombineLike = "auto") -> List[List]:
     """Replay ``plan`` over per-bucket slot-row lists inside shard_map.
 
     ``bucket_rows`` is a list of ``n_buckets`` row lists, each of length
@@ -314,15 +324,26 @@ def execute(plan: ExecPlan, bucket_rows: Sequence[List], axis_name, *,
     are batched into a single fused call on the Pallas path.  With one
     bucket this degenerates to the plain vectorized replay.
 
-    ``combine``: "auto" (Pallas ``combine_n`` on TPU, ``jnp.add``
-    elsewhere), "pallas", "add", or a binary callable.
+    ``combine`` is the *operator*, resolved by
+    :func:`repro.core.monoid.resolve_combine`: a :class:`Monoid`, a
+    monoid name ("sum" / "max" / "min" / "mean"), a binary callable, or
+    one of the implementation spellings "auto" (sum; Pallas
+    ``combine_n`` on TPU, plain elementwise elsewhere), "add" (sum via
+    ``jnp.add``), "pallas" (sum via the kernel), "<op>:pallas".  The
+    affine bookends of mean / premul_sum are the caller's job (they act
+    on the whole message, not per step).
     """
     import jax
     import jax.numpy as jnp
     from jax import lax
 
-    if combine == "auto":
-        combine = "pallas" if jax.default_backend() == "tpu" else "add"
+    monoid, impl = resolve_combine(combine)
+    if impl == "auto":
+        impl = "pallas" if (monoid.fuses_pallas
+                            and jax.default_backend() == "tpu") else "op"
+    if impl == "pallas" and not monoid.fuses_pallas:
+        raise ValueError(f"monoid {monoid.name!r} has no fused Pallas "
+                         f"kernel; use the elementwise path")
     bucket_rows = [list(rows) for rows in bucket_rows]
     B = len(bucket_rows)
     S = plan.n_steps
@@ -336,8 +357,8 @@ def execute(plan: ExecPlan, bucket_rows: Sequence[List], axis_name, *,
                 rows = bucket_rows[j]
                 tx = jnp.stack([rows[i] for i in sp.tx_slots])
                 rx[j] = lax.ppermute(tx, axis_name, perm=sp.perm)
-        # 2) combine phase: all pairwise adds of this tick
-        if combine == "pallas":
+        # 2) combine phase: all pairwise combines of this tick
+        if impl == "pallas":
             jobs, owners = [], []
             for j, s in active:
                 sp = plan.steps[s]
@@ -347,17 +368,18 @@ def execute(plan: ExecPlan, bucket_rows: Sequence[List], axis_name, *,
                                  _take(rx[j], sp.add_arr)))
                     owners.append((j, s))
             if jobs:        # ticks of recv-only steps have no combines
-                for (j, s), summed in zip(owners, _pallas_combine(jobs)):
+                for (j, s), summed in zip(owners,
+                                          _pallas_combine(jobs, monoid)):
                     for k, dst in enumerate(plan.steps[s].add_dst):
                         bucket_rows[j][dst] = summed[k]
         else:
-            add = jnp.add if combine == "add" else combine
+            op = monoid.jax_op
             for j, s in active:
                 sp = plan.steps[s]
                 rows = bucket_rows[j]
                 # read every resident before rebinding any slot: a fresh
                 # destination may reuse a slot another combine still reads
-                sums = [add(rows[src], rx[j][arr])
+                sums = [op(rows[src], rx[j][arr])
                         for src, arr in zip(sp.add_src, sp.add_arr)]
                 for dst, v in zip(sp.add_dst, sums):
                     rows[dst] = v
@@ -390,15 +412,18 @@ def _np_chunks(vec: np.ndarray, P: int) -> np.ndarray:
 
 
 def simulate_plan(sched: Schedule, vectors: List[np.ndarray],
-                  n_buckets: int = 1) -> List[np.ndarray]:
+                  n_buckets: int = 1, op=np.add) -> List[np.ndarray]:
     """Replay the *lowered* plan tables over P explicit numpy processes.
 
     Mirrors :func:`execute` table-for-table (including the bucket split,
     the in-place slot updates, and the ragged zero-filled chunk tails),
     so bit-exact agreement with :func:`repro.core.simulator.simulate`
-    proves the lowering correct independently of JAX.  Handles every
-    schedule kind and *any* message length -- uneven sizes use the
-    balanced exact split of :func:`repro.core.schedule.ragged_sizes`:
+    proves the lowering correct independently of JAX.  ``op`` is the
+    elementwise combine (any monoid's ``np_op``; default sum), applied
+    to exactly the same (resident, arrival) pairs as the JAX executor.
+    Handles every schedule kind and *any* message length -- uneven
+    sizes use the balanced exact split of
+    :func:`repro.core.schedule.ragged_sizes`:
 
     * ``generalized`` / ``ring``: full input vectors, full results;
     * ``reduce_scatter``: any-length inputs, device d returns its owned
@@ -458,8 +483,8 @@ def simulate_plan(sched: Schedule, vectors: List[np.ndarray],
             sp = plan.steps[s]
             for d in range(P):
                 if sp.n_adds:
-                    bufs[d][j][sp.add_dst] = (bufs[d][j][sp.add_src]
-                                              + rx[j][d][sp.add_arr])
+                    bufs[d][j][sp.add_dst] = op(bufs[d][j][sp.add_src],
+                                                rx[j][d][sp.add_arr])
                 if len(sp.recv_slots):
                     bufs[d][j][sp.recv_slots] = rx[j][d][sp.recv_arr]
 
@@ -477,3 +502,106 @@ def simulate_plan(sched: Schedule, vectors: List[np.ndarray],
             c = int(np.nonzero(cols >= 0)[0][0])
             results.append(state[d][cols[c]])
     return results
+
+
+# ---------------------------------------------------------------------------
+#  permutation-group all-to-all over the same step tables
+# ---------------------------------------------------------------------------
+#  An all-to-all (device d holds P chunks x_d[0..P-1]; afterwards device d
+#  holds y_d[c] = x_c[d]) is pure data movement under the cyclic group --
+#  every transfer is a power of the generator t, so it compiles into the
+#  exact ExecStep/ExecPlan tables the reductions use, just with no
+#  combines.  Row e is the *displacement class* e: initially device d
+#  stores x_d[(d+e) % P] there (the chunk destined for rank d+e), and the
+#  device-dependence lives entirely in the same init/final placement
+#  tables every other schedule already uses:
+#
+#  * direct  -- P-1 steps; step e applies t^e to row e, delivering every
+#    displacement in one hop: u bytes per step, minimal total traffic
+#    (the large-message regime);
+#  * bruck   -- ceil(lg P) steps [Bruck & Ho '93]; step k applies t^(2^k)
+#    to every row whose displacement has bit k set, so a block with
+#    displacement e travels exactly the shifts of e's binary expansion
+#    and accumulates e mod P.  Log-step latency at ~P/2 rows per step
+#    (the small-message regime).
+#
+#  After the last step row e on device d holds x_{d-e}[d], i.e. result
+#  chunk c sits in row (d - c) mod P -- the final gather's table.
+
+A2A_KINDS = ("direct", "bruck")
+
+
+@lru_cache(maxsize=None)
+def compile_a2a_plan(P: int, kind: str = "direct") -> ExecPlan:
+    """Lower a P-process all-to-all into cached ExecPlan tables.
+
+    >>> plan = compile_a2a_plan(8, "bruck")
+    >>> plan.n_steps, [st.n_tx for st in plan.steps]
+    (3, [4, 4, 4])
+    >>> compile_a2a_plan(8, "direct").n_steps
+    7
+    """
+    if kind not in A2A_KINDS:
+        raise ValueError(f"unknown all-to-all kind {kind!r} "
+                         f"(expected one of {A2A_KINDS})")
+    if P < 1:
+        raise ShapeError("all-to-all needs P >= 1", expected=">= 1",
+                         actual=P)
+    d = np.arange(P)
+    init_rows = (d[None, :] + np.arange(P)[:, None]) % P     # [e, d]
+    final_rows = (d[None, :] - np.arange(P)[:, None]) % P    # [c, d]
+    none = _frozen([])
+    steps: List[ExecStep] = []
+
+    def step(shift: int, rows: List[int]) -> ExecStep:
+        return ExecStep(
+            shift=shift,
+            perm=tuple((int(x), int((x + shift) % P)) for x in range(P)),
+            tx_slots=_frozen(rows), add_src=none, add_dst=none,
+            add_arr=none, recv_slots=_frozen(rows),
+            recv_arr=_frozen(list(range(len(rows)))))
+
+    if kind == "direct":
+        for e in range(1, P):
+            steps.append(step(e, [e]))
+    else:
+        n = 1
+        while n < P:
+            rows = [e for e in range(1, P) if e & n]
+            steps.append(step(n % P, rows))
+            n <<= 1
+    return ExecPlan(P=P, kind=f"all_to_all_{kind}", n_rows0=P, n_slots=P,
+                    steps=tuple(steps), init_rows=_frozen(init_rows),
+                    final_rows=_frozen(final_rows))
+
+
+def simulate_a2a(vectors: List[np.ndarray],
+                 kind: str = "direct") -> List[np.ndarray]:
+    """Numpy oracle for the schedule-driven all-to-all: replay the plan
+    tables over P explicit processes.  Result ``d`` is the concatenation
+    of chunk ``d`` of every process's vector -- exactly
+    ``lax.all_to_all`` on the equally-split flat buffers.
+
+    >>> vecs = [np.arange(3) + 10 * d for d in range(3)]
+    >>> [v.tolist() for v in simulate_a2a(vecs, "bruck")]
+    [[0, 10, 20], [1, 11, 21], [2, 12, 22]]
+    """
+    P = len(vectors)
+    m = vectors[0].shape[0]
+    if m % P:
+        raise ShapeError("all-to-all needs P | m",
+                         expected=f"multiple of {P}", actual=m)
+    plan = compile_a2a_plan(P, kind)
+    u = m // P
+    state = []
+    for d in range(P):
+        ch = vectors[d].reshape(P, u)
+        state.append(ch[plan.init_rows[:, d]].copy())
+    for sp in plan.steps:
+        arr = [None] * P
+        for src, dst in sp.perm:
+            arr[dst] = state[src][sp.tx_slots].copy()
+        for d in range(P):
+            state[d][sp.recv_slots] = arr[d][sp.recv_arr]
+    return [np.concatenate([state[d][plan.final_rows[c, d]]
+                            for c in range(P)]) for d in range(P)]

@@ -1,0 +1,235 @@
+"""First-class combine operators for the generalized collective family.
+
+The paper's group-theoretic machinery (sections 5-9) describes
+*communication*: which rows move under which group element, and which
+resident row each arrival pairs with.  Nothing in the schedules, the
+ExecPlan lowering, or the pipelined replay depends on the pairing being
+``+`` -- any associative binary operation with an identity factors
+through the exact same permutation step tables (this is how Traeff's
+reduce-scatter/allreduce family and MPI's ``MPI_Op`` treat the
+collective: one parameterized object, not one algorithm per operator).
+
+A :class:`Monoid` packages everything an executor layer needs to run a
+schedule under a different operator:
+
+* ``kind``    -- the elementwise combine ("add" | "max" | "min" |
+  "custom"); the first three route through the fused Pallas kernel
+  (:func:`repro.kernels.fused_combine.combine_n`) on TPU;
+* ``identity``-- the neutral element (used by tests to check the monoid
+  laws; the executors themselves never need it -- ragged/bucket padding
+  columns are dropped by the final gather before they can meet data);
+* ``pre_scale`` / ``post_divide`` -- the affine bookends that turn the
+  plain reduction into ``premul_sum`` (NCCL's ``ncclRedOpPreMulSum``)
+  and ``mean``;
+* ``gamma_scale`` -- per-monoid combine cost relative to a plain add,
+  consumed by the alpha-beta-gamma cost model (a custom op that is not
+  one fused VPU instruction per element should say so here).
+
+Padding-safety note: every executor layer zero-fills physical chunk
+tails (ragged split) and bucket padding.  That is safe for *any*
+elementwise monoid -- combines never mix columns, tails are dropped by
+exact-prefix extraction -- so ``identity`` is a law-checking aid, not a
+correctness requirement of the replay.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional, Union
+
+import numpy as np
+
+_NP_OPS = {"add": np.add, "max": np.maximum, "min": np.minimum}
+
+
+@dataclass(frozen=True)
+class Monoid:
+    """An associative combine with identity, plus executor metadata.
+
+    ``fn`` (and ``np_fn`` for the numpy oracles) override the built-in
+    elementwise op when ``kind == "custom"``.  Instances are hashable so
+    autotuner caches can key on them.
+
+    >>> SUM.kind, MAX.kind, MEAN.post_divide
+    ('add', 'max', True)
+    >>> premul_sum(0.5).pre_scale
+    0.5
+    """
+
+    name: str
+    kind: str = "add"               # "add" | "max" | "min" | "custom"
+    gamma_scale: float = 1.0        # combine cost relative to a plain add
+    pre_scale: Optional[float] = None   # multiply inputs before reducing
+    post_divide: bool = False       # divide by P after reducing (mean)
+    fn: Optional[Callable] = field(default=None, compare=False, repr=False)
+    np_fn: Optional[Callable] = field(default=None, compare=False, repr=False)
+
+    def __post_init__(self):
+        if self.kind not in ("add", "max", "min", "custom"):
+            raise ValueError(f"unknown monoid kind {self.kind!r}")
+        if self.kind == "custom" and self.fn is None:
+            raise ValueError("custom monoid needs fn=")
+
+    # ------------------------------------------------------------ ops
+    @property
+    def jax_op(self) -> Callable:
+        """Elementwise binary combine for traced (jnp) operands."""
+        if self.kind == "custom":
+            return self.fn
+        import jax.numpy as jnp
+        return {"add": jnp.add, "max": jnp.maximum,
+                "min": jnp.minimum}[self.kind]
+
+    @property
+    def np_op(self) -> Callable:
+        """Elementwise binary combine for the numpy oracles."""
+        if self.kind == "custom":
+            return self.np_fn if self.np_fn is not None else self.fn
+        return _NP_OPS[self.kind]
+
+    @property
+    def fuses_pallas(self) -> bool:
+        """Whether the fused Pallas ``combine_n`` kernel implements it."""
+        return self.kind in ("add", "max", "min")
+
+    # ------------------------------------------------------------ laws
+    def identity(self, dtype) -> np.ndarray:
+        """Neutral element as a zero-dim array of ``dtype``.
+
+        >>> int(SUM.identity(np.int32)), int(MAX.identity(np.int32))
+        (0, -2147483648)
+        """
+        dt = np.dtype(dtype)
+        if self.kind == "add":
+            return np.zeros((), dt)
+        if self.kind == "max":
+            return np.array(np.finfo(dt).min if dt.kind == "f"
+                            else np.iinfo(dt).min, dt)
+        if self.kind == "min":
+            return np.array(np.finfo(dt).max if dt.kind == "f"
+                            else np.iinfo(dt).max, dt)
+        raise NotImplementedError(f"no identity recorded for {self.name}")
+
+    # -------------------------------------------------- affine bookends
+    def prepare(self, x, P: int):
+        """Apply the pre-reduction bookend (premul_sum's scale).
+
+        The scale is applied in the input dtype (no hidden widening), so
+        a fractional factor on an integer buffer would silently truncate
+        to zero -- that is refused loudly instead:
+
+        >>> premul_sum(0.5).prepare(np.float32([4.0, 6.0]), 2).tolist()
+        [2.0, 3.0]
+        >>> premul_sum(0.5).prepare(np.int32([4, 6]), 2)
+        Traceback (most recent call last):
+            ...
+        TypeError: premul_sum(0.5) on integer dtype int32 would truncate \
+the factor; cast to an inexact dtype first
+        """
+        if self.pre_scale is None:
+            return x
+        dt = np.dtype(getattr(x, "dtype", np.float64))
+        if dt.kind in "iub" and self.pre_scale != int(self.pre_scale):
+            raise TypeError(
+                f"premul_sum({self.pre_scale:g}) on integer dtype {dt} "
+                f"would truncate the factor; cast to an inexact dtype "
+                f"first")
+        return x * np.asarray(self.pre_scale, dtype=dt)
+
+    def finalize(self, x, P: int):
+        """Apply the post-reduction bookend (mean's divide)."""
+        if self.post_divide:
+            return x / P
+        return x
+
+    def reference(self, stacked: np.ndarray) -> np.ndarray:
+        """Ground-truth reduction of a (P, ...) numpy stack -- what the
+        matching ``lax`` collective (psum/pmax/pmin, mean = psum / P)
+        computes.
+
+        >>> MEAN.reference(np.array([[2.0, 4.0], [4.0, 8.0]])).tolist()
+        [3.0, 6.0]
+        """
+        P = stacked.shape[0]
+        x = self.prepare(stacked, P)
+        out = x[0]
+        for d in range(1, P):
+            out = self.np_op(out, x[d])
+        return self.finalize(out, P)
+
+
+SUM = Monoid("sum", "add")
+MAX = Monoid("max", "max")
+MIN = Monoid("min", "min")
+MEAN = Monoid("mean", "add", post_divide=True)
+
+
+def premul_sum(factor: float, name: Optional[str] = None) -> Monoid:
+    """NCCL-style pre-multiplied sum: every input is scaled by ``factor``
+    before reduction (e.g. loss-scale unscaling fused into the gradient
+    allreduce).  The combine itself stays a plain add, so it rides the
+    fused kernel; only the O(m) prepare pass is extra."""
+    return Monoid(name or f"premul_sum({factor:g})", "add",
+                  pre_scale=float(factor))
+
+
+def custom(fn: Callable, *, name: str = "custom", np_fn: Optional[Callable] = None,
+           gamma_scale: float = 1.0) -> Monoid:
+    """Wrap an arbitrary associative ``fn(a, b)`` as a Monoid.  The
+    caller vouches for associativity; the conformance harness checks it
+    on integer samples for the built-ins."""
+    return Monoid(name, "custom", fn=fn, np_fn=np_fn,
+                  gamma_scale=gamma_scale)
+
+
+MONOIDS = {"sum": SUM, "add": SUM, "max": MAX, "min": MIN, "mean": MEAN}
+
+# legacy execplan combine= spellings that select an *implementation* for
+# the sum monoid rather than an operator
+_IMPL_STRINGS = ("auto", "pallas")
+
+CombineLike = Union[str, Monoid, Callable]
+
+
+def resolve_combine(combine: CombineLike) -> tuple:
+    """Normalize an executor ``combine=`` argument to ``(monoid, impl)``.
+
+    Accepted spellings (the historical impl strings stay valid so every
+    existing call site keeps its meaning):
+
+    * a :class:`Monoid`                      -> (monoid, "auto")
+    * "sum" / "max" / "min" / "mean"         -> (that monoid, "auto")
+    * "auto" / "pallas"                      -> (SUM, that impl)
+    * "add"                                  -> (SUM, "op") -- the
+      historical "plain jnp.add, no Pallas" spelling
+    * "<op>:pallas" e.g. "max:pallas"        -> (op, "pallas")
+    * a bare callable                        -> (custom monoid, "op")
+
+    >>> resolve_combine("max")[0].name, resolve_combine("max")[1]
+    ('max', 'auto')
+    >>> resolve_combine("pallas")
+    (Monoid(name='sum', kind='add', gamma_scale=1.0, pre_scale=None, \
+post_divide=False), 'pallas')
+    >>> resolve_combine("min:pallas")[1]
+    'pallas'
+    """
+    if isinstance(combine, Monoid):
+        return combine, "auto"
+    if callable(combine):
+        return custom(combine), "op"
+    if not isinstance(combine, str):
+        raise TypeError(f"combine must be a str, Monoid or callable, "
+                        f"got {type(combine).__name__}")
+    if combine == "add":
+        return SUM, "op"
+    if combine in _IMPL_STRINGS:
+        return SUM, combine
+    name, sep, impl = combine.partition(":")
+    monoid = MONOIDS.get(name)
+    if monoid is None:
+        raise ValueError(
+            f"unknown combine {combine!r}: expected a Monoid, a callable, "
+            f"one of {sorted(set(MONOIDS))}, 'auto'/'add'/'pallas', or "
+            f"'<op>:pallas'")
+    if sep and impl not in ("pallas", "op", "auto"):
+        raise ValueError(f"unknown combine impl {impl!r} in {combine!r}")
+    return monoid, (impl if sep else "auto")

@@ -16,7 +16,7 @@ from typing import Callable, List, Optional
 import numpy as np
 
 from .execplan import final_row_table, initial_row_table
-from .schedule import Schedule, ragged_offsets, ragged_sizes
+from .schedule import Schedule, ShapeError, ragged_offsets, ragged_sizes
 
 
 @dataclass
@@ -112,6 +112,14 @@ def simulate(sched: Schedule, vectors: List[np.ndarray],
     """
     P = sched.P
     assert len(vectors) == P
+    # uniform-length contract: a device with a different m would produce
+    # chunks of the wrong width, which numpy broadcasting could silently
+    # swallow (e.g. a width-1 chunk against a width-2 resident) -- raise
+    # the typed error instead of mis-reducing
+    for d, v in enumerate(vectors[1:], start=1):
+        if v.shape != vectors[0].shape:
+            raise ShapeError(f"simulate: device {d} vector shape disagrees",
+                             expected=vectors[0].shape, actual=v.shape)
 
     state = _initial_state(sched, vectors)
     units_sent, adds = _replay(sched, state, op)

@@ -9,9 +9,15 @@ narrowing into the same pass so no extra fp32 copy of the buffer ever
 exists in HBM -- that widening is exactly what a naive
 ``(a.astype(f32) + b.astype(f32)).astype(bf16)`` materializes.
 
-``combine_n`` fuses K-way sums (latency-optimal schedule steps combine
-several arrivals per output row) into one pass over HBM: (K+1)/3x less
-traffic than K-1 chained pairwise adds.
+``combine_n`` fuses K-way combines (latency-optimal schedule steps
+combine several arrivals per output row) into one pass over HBM:
+(K+1)/3x less traffic than K-1 chained pairwise ops.
+
+The combine is any of the elementwise monoid kinds the schedule family
+supports (``op`` = "add" | "max" | "min"): max/min cost the same one
+VPU instruction per element as the add and reuse the identical VMEM
+tiling -- the kernel is memory-bound either way, which is exactly why
+the cost model prices all three with the same gamma.
 """
 from __future__ import annotations
 
@@ -26,17 +32,19 @@ from jax.experimental import pallas as pl
 _BLOCK = 128 * 1024  # elements per tile (flat layout, reshaped to (rows,128))
 _LANES = 128
 
+_OPS = {"add": jnp.add, "max": jnp.maximum, "min": jnp.minimum}
 
-def _combine_kernel(a_ref, b_ref, o_ref, *, accum_dtype):
+
+def _combine_kernel(a_ref, b_ref, o_ref, *, accum_dtype, op):
     a = a_ref[...].astype(accum_dtype)
     b = b_ref[...].astype(accum_dtype)
-    o_ref[...] = (a + b).astype(o_ref.dtype)
+    o_ref[...] = _OPS[op](a, b).astype(o_ref.dtype)
 
 
-def _combine_n_kernel(s_ref, o_ref, *, accum_dtype, k):
+def _combine_n_kernel(s_ref, o_ref, *, accum_dtype, k, op):
     acc = s_ref[0].astype(accum_dtype)
     for i in range(1, k):
-        acc = acc + s_ref[i].astype(accum_dtype)
+        acc = _OPS[op](acc, s_ref[i].astype(accum_dtype))
     o_ref[...] = acc.astype(o_ref.dtype)
 
 
@@ -49,11 +57,11 @@ def _pad_flat(x, block):
 
 
 @functools.partial(jax.jit, static_argnames=("accum_dtype", "interpret",
-                                             "block"))
+                                             "block", "op"))
 def fused_combine(a: jnp.ndarray, b: jnp.ndarray, *,
                   accum_dtype=jnp.float32, interpret: bool = False,
-                  block: int = _BLOCK) -> jnp.ndarray:
-    """y = a + b elementwise over flat buffers, fp32 accumulation."""
+                  block: int = _BLOCK, op: str = "add") -> jnp.ndarray:
+    """y = a (op) b elementwise over flat buffers, fp32 accumulation."""
     assert a.shape == b.shape and a.ndim == 1, (a.shape, b.shape)
     af, n = _pad_flat(a, block)
     bf, _ = _pad_flat(b, block)
@@ -62,7 +70,7 @@ def fused_combine(a: jnp.ndarray, b: jnp.ndarray, *,
     a2 = af.reshape(grid * rows, _LANES)
     b2 = bf.reshape(grid * rows, _LANES)
     out = pl.pallas_call(
-        functools.partial(_combine_kernel, accum_dtype=accum_dtype),
+        functools.partial(_combine_kernel, accum_dtype=accum_dtype, op=op),
         grid=(grid,),
         in_specs=[pl.BlockSpec((rows, _LANES), lambda i: (i, 0)),
                   pl.BlockSpec((rows, _LANES), lambda i: (i, 0))],
@@ -74,10 +82,11 @@ def fused_combine(a: jnp.ndarray, b: jnp.ndarray, *,
 
 
 @functools.partial(jax.jit, static_argnames=("accum_dtype", "interpret",
-                                             "block"))
+                                             "block", "op"))
 def combine_n(stack: jnp.ndarray, *, accum_dtype=jnp.float32,
-              interpret: bool = False, block: int = _BLOCK) -> jnp.ndarray:
-    """Sum K rows (K, n) -> (n,) in a single HBM pass."""
+              interpret: bool = False, block: int = _BLOCK,
+              op: str = "add") -> jnp.ndarray:
+    """Reduce K rows (K, n) -> (n,) by ``op`` in a single HBM pass."""
     assert stack.ndim == 2
     k = stack.shape[0]
     sf, n = _pad_flat(stack, block)
@@ -85,7 +94,8 @@ def combine_n(stack: jnp.ndarray, *, accum_dtype=jnp.float32,
     grid = sf.shape[-1] // block
     s2 = sf.reshape(k, grid * rows, _LANES)
     out = pl.pallas_call(
-        functools.partial(_combine_n_kernel, accum_dtype=accum_dtype, k=k),
+        functools.partial(_combine_n_kernel, accum_dtype=accum_dtype, k=k,
+                          op=op),
         grid=(grid,),
         in_specs=[pl.BlockSpec((k, rows, _LANES), lambda i: (0, i, 0))],
         out_specs=pl.BlockSpec((rows, _LANES), lambda i: (i, 0)),

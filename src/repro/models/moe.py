@@ -8,10 +8,18 @@ redundantly-but-identically on every TP device and the expert outputs are
 partial sums that the block boundary reduce-scatters -- the exact same
 collective pattern as a dense block.
 
-A token-dropping all-to-all expert-parallel dispatch (GShard style) is a
-documented alternative; for the expert counts in the assigned pool (8/64
-with tp=16) the TP-sharded form needs no extra collectives at all, which
-the dry-run roofline confirms (see DESIGN.md §MoE).
+A token-dropping all-to-all expert-parallel dispatch (GShard style) is
+available behind ``ParallelConfig.moe_dispatch``: tokens stay sharded
+over the DP axis, experts are partitioned into ``dp`` groups, and two
+all-to-alls move each rank's expert queues to the group owner and the
+expert outputs back (``_experts_apply_ep``).  The exchange itself runs
+either through stock ``lax.all_to_all`` ("gshard" -- the oracle) or
+through the permutation-group schedule tables of
+:func:`repro.core.allreduce.all_to_all_flat` ("schedule"); the two are
+bit-identical because an all-to-all is a pure permutation.  The default
+("tp") keeps the TP-sharded form, which for the expert counts in the
+assigned pool (8/64 with tp=16) needs no extra collectives at all,
+which the dry-run roofline confirms (see DESIGN.md §MoE).
 
 Routing follows the standard top-k + capacity recipe: per expert a queue
 of C = ceil(T * k / E * capacity_factor) slots; overflowing tokens drop
@@ -27,6 +35,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core.allreduce import all_to_all_flat
 from repro.models.layers import dense
 from repro.parallel.api import ParallelConfig
 
@@ -99,6 +108,59 @@ def experts_apply(p, xq, cfg, act: str):
     return jax.vmap(one)(xq, p["w1"], p["w3"], p["w2"])
 
 
+def ep_group_size(pc: ParallelConfig, n_experts: int) -> int:
+    """Expert-parallel group size of the all-to-all dispatch (1 = the
+    dispatch is disabled and every rank applies every expert locally).
+
+    The dispatch activates when ``pc.moe_dispatch`` asks for it, the DP
+    axis is a single named axis with more than one rank, and the expert
+    count splits evenly across the ranks."""
+    if pc.moe_dispatch not in ("gshard", "schedule"):
+        return 1
+    if pc.dp <= 1 or len(pc.dp_axes) != 1:
+        return 1
+    return pc.dp if n_experts % pc.dp == 0 else 1
+
+
+def _experts_apply_ep(pe, xq, cfg, pc: ParallelConfig, ep: int):
+    """Expert-parallel experts: all-to-all dispatch + local apply + return.
+
+    ``xq`` (E, C, d) holds this rank's queues for *all* experts; rank
+    ``s`` owns expert group ``s`` (experts ``s*E/ep .. (s+1)*E/ep-1``).
+    Exchange 1 sends each group's queues to its owner (after it, entry
+    ``s`` of the received (ep, E/ep, C, d) block is rank ``s``'s queues
+    for *my* group); the owner applies its expert slice to every rank's
+    tokens at once; exchange 2 is the inverse permutation, so the
+    returned (E, C, d) buffer is laid out exactly like the local path's
+    -- the combine below never knows which rank ran the experts.
+
+    With ``pc.moe_dispatch == "schedule"`` both exchanges run the
+    compiled permutation-group step tables
+    (:func:`repro.core.allreduce.all_to_all_flat`, Bruck or direct by
+    message size); "gshard" runs stock ``lax.all_to_all``.  Both are
+    pure permutations of identical blocks, hence bit-identical.
+    """
+    axis = pc.dp_axes[0]
+    E, C, d = xq.shape
+    El = E // ep
+
+    def exchange(buf):
+        # buf (ep, El, C, d), entry s destined for rank s; returns the
+        # same shape with entry s = the block received from rank s
+        if pc.moe_dispatch == "schedule":
+            return all_to_all_flat(buf.reshape(-1), axis).reshape(buf.shape)
+        return lax.all_to_all(buf, axis, split_axis=0, concat_axis=0)
+
+    recv = exchange(xq.reshape(ep, El, C, d))            # [s] = s's queues
+    rk = lax.axis_index(axis)
+    loc = {k: lax.dynamic_slice_in_dim(v, rk * El, El, 0)
+           for k, v in pe.items()}
+    xq_l = jnp.moveaxis(recv, 0, 1).reshape(El, ep * C, d)
+    yq_l = experts_apply(loc, xq_l, cfg, cfg.act)        # (El, ep*C, d)
+    back = jnp.moveaxis(yq_l.reshape(El, ep, C, d), 1, 0)
+    return exchange(back).reshape(E, C, d)
+
+
 _MOE_TOKEN_CHUNK = 8192
 
 
@@ -141,7 +203,11 @@ def _moe_tokens(p, x, cfg, pc: ParallelConfig):
 
     xpad = jnp.concatenate([x, jnp.zeros((1, d), x.dtype)])        # sentinel row
     xq = jnp.take(xpad, eq, axis=0)                                # (E, C, d)
-    yq = experts_apply(p["experts"], xq, cfg, cfg.act)             # (E, C, d)
+    ep = ep_group_size(pc, m.n_experts)
+    if ep > 1:
+        yq = _experts_apply_ep(p["experts"], xq, cfg, pc, ep)      # (E, C, d)
+    else:
+        yq = experts_apply(p["experts"], xq, cfg, cfg.act)         # (E, C, d)
 
     # combine: token t gets sum_j prob_j * yq[e_j, pos_j]
     C = yq.shape[1]

@@ -37,6 +37,7 @@ from repro.core.allreduce import (all_gather_flat, allreduce_tree,
                                   hierarchical_allreduce,
                                   reduce_scatter_flat)
 from repro.core.cost_model import Fabric, TPU_V5E_ICI
+from repro.core.monoid import CombineLike, resolve_combine
 from repro.core.schedule import ShapeError, max_r
 from repro.topology.fabric import Topology
 
@@ -55,6 +56,11 @@ class ParallelConfig:
     grad_combine: str = "auto"     # auto | add | pallas (ExecPlan combines)
     grad_group: str = "cyclic"     # cyclic | hypercube
     collective_impl: str = "xla"   # xla | group  (TP boundary collectives)
+    moe_dispatch: str = "tp"       # tp | gshard | schedule  (MoE expert
+    # dispatch: "tp" = TP-sharded experts, no dispatch collective;
+    # "gshard" = expert-parallel all-to-all via lax.all_to_all (the
+    # oracle); "schedule" = the same dispatch through the
+    # permutation-group all_to_all_flat step tables)
     topology: Optional[Topology] = None  # multi-level fabric of dp_axes
     tuning: bool = False           # consult the measured tuning table
     # (repro.tuning) for gradient-sync schedule choice; False = analytic
@@ -76,7 +82,8 @@ class ParallelConfig:
 
 
 def dp_grad_allreduce(tree, pc: ParallelConfig, *, mean: bool = True,
-                      fabric: Fabric = TPU_V5E_ICI):
+                      fabric: Fabric = TPU_V5E_ICI,
+                      op: CombineLike = "sum"):
     """Gradient allreduce over the DP axes.
 
     With a multi-level ``pc.topology`` this routes through the
@@ -108,9 +115,26 @@ def dp_grad_allreduce(tree, pc: ParallelConfig, *, mean: bool = True,
     its valid range shrinks to [0, max_r(outer_size)].  Out-of-range
     values fail fast here with the hierarchical meaning spelled out
     rather than deep inside the schedule compiler.
+
+    ``op`` generalizes the reduction over the same schedules: any
+    monoid ("sum" / "max" / "min" / "mean" / a
+    :class:`~repro.core.monoid.Monoid` / a callable).  Non-sum
+    operators compose with ``mean=False`` only; ``pc.grad_combine``
+    keeps selecting the *implementation* (Pallas vs plain elementwise)
+    and composes with ``op`` as ``"<op>:pallas"``.
     """
     if pc.dp == 1:
         return tree
+    monoid, impl = resolve_combine(op)
+    if monoid.name == "sum":
+        combine = pc.grad_combine     # historical spellings, incl. "add"
+    elif pc.grad_combine == "pallas" and monoid.fuses_pallas:
+        combine = f"{monoid.name}:pallas"
+    else:
+        combine = monoid
+    if mean and monoid.name not in ("sum", "mean"):
+        raise ValueError(f"dp_grad_allreduce(op={monoid.name!r}) needs "
+                         f"mean=False (mean only composes with sum)")
     if pc.hierarchical_dp:
         outer = pc.topology.outer
         if pc.grad_r is not None and not 0 <= pc.grad_r <= max_r(outer.size):
@@ -122,12 +146,44 @@ def dp_grad_allreduce(tree, pc: ParallelConfig, *, mean: bool = True,
                 f"flat-vs-hierarchical)")
         return hierarchical_allreduce(tree, pc.dp_axes, pc.topology,
                                       r=pc.grad_r, mean=mean,
-                                      combine=pc.grad_combine,
+                                      combine=combine,
                                       n_buckets=pc.grad_n_buckets,
                                       tune=pc.tuning)
     return allreduce_tree(tree, pc.dp_axis_name, mean=mean, r=pc.grad_r,
-                          fabric=fabric, combine=pc.grad_combine,
+                          fabric=fabric, combine=combine,
                           n_buckets=pc.grad_n_buckets, tune=pc.tuning)
+
+
+def grads_all_finite(tree, pc: ParallelConfig, *,
+                     fabric: Fabric = TPU_V5E_ICI) -> jnp.ndarray:
+    """Global loss-scale overflow check: True iff every gradient element
+    on every DP rank is finite.
+
+    The classic dynamic-loss-scaling guard is a *max*-allreduce, not a
+    sum: each rank reduces its leaves to one "any non-finite?" indicator
+    and the DP-wide maximum of the indicators decides whether the step
+    applies or the scale backs off.  The indicator rides the exact same
+    generalized schedules as the gradients (``op="max"`` through
+    :func:`dp_grad_allreduce`), so the check works on hierarchical
+    meshes and with measured tuning without any extra machinery --
+    that one-scalar max-allreduce is the latency-optimal corner
+    (r = max_r) of the paper's family by construction.
+
+    Returns a boolean scalar (replicated across DP ranks).
+    """
+    leaves = jax.tree.leaves(tree)
+    if not leaves:
+        return jnp.bool_(True)
+    bad = [jnp.any(~jnp.isfinite(g)) for g in leaves
+           if jnp.issubdtype(g.dtype, jnp.inexact)]
+    if not bad:
+        return jnp.bool_(True)   # integer trees cannot overflow to inf
+    local = jnp.stack(bad).any().astype(jnp.float32)
+    if pc.dp == 1:
+        return local == 0
+    synced = dp_grad_allreduce(local[None], pc, mean=False, fabric=fabric,
+                               op="max")
+    return synced[0] == 0
 
 
 def tp_rank(pc: ParallelConfig):

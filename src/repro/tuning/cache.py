@@ -98,8 +98,12 @@ class Measurement:
     ``itemsize`` records the element width of the benchmarked buffer
     (the grid runner times f32, so 4): raggedness is an *element*-count
     property, and a lookup must not answer a query whose element-ragged
-    classification differs from what was measured.  Entries written
-    before the field existed load with the benchmark default.
+    classification differs from what was measured.  ``op`` records the
+    combine operator the grid timed ("sum" / "max" / ...): wallclock is
+    op-specific in principle (different kernels, different fusion), so a
+    lookup only consults measurements taken under its own operator.
+    Entries written before either field existed load with the benchmark
+    defaults (f32 sum grid).
     """
 
     P: int
@@ -109,6 +113,7 @@ class Measurement:
     n_buckets: int
     us: float  # best-of-reps wallclock per call
     itemsize: int = 4  # element width of the measured buffer (f32 grid)
+    op: str = "sum"  # combine operator the candidate was timed under
 
     @property
     def ragged(self) -> bool:
@@ -125,6 +130,7 @@ class Measurement:
             n_buckets=int(d["n_buckets"]),
             us=float(d["us"]),
             itemsize=int(d.get("itemsize", 4)),
+            op=str(d.get("op", "sum")),
         )
 
 
@@ -184,12 +190,8 @@ class TuningCache:
         ent = self.entries.setdefault(
             fp.key(), {"fingerprint": asdict(fp), "measurements": []}
         )
-        ident = (meas.P, meas.nbytes, meas.kind, meas.r, meas.n_buckets)
-        ent["measurements"] = [
-            m
-            for m in ent["measurements"]
-            if (m["P"], m["nbytes"], m["kind"], m["r"], m["n_buckets"]) != ident
-        ]
+        ident = _row_ident(asdict(meas))
+        ent["measurements"] = [m for m in ent["measurements"] if _row_ident(m) != ident]
         ent["measurements"].append(asdict(meas))
 
     def save(self, path: Optional[os.PathLike] = None) -> Path:
@@ -222,6 +224,11 @@ class TuningCache:
     @property
     def n_measurements(self) -> int:
         return sum(len(e["measurements"]) for e in self.entries.values())
+
+
+def _row_ident(m: dict) -> tuple:
+    """Grid-point identity of one measurement row (operator included)."""
+    return (m["P"], m["nbytes"], m["kind"], m["r"], m["n_buckets"], m.get("op", "sum"))
 
 
 def _quarantine(p: Path) -> None:

@@ -31,11 +31,18 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.autotune import choose
 from repro.core.cost_model import HOST_CPU, Fabric
+from repro.core.monoid import MONOIDS
 from repro.core.schedule import build_generalized, build_ring, max_r
 
 from .cache import Measurement, TuningCache, current_fingerprint
 
 Candidate = Tuple[str, int, int]  # (kind, r, n_buckets)
+
+# combine operators the grid times; each op gets its own measurements
+# (policy lookups never answer across operators).  max covers the whole
+# non-sum family: min/mean run the identical executor with one
+# comparison/divide swapped, so their wallclock is max's.
+GRID_OPS: Tuple[str, ...] = ("sum", "max")
 
 # candidates whose per-bucket chunk would shrink below this are skipped:
 # dispatch overhead dominates and the measurement is pure noise
@@ -151,54 +158,68 @@ def run_tuning(
     fp = current_fingerprint()
     cache = TuningCache.load(cache_path)
     results = []
+    refs = {
+        "sum": lambda v: lax.psum(v, "data"),
+        "max": lambda v: lax.pmax(v, "data"),
+        "min": lambda v: lax.pmin(v, "data"),
+    }
     for label, nbytes in sizes:
         m = nbytes // 4
         x = rng.standard_normal((n, m)).astype(np.float32)
         grid = candidate_grid(n, nbytes, smoke=smoke)
-        variants = {}
-        for kind, r, b in grid:
-            sched = _schedule(kind, n, r)
-            variants[(kind, r, b)] = jit_collective(
-                lambda v, s=sched, nb=b: allreduce_flat(v, "data", s, n_buckets=nb)
+        for op in GRID_OPS:
+            monoid = MONOIDS[op]
+            variants = {}
+            for kind, r, b in grid:
+                sched = _schedule(kind, n, r)
+                variants[(kind, r, b)] = jit_collective(
+                    lambda v, s=sched, nb=b, mo=monoid: allreduce_flat(
+                        v, "data", s, n_buckets=nb, combine=mo
+                    )
+                )
+            ref = np.asarray(jit_collective(refs[op])(x))[0]
+            for name, fn in variants.items():
+                np.testing.assert_allclose(
+                    np.asarray(fn(x))[0],
+                    ref,
+                    rtol=1e-5,
+                    atol=1e-5,
+                    err_msg=f"candidate {op}:{name} disagrees with lax.p{op}",
+                )
+            timed = _bench_interleaved(variants, x, iters, reps)
+            meas_rows = []
+            for (kind, r, b), us in sorted(timed.items(), key=lambda kv: kv[1]):
+                meas = Measurement(
+                    P=n, nbytes=nbytes, kind=kind, r=r, n_buckets=b, us=us,
+                    itemsize=4,  # the grid times f32 buffers
+                    op=op,
+                )
+                cache.record(fp, meas)
+                meas_rows.append(asdict(meas))
+                print(f"tune,{label},{op},{kind},r={r},b={b},{us:.1f}")
+            win = meas_rows[0]
+            # benchmarks run f32 buffers: raggedness is per-element
+            # (itemsize=4); candidates are priced with the op's gamma
+            model = choose(
+                n, nbytes, model_fabric, tune=False, itemsize=4, monoid=monoid
             )
-        ref = np.asarray(jit_collective(lambda v: lax.psum(v, "data"))(x))[0]
-        for name, fn in variants.items():
-            np.testing.assert_allclose(
-                np.asarray(fn(x))[0],
-                ref,
-                rtol=1e-5,
-                atol=1e-5,
-                err_msg=f"candidate {name} disagrees with psum",
+            results.append(
+                {
+                    "label": label,
+                    "bytes": nbytes,
+                    "op": op,
+                    "measured_winner": {
+                        k: win[k] for k in ("kind", "r", "n_buckets", "us")
+                    },
+                    "model_pick": {
+                        "kind": model.kind,
+                        "r": model.r,
+                        "n_buckets": model.n_buckets,
+                        "model_us": round(model.cost * 1e6, 1),
+                    },
+                    "measurements": meas_rows,
+                }
             )
-        timed = _bench_interleaved(variants, x, iters, reps)
-        meas_rows = []
-        for (kind, r, b), us in sorted(timed.items(), key=lambda kv: kv[1]):
-            meas = Measurement(
-                P=n, nbytes=nbytes, kind=kind, r=r, n_buckets=b, us=us,
-                itemsize=4,  # the grid times f32 buffers
-            )
-            cache.record(fp, meas)
-            meas_rows.append(asdict(meas))
-            print(f"tune,{label},{kind},r={r},b={b},{us:.1f}")
-        win = meas_rows[0]
-        # benchmarks run f32 buffers: raggedness is per-element (itemsize=4)
-        model = choose(n, nbytes, model_fabric, tune=False, itemsize=4)
-        results.append(
-            {
-                "label": label,
-                "bytes": nbytes,
-                "measured_winner": {
-                    k: win[k] for k in ("kind", "r", "n_buckets", "us")
-                },
-                "model_pick": {
-                    "kind": model.kind,
-                    "r": model.r,
-                    "n_buckets": model.n_buckets,
-                    "model_us": round(model.cost * 1e6, 1),
-                },
-                "measurements": meas_rows,
-            }
-        )
     saved = cache.save(cache_path)
     payload = {
         "fingerprint": asdict(fp),

@@ -80,6 +80,7 @@ def lookup(
     *,
     allow_ring: bool = True,
     itemsize: int = 1,
+    op: str = "sum",
     fingerprint: Optional[Fingerprint] = None,
     cache_path: Optional[os.PathLike] = None,
 ) -> Optional[Choice]:
@@ -90,7 +91,10 @@ def lookup(
     the query's element width: only measurements whose element-ragged
     classification (see :attr:`~repro.tuning.cache.Measurement.ragged`)
     matches the query's are considered, so an f32-measured ragged
-    winner never answers a uniform-geometry message of another dtype."""
+    winner never answers a uniform-geometry message of another dtype.
+    ``op`` is the query's combine operator: only measurements timed
+    under the same operator answer (the grid times each op it covers;
+    an op with no measurements falls back to the analytic model)."""
     if P <= 1:
         return None
     fp = fingerprint if fingerprint is not None else _cached_fingerprint()
@@ -99,15 +103,16 @@ def lookup(
         meas = [m for m in meas if m.kind != "ring"]
     if not meas:
         return None
-    return best_measured(meas, nbytes, itemsize=itemsize)
+    return best_measured(meas, nbytes, itemsize=itemsize, op=op)
 
 
-def best_measured(meas: List[Measurement], nbytes: int, *,
-                  itemsize: int = 1) -> Optional[Choice]:
+def best_measured(
+    meas: List[Measurement], nbytes: int, *, itemsize: int = 1, op: str = "sum"
+) -> Optional[Choice]:
     """Nearest-size interpolation over a measurement list (one backend,
     one P).  Exposed separately so tests can drive it without file I/O.
-    Measurements whose element-ragged classification differs from the
-    query's are dropped before bracketing.
+    Measurements whose element-ragged classification or combine operator
+    differs from the query's are dropped before bracketing.
 
     >>> from repro.tuning.cache import Measurement
     >>> meas = [Measurement(8, 1024, "generalized", 1, 1, 50.0),
@@ -121,7 +126,7 @@ def best_measured(meas: List[Measurement], nbytes: int, *,
     if not meas or nbytes <= 0:
         return None
     ragged_q = (nbytes // max(int(itemsize), 1)) % meas[0].P != 0
-    meas = [m for m in meas if m.ragged == ragged_q]
+    meas = [m for m in meas if m.ragged == ragged_q and m.op == op]
     if not meas:
         return None
     sizes = sorted({m.nbytes for m in meas})

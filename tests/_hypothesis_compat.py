@@ -1,38 +1,259 @@
-"""Optional-hypothesis shim for the test suite.
+"""Property-testing front end: real hypothesis when installed, otherwise
+a small built-in drawing + shrinking engine with the same API surface.
 
 The seed hard-imported ``hypothesis`` at module scope, so *every* test in
-the importing file errored at collection when it was not installed.
-``pytest.importorskip`` at module scope would instead skip the whole file,
-losing the plain (non-property) tests too.  This shim keeps plain tests
-running everywhere: when hypothesis is available it re-exports the real
-``given``/``settings``/``st``; when it is missing, ``@given`` replaces
-just the property test with a skip stub.
+the importing file errored at collection when it was not installed.  The
+first replacement shim skipped the property tests instead; this version
+*runs* them everywhere: when hypothesis is available it re-exports the
+real ``given``/``settings``/``st``, and when it is missing a minimal
+engine stands in --
+
+* deterministic seeding per test (derived from the test's qualified
+  name, so failures replay without a database),
+* the strategy subset the suite uses (``integers``, ``sampled_from``,
+  ``booleans``, ``lists``, ``tuples``, ``data``),
+* greedy shrinking of the failing example (integers toward their lower
+  bound, samples toward earlier elements, lists toward shorter), with
+  the falsifying example -- including every interactive ``data.draw``
+  -- reported on the raised exception.
+
+Only the API subset below is emulated; tests must stay inside it to keep
+both worlds green (CI installs the real package).
 """
-import pytest
+import functools
+import random
+import zlib
 
 try:
     from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
 except ImportError:
-    class _AnyStrategy:
-        """Stands in for ``st``: any strategy expression evaluates to None,
-        which the no-op ``given`` below ignores."""
+    HAVE_HYPOTHESIS = False
 
-        def __getattr__(self, name):
-            return lambda *a, **k: None
+    _DEFAULT_MAX_EXAMPLES = 50
+    _MAX_SHRINK_ATTEMPTS = 200
 
-    st = _AnyStrategy()
+    class _Strategy:
+        def draw(self, rng: random.Random):
+            raise NotImplementedError
 
-    def given(*args, **kwargs):
-        def deco(fn):
-            # zero-arg stub so pytest does not treat the strategy
-            # parameters as fixtures
-            @pytest.mark.skip(reason="hypothesis not installed")
-            def stub():
-                pass  # pragma: no cover
-            stub.__name__ = fn.__name__
-            stub.__doc__ = fn.__doc__
-            return stub
-        return deco
+        def shrinks(self, value):
+            """Candidate simpler values, most aggressive first."""
+            return ()
+
+    class _Integers(_Strategy):
+        def __init__(self, lo, hi):
+            if lo is None or hi is None:
+                raise ValueError("the built-in engine needs bounded "
+                                 "integers(min_value, max_value)")
+            self.lo, self.hi = int(lo), int(hi)
+
+        def draw(self, rng):
+            roll = rng.random()
+            if roll < 0.08:
+                return self.lo
+            if roll < 0.16:
+                return self.hi
+            return rng.randint(self.lo, self.hi)
+
+        def shrinks(self, v):
+            out = []
+            for c in (self.lo, self.lo + (v - self.lo) // 2, v - 1):
+                if self.lo <= c < v and c not in out:
+                    out.append(c)
+            return out
+
+    class _SampledFrom(_Strategy):
+        def __init__(self, seq):
+            self.seq = list(seq)
+            if not self.seq:
+                raise ValueError("sampled_from needs a non-empty sequence")
+
+        def draw(self, rng):
+            return self.seq[rng.randrange(len(self.seq))]
+
+        def shrinks(self, v):
+            try:
+                i = self.seq.index(v)
+            except ValueError:
+                return ()
+            out = []
+            for j in (0, i // 2, i - 1):
+                if 0 <= j < i and self.seq[j] not in out:
+                    out.append(self.seq[j])
+            return out
+
+    class _Lists(_Strategy):
+        def __init__(self, elems, min_size=0, max_size=None):
+            self.elems = elems
+            self.min_size = int(min_size)
+            self.max_size = int(max_size) if max_size is not None \
+                else self.min_size + 8
+
+        def draw(self, rng):
+            size = rng.randint(self.min_size, self.max_size)
+            return [self.elems.draw(rng) for _ in range(size)]
+
+        def shrinks(self, v):
+            out = []
+            if len(v) > self.min_size:
+                out.append(list(v[:self.min_size]))
+                out.append(list(v[:-1]))
+            for i, x in enumerate(v):
+                for c in self.elems.shrinks(x):
+                    out.append(v[:i] + [c] + v[i + 1:])
+                    break           # one candidate per position bounds work
+            return out
+
+    class _Tuples(_Strategy):
+        def __init__(self, strats):
+            self.strats = strats
+
+        def draw(self, rng):
+            return tuple(s.draw(rng) for s in self.strats)
+
+        def shrinks(self, v):
+            out = []
+            for i, (s, x) in enumerate(zip(self.strats, v)):
+                for c in s.shrinks(x):
+                    out.append(v[:i] + (c,) + v[i + 1:])
+                    break
+            return out
+
+    class _DataMarker(_Strategy):
+        """Placeholder: the runner substitutes a live _DataObject."""
+
+        def draw(self, rng):
+            return _DataObject(rng, [])
+
+    class _DataObject:
+        """Interactive draws; every draw is logged for the failure report."""
+
+        def __init__(self, rng, log):
+            self._rng = rng
+            self._log = log
+
+        def draw(self, strategy, label=None):
+            v = strategy.draw(self._rng)
+            self._log.append((label or f"data[{len(self._log)}]", v))
+            return v
+
+    class _St:
+        @staticmethod
+        def integers(min_value=None, max_value=None):
+            return _Integers(min_value, max_value)
+
+        @staticmethod
+        def sampled_from(seq):
+            return _SampledFrom(seq)
+
+        @staticmethod
+        def booleans():
+            return _SampledFrom([False, True])
+
+        @staticmethod
+        def lists(elems, min_size=0, max_size=None, **_):
+            return _Lists(elems, min_size, max_size)
+
+        @staticmethod
+        def tuples(*strats):
+            return _Tuples(strats)
+
+        @staticmethod
+        def data():
+            return _DataMarker()
+
+    st = _St()
 
     def settings(*args, **kwargs):
-        return lambda fn: fn
+        def deco(fn):
+            fn._hyp_settings = kwargs
+            return fn
+        return deco
+
+    def _run_case(fn, seed, names, strats):
+        """Draw every argument from a fresh rng at ``seed`` and call the
+        test; returns (values, data_log, exception_or_None)."""
+        rng = random.Random(seed)
+        values, data_log = [], []
+        for s in strats:
+            if isinstance(s, _DataMarker):
+                values.append(_DataObject(rng, data_log))
+            else:
+                values.append(s.draw(rng))
+        return values, data_log, _call(fn, names, values)
+
+    def _replay(fn, seed, names, strats, values):
+        """Re-run with pinned non-data values; data draws re-derive from
+        the case seed, so the attempt is deterministic."""
+        rng = random.Random(seed)
+        data_log = []
+        vals = [(_DataObject(rng, data_log)
+                 if isinstance(s, _DataMarker) else v)
+                for s, v in zip(strats, values)]
+        return vals, data_log, _call(fn, names, vals)
+
+    def _call(fn, names, values):
+        n_pos = names.count(None)
+        args = values[:n_pos]
+        kwargs = {k: v for k, v in zip(names[n_pos:], values[n_pos:])}
+        try:
+            fn(*args, **kwargs)
+            return None
+        except Exception as e:          # noqa: BLE001 - reported verbatim
+            return e
+
+    def _describe(names, values, data_log):
+        parts = []
+        for k, v in zip(names, values):
+            if isinstance(v, _DataObject):
+                continue
+            parts.append(f"{k}={v!r}" if k else repr(v))
+        parts += [f"{k}={v!r}" for k, v in data_log]
+        return ", ".join(parts)
+
+    def given(*arg_strats, **kw_strats):
+        strats = list(arg_strats) + list(kw_strats.values())
+        names = [None] * len(arg_strats) + list(kw_strats.keys())
+
+        def deco(fn):
+            @functools.wraps(fn)
+            def runner():    # noqa: C901 - one self-contained engine loop
+                cfg = getattr(runner, "_hyp_settings", {})
+                max_examples = cfg.get("max_examples", _DEFAULT_MAX_EXAMPLES)
+                base = zlib.crc32(fn.__qualname__.encode())
+                for i in range(max_examples):
+                    seed = base + i
+                    values, dlog, exc = _run_case(fn, seed, names, strats)
+                    if exc is None:
+                        continue
+                    # greedy shrink: accept any simpler still-failing value
+                    attempts = 0
+                    improved = True
+                    while improved and attempts < _MAX_SHRINK_ATTEMPTS:
+                        improved = False
+                        for pos, s in enumerate(strats):
+                            if isinstance(s, _DataMarker):
+                                continue
+                            for cand in s.shrinks(values[pos]):
+                                attempts += 1
+                                trial = list(values)
+                                trial[pos] = cand
+                                _, tl, terr = _replay(fn, seed, names,
+                                                      strats, trial)
+                                if terr is not None:
+                                    values, dlog, exc = trial, tl, terr
+                                    improved = True
+                                    break
+                                if attempts >= _MAX_SHRINK_ATTEMPTS:
+                                    break
+                            if improved or attempts >= _MAX_SHRINK_ATTEMPTS:
+                                break
+                    msg = (f"Falsifying example (seed={seed}): "
+                           f"{fn.__name__}({_describe(names, values, dlog)})")
+                    raise AssertionError(msg) from exc
+            # pytest resolves fixtures through __wrapped__'s signature;
+            # the runner is zero-arg, so drop the wraps() breadcrumb
+            del runner.__wrapped__
+            return runner
+        return deco

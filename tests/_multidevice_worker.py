@@ -16,8 +16,9 @@ from jax.sharding import PartitionSpec as P  # noqa: E402
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.compat import shard_map  # noqa: E402
-from repro.core.allreduce import (all_gather_flat, allreduce_flat,  # noqa: E402
-                                  allreduce_tree, hierarchical_allreduce,
+from repro.core.allreduce import (all_gather_flat, all_to_all_flat,  # noqa: E402
+                                  allreduce_flat, allreduce_tree,
+                                  hierarchical_allreduce,
                                   hierarchical_allreduce_flat, psum_tree,
                                   reduce_scatter_flat, tree_all_gather,
                                   tree_reduce_scatter)
@@ -317,12 +318,302 @@ def check_execplan():
     print("ok execplan")
 
 
+def check_a2a():
+    """Schedule-driven all-to-all on real devices: both plan kinds (and
+    the cost-model "auto" pick) bit-equal to ``lax.all_to_all`` on int
+    data, pipelined buckets included; non-divisible lengths raise the
+    typed ShapeError instead of mis-permuting."""
+    from jax import lax
+
+    from repro.core.execplan import simulate_a2a
+    from repro.core.schedule import ShapeError
+    n = len(jax.devices())
+    mesh = jax.make_mesh((n,), ("data",))
+    rng = np.random.default_rng(21)
+    for mult in (1, 3, 32):
+        m = n * mult
+        x = rng.integers(-1000, 1000, (n, m)).astype(np.int32)
+        ref = None
+        for kind in ("direct", "bruck", "auto"):
+            for nb in (1, 2):
+                f = jax.jit(shard_map(
+                    lambda v, k=kind, b=nb: all_to_all_flat(
+                        v[0], "data", kind=k, n_buckets=b)[None],
+                    mesh=mesh, in_specs=P("data", None),
+                    out_specs=P("data", None)))
+                out = np.asarray(f(x))
+                if ref is None:
+                    g = jax.jit(shard_map(
+                        lambda v: lax.all_to_all(
+                            v[0].reshape(n, -1), "data", 0, 0).reshape(1, -1),
+                        mesh=mesh, in_specs=P("data", None),
+                        out_specs=P("data", None)))
+                    ref = np.asarray(g(x))
+                assert (out == ref).all(), (mult, kind, nb)
+        sim = simulate_a2a([x[d] for d in range(n)], "direct")
+        for d in range(n):
+            assert (ref[d] == sim[d]).all(), (mult, d)
+    try:
+        jax.jit(shard_map(
+            lambda v: all_to_all_flat(v[0], "data")[None],
+            mesh=mesh, in_specs=P("data", None),
+            out_specs=P("data", None)))(np.zeros((n, n + 1), np.int32))
+    except ShapeError as e:
+        assert e.actual == n + 1
+    else:
+        raise AssertionError("non-divisible all-to-all did not raise")
+    print("ok a2a")
+
+
+def check_maxreduce():
+    """Non-sum monoids on real devices: max/min allreduce bit-exact vs
+    lax.pmax/pmin on int32 (incl. values past 2**24, which an f32
+    accumulation cast would corrupt), Pallas-vs-elementwise parity for
+    the max kernel, mean == psum / P bit-exact on int-valued f32, and
+    the dp_grad_allreduce(op="max") + grads_all_finite wiring."""
+    from jax import lax
+
+    from repro.parallel.api import (ParallelConfig, dp_grad_allreduce,
+                                    grads_all_finite)
+    n = len(jax.devices())
+    mesh = jax.make_mesh((n,), ("data",))
+    rng = np.random.default_rng(22)
+    scheds = [build_generalized(n, r) for r in range(max_r(n) + 1)]
+    scheds.append(build_ring(n))
+    for m in (1, 13, 257):
+        # values straddle 2**24 so any f32 round-trip would be caught
+        x = rng.integers(-(1 << 28), 1 << 28, (n, m)).astype(np.int32)
+        refs = {"max": x.max(0), "min": x.min(0)}
+        for sched in scheds:
+            for comb in ("max", "min"):
+                for nb in (1, 2):
+                    f = jax.jit(shard_map(
+                        lambda v, s=sched, c=comb, b=nb: allreduce_flat(
+                            v[0], "data", s, combine=c, n_buckets=b)[None],
+                        mesh=mesh, in_specs=P("data", None),
+                        out_specs=P("data", None)))
+                    out = np.asarray(f(x))
+                    assert (out == refs[comb][None]).all(), \
+                        (m, sched.kind, sched.r, comb, nb)
+        g = jax.jit(shard_map(
+            lambda v: lax.pmax(v[0], "data")[None], mesh=mesh,
+            in_specs=P("data", None), out_specs=P("data", None)))
+        assert (np.asarray(g(x)) == refs["max"][None]).all()
+
+    # pallas-routed max == elementwise max, bit for bit (check_vma=False:
+    # old-JAX replication checkers have no pallas rule)
+    x = rng.integers(-1000, 1000, (n, 257)).astype(np.int32)
+    sched = build_generalized(n, max_r(n))
+    outs = {}
+    for comb in ("max:pallas", "max"):
+        f = jax.jit(shard_map(
+            lambda v, c=comb: allreduce_flat(
+                v[0], "data", sched, combine=c, n_buckets=2)[None],
+            mesh=mesh, in_specs=P("data", None),
+            out_specs=P("data", None), check_vma=False))
+        outs[comb] = np.asarray(f(x))
+    assert (outs["max:pallas"] == outs["max"]).all()
+    assert (outs["max"][0] == x.max(0)).all()
+
+    # mean == psum / P bit-exact on integer-valued f32
+    xf = x.astype(np.float32)
+    f = jax.jit(shard_map(
+        lambda v: jnp_stack_pair(
+            allreduce_flat(v[0], "data", sched, combine="mean"),
+            lax.psum(v[0], "data") / n),
+        mesh=mesh, in_specs=P("data", None), out_specs=P("data", None)))
+    got = np.asarray(f(xf))
+    assert (got[0] == got[1]).all()
+
+    # dp_grad_allreduce(op=) + the max-allreduce non-finite detector
+    pc = ParallelConfig(dp_axes=("data",), dp=n)
+    tree = {"a": rng.integers(-(1 << 28), 1 << 28, (n, 13)).astype(np.int32)}
+
+    def ours(t):
+        loc = jax.tree.map(lambda v: v[0], t)
+        out = dp_grad_allreduce(loc, pc, mean=False, op="max")
+        return jax.tree.map(lambda v: v[None], out)
+
+    a = jax.jit(shard_map(ours, mesh=mesh, in_specs=P("data"),
+                          out_specs=P("data")))(tree)
+    assert (np.asarray(a["a"])[0] == tree["a"].max(0)).all()
+
+    grads = {"w": rng.standard_normal((n, 7)).astype(np.float32)}
+    bad = {"w": grads["w"].copy()}
+    bad["w"][n - 1, 3] = np.inf     # one non-finite value on ONE rank
+
+    def finite(t):
+        loc = jax.tree.map(lambda v: v[0], t)
+        return grads_all_finite(loc, pc)[None]
+
+    f = jax.jit(shard_map(finite, mesh=mesh, in_specs=P("data"),
+                          out_specs=P("data")))
+    assert np.asarray(f(grads)).all()          # every rank: all finite
+    assert not np.asarray(f(bad)).any()        # every rank saw the inf
+
+    # affine bookends act ONCE over the hierarchical composition: premul
+    # scales by f (never f^n_levels) and mean divides by the full P
+    if n % 2 == 0:
+        from repro.core.monoid import premul_sum
+        from repro.topology import Level, Topology
+        from repro.topology.fabric import TPU_DCN
+
+        names = ("pod", "data")
+        hmesh = jax.make_mesh((2, n // 2), names)
+        topo = Topology((Level("pod", 2, TPU_DCN),
+                         Level("ici", n // 2, TPU_V5E_ICI)),
+                        name=f"maxreduce-2x{n // 2}")
+        xf = rng.integers(-1000, 1000, (n, 37)).astype(np.float32)
+        # premul by 0.5 is exact in f32 -> compare against numpy; mean's
+        # divide-by-P is compiled by XLA as a reciprocal multiply (not
+        # correctly rounded for non-power-of-two P), so its reference is
+        # the in-program lax.psum(v)/P -- the same divide lax users get
+        from jax import lax
+
+        def hier(flat, c):
+            return hierarchical_allreduce(flat, names, topo, r=0,
+                                          mean=False, combine=c)
+
+        def both(v):
+            flat = v.reshape(-1)
+            s = lax.psum(flat, names)
+            import jax.numpy as jnp
+            return jnp.stack([hier(flat, premul_sum(0.5)), 0.5 * s,
+                              hier(flat, "mean"), s / n])[None]
+
+        got = np.asarray(jax.jit(shard_map(
+            both, mesh=hmesh, in_specs=P(names, None),
+            out_specs=P(names, None, None)))(xf))
+        for d in range(n):
+            assert (got[d, 0] == 0.5 * xf.sum(0)).all(), d  # np-exact
+            assert (got[d, 0] == got[d, 1]).all(), d        # == 0.5*psum
+            assert (got[d, 2] == got[d, 3]).all(), d        # == psum / P
+    print("ok maxreduce")
+
+
+def jnp_stack_pair(a, b):
+    import jax.numpy as jnp
+    return jnp.stack([a, b])[None]
+
+
+def check_moe_dispatch():
+    """MoE forward under the three dispatch modes: the schedule-driven
+    all-to-all path must match the GShard (lax.all_to_all) oracle
+    bit-exactly (both are pure permutations of the same blocks), and
+    the TP-sharded local path to fp32 exactness."""
+    import jax.numpy as jnp  # noqa: F401
+
+    from repro.models.config import ModelConfig, MoEConfig
+    from repro.models.moe import ep_group_size, moe_apply
+    from repro.parallel.api import ParallelConfig
+
+    n = len(jax.devices())
+    mesh = jax.make_mesh((n,), ("data",))
+    rng = np.random.default_rng(33)
+    E, d, ff, k = 2 * n, 32, 48, 2    # experts split evenly for any n
+    cfg = ModelConfig(name="t", family="moe", d_model=d, n_layers=1,
+                      n_heads=4, n_kv_heads=4, d_ff=ff, vocab=128,
+                      moe=MoEConfig(n_experts=E, top_k=k, d_expert=ff))
+    p = {"router": {"w": rng.standard_normal((d, E)).astype(np.float32)},
+         "experts": {
+             "w1": 0.1 * rng.standard_normal((E, d, ff)).astype(np.float32),
+             "w3": 0.1 * rng.standard_normal((E, d, ff)).astype(np.float32),
+             "w2": 0.1 * rng.standard_normal((E, ff, d)).astype(np.float32)}}
+    x = rng.standard_normal((n, 24, d)).astype(np.float32)
+
+    outs = {}
+    for disp in ("tp", "gshard", "schedule"):
+        pc = ParallelConfig(dp_axes=("data",), dp=n, tp=1,
+                            moe_dispatch=disp)
+        assert ep_group_size(pc, E) == (1 if disp == "tp" else n)
+
+        def f(xv, pp, pc=pc):
+            y, aux = moe_apply(pp, xv, cfg, pc)
+            return y, aux[None]
+
+        g = jax.jit(shard_map(
+            f, mesh=mesh, in_specs=(P("data", None, None), P()),
+            out_specs=(P("data", None, None), P("data"))))
+        y, aux = g(x, p)
+        outs[disp] = np.asarray(y)
+    assert (outs["gshard"] == outs["schedule"]).all(), \
+        "schedule-driven dispatch != GShard oracle"
+    np.testing.assert_allclose(outs["tp"], outs["gshard"],
+                               rtol=1e-6, atol=1e-6)
+    print("ok moe_dispatch")
+
+
+def check_conformance():
+    """Acceptance sweep vs the real lax references, P in {2,3,5,6,7,8,16}
+    on meshes over the first P of 16 forced host devices: max/min/mean
+    allreduce and both all-to-all kinds, divisible and ragged sizes,
+    each bit-exact vs lax.pmax / lax.pmin / lax.psum / lax.all_to_all."""
+    import jax.numpy as jnp
+    from jax import lax
+    from jax.sharding import Mesh
+
+    devs = jax.devices()
+    if len(devs) < 16:
+        print("ok conformance (skipped: needs 16 devices)")
+        return
+    rng = np.random.default_rng(42)
+    for n in (2, 3, 5, 6, 7, 8, 16):
+        mesh = Mesh(np.array(devs[:n]), ("data",))
+        for m in (3 * n, 3 * n + 1, 1, max(n - 1, 1)):
+            x = rng.integers(-1000, 1000, (n, m)).astype(np.int32)
+            r = max_r(n) if m % n else 0
+            sched = build_generalized(n, r)
+            nb = 2 if m > n else 1
+            a2a = m % n == 0
+
+            def f(v, s=sched, nb=nb, n=n, a2a=a2a):
+                vi = v[0]
+                vf = vi.astype(jnp.float32)
+                outs = [
+                    allreduce_flat(vi, "data", s, combine="sum",
+                                   n_buckets=nb),
+                    lax.psum(vi, "data"),
+                    allreduce_flat(vi, "data", s, combine="max"),
+                    lax.pmax(vi, "data"),
+                    allreduce_flat(vi, "data", s, combine="min"),
+                    lax.pmin(vi, "data"),
+                    allreduce_flat(vf, "data", s, combine="mean"),
+                    lax.psum(vf, "data") / n,
+                ]
+                if a2a:
+                    outs += [
+                        all_to_all_flat(vi, "data", kind="direct"),
+                        all_to_all_flat(vi, "data", kind="bruck"),
+                        lax.all_to_all(vi.reshape(n, -1), "data", 0,
+                                       0).reshape(-1),
+                    ]
+                return [o[None] for o in outs]
+
+            n_out = 11 if a2a else 8
+            g = jax.jit(shard_map(
+                f, mesh=mesh, in_specs=P("data", None),
+                out_specs=[P("data", None)] * n_out))
+            outs = [np.asarray(o) for o in g(x)]
+            pairs = [("sum", 0, 1), ("max", 2, 3), ("min", 4, 5),
+                     ("mean", 6, 7)]
+            if a2a:
+                pairs += [("a2a_direct", 8, 10), ("a2a_bruck", 9, 10)]
+            for name, i, j in pairs:
+                assert (outs[i] == outs[j]).all(), (n, m, name)
+            assert (outs[0][0] == x.sum(0)).all(), (n, m)
+            assert (outs[2][0] == x.max(0)).all(), (n, m)
+        print(f"ok conformance P={n}")
+    print("ok conformance")
+
+
 if __name__ == "__main__":
     which = sys.argv[1] if len(sys.argv) > 1 else "all"
     checks = dict(allreduce=check_allreduce_flat, psum=check_vs_psum,
                   rsag=check_rs_ag, multiaxis=check_multiaxis,
                   zero=check_tree_zero, hier=check_hierarchical,
-                  execplan=check_execplan, ragged=check_ragged)
+                  execplan=check_execplan, ragged=check_ragged,
+                  a2a=check_a2a, maxreduce=check_maxreduce,
+                  moe=check_moe_dispatch, conformance=check_conformance)
     if which == "all":
         for fn in checks.values():
             fn()

@@ -84,3 +84,38 @@ def test_ragged_dp_allreduce_8dev():
 def test_ragged_dp_allreduce_6dev():
     # non-power-of-two device count: every size in the check is uneven
     _run("ragged", devices=6)
+
+
+def test_all_to_all_8dev():
+    """Schedule-driven all-to-all (direct/bruck/auto, pipelined buckets)
+    bit-equal to lax.all_to_all on int data; ShapeError on P ∤ m."""
+    _run("a2a")
+
+
+@pytest.mark.slow
+def test_all_to_all_nonpower2_6dev():
+    # Bruck's bit-decomposition shifts must also close over Z6
+    _run("a2a", devices=6)
+
+
+def test_maxreduce_8dev():
+    """max/min/mean monoids through every schedule: int-exact vs numpy
+    and lax.pmax, Pallas-vs-elementwise parity, dp_grad_allreduce(op=),
+    and the max-allreduce loss-scale finiteness detector."""
+    _run("maxreduce")
+
+
+@pytest.mark.slow
+def test_maxreduce_nonpower2_6dev():
+    _run("maxreduce", devices=6)
+
+
+def test_moe_schedule_dispatch_8dev():
+    """MoE forward with schedule-driven all-to-all dispatch == the
+    GShard lax.all_to_all oracle bit-exactly; == TP-local to fp32."""
+    _run("moe")
+
+
+@pytest.mark.slow
+def test_moe_schedule_dispatch_6dev():
+    _run("moe", devices=6)

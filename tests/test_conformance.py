@@ -1,0 +1,272 @@
+"""Property-based conformance harness for the generalized collective family.
+
+Every drawn case fixes one point of the family -- process count P
+(non-powers-of-two weighted), step trade-off r, message length (ragged
+sizes included), dtype, bucket count, and combine monoid -- and asserts
+the whole verification chain bit-exactly:
+
+    symbolic simulator  ==  lowered ExecPlan replay  ==  ground truth
+
+where the ground truth is exactly what the matching ``lax`` collective
+computes (psum / pmax / pmin / psum-over-P / all_to_all); the *actual*
+``lax`` primitives are exercised against the same executors on real
+devices by ``test_conformance_vs_lax_16dev`` below (subprocess with 16
+forced host devices, meshes over the first P) for every acceptance P.
+
+Failing cases shrink (see ``_hypothesis_compat``) and report a
+replayable repr: the drawn parameters plus ``schedule_summary`` of the
+offending compiled Schedule appear in the assertion message.
+
+The negative half mutates verified schedules (dropped step, swapped
+ppermute shift, wrong chunk widths) and asserts the machinery *catches*
+the corruption -- structural verification, a raised error, or a
+detected mis-reduction -- rather than silently returning wrong numbers.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.dirname(__file__))
+from _hypothesis_compat import given, settings, st  # noqa: E402
+
+from repro.core.execplan import (compile_a2a_plan, simulate_a2a,  # noqa: E402
+                                 simulate_plan)
+from repro.core.monoid import (MAX, MEAN, MIN, SUM, premul_sum,  # noqa: E402
+                               resolve_combine)
+from repro.core.schedule import (InvalidScheduleError, Schedule,  # noqa: E402
+                                 ShapeError, _verify, build_generalized,
+                                 build_ring, max_r, ragged_sizes,
+                                 schedule_summary)
+from repro.core.simulator import simulate  # noqa: E402
+
+# non-powers-of-two deliberately over-represented: they are the paper's
+# headline case and the ragged split's hardest geometry
+PS = [2, 3, 3, 5, 5, 6, 6, 7, 7, 9, 10, 11, 11, 12, 13, 13, 14, 15, 4, 8, 16]
+
+MONOIDS = [SUM, MAX, MIN, MEAN, premul_sum(0.5)]
+
+DTYPES = [np.int32, np.int64, np.float32]
+
+
+def _draw_vectors(data, P, m, dtype):
+    """Integer-valued inputs: every monoid reduction is then exact in
+    every dtype (f32 holds the magnitudes involved exactly), so all
+    comparisons below are ==, never allclose."""
+    seed = data.draw(st.integers(0, 2**31 - 1), label="seed")
+    rng = np.random.default_rng(seed)
+    return [rng.integers(-1000, 1000, (m,)).astype(dtype) for _ in range(P)]
+
+
+def _reference(monoid, vectors):
+    stack = np.stack(vectors)
+    if monoid.pre_scale is not None and stack.dtype.kind != "f":
+        # premul on ints: scale in float so the reference matches the
+        # executor's elementwise multiply semantics
+        stack = stack.astype(np.float64)
+    return monoid.reference(stack)
+
+
+@settings(max_examples=120, deadline=None)
+@given(data=st.data())
+def test_conformance_allreduce_family(data):
+    """simulate == simulate_plan == monoid ground truth, bit for bit."""
+    P = data.draw(st.sampled_from(PS), label="P")
+    kind = data.draw(st.sampled_from(["generalized", "generalized", "ring"]),
+                     label="kind")
+    r = data.draw(st.integers(0, max_r(P)), label="r") \
+        if kind == "generalized" else 0
+    m = data.draw(st.integers(1, 4 * P + 7), label="m")
+    dtype = data.draw(st.sampled_from(DTYPES), label="dtype")
+    n_buckets = data.draw(st.sampled_from([1, 2, 4]), label="n_buckets")
+    monoid = data.draw(st.sampled_from(MONOIDS), label="monoid")
+    if monoid.pre_scale is not None and np.dtype(dtype).kind != "f":
+        dtype = np.float32        # premul of ints would truncate
+    sched = build_ring(P) if kind == "ring" else build_generalized(P, r)
+    vectors = _draw_vectors(data, P, m, dtype)
+    want = _reference(monoid, vectors)
+    ctx = (f"case P={P} kind={kind} r={r} m={m} dtype={np.dtype(dtype)} "
+           f"n_buckets={n_buckets} monoid={monoid.name} "
+           f"sched={schedule_summary(sched)}")
+
+    prepped = [np.asarray(monoid.prepare(v.astype(want.dtype), P))
+               for v in vectors]
+    sym = simulate(sched, prepped, op=monoid.np_op)
+    plan = simulate_plan(sched, prepped, n_buckets=n_buckets,
+                         op=monoid.np_op)
+    for d in range(P):
+        got_sym = monoid.finalize(sym[d], P)
+        got_plan = monoid.finalize(plan[d], P)
+        assert got_sym.shape == want.shape, ctx
+        assert (got_sym == want).all(), f"symbolic simulator diverged; {ctx}"
+        assert (got_plan == want).all(), f"ExecPlan lowering diverged; {ctx}"
+
+
+@settings(max_examples=80, deadline=None)
+@given(data=st.data())
+def test_conformance_all_to_all(data):
+    """simulate_a2a (both plan kinds) == the transpose lax.all_to_all
+    computes, for every P and multiplier; non-divisible lengths raise."""
+    P = data.draw(st.sampled_from(PS), label="P")
+    kind = data.draw(st.sampled_from(["direct", "bruck"]), label="kind")
+    mult = data.draw(st.integers(1, 5), label="mult")
+    dtype = data.draw(st.sampled_from(DTYPES), label="dtype")
+    m = P * mult
+    vectors = _draw_vectors(data, P, m, dtype)
+    got = simulate_a2a(vectors, kind)
+    stack = np.stack(vectors).reshape(P, P, mult)
+    ctx = f"case P={P} kind={kind} mult={mult} dtype={np.dtype(dtype)}"
+    for d in range(P):
+        want = stack[:, d, :].reshape(-1)       # chunk d of every source
+        assert (got[d] == want).all(), f"all-to-all mispermuted; {ctx}"
+    if P > 1:
+        with pytest.raises(ShapeError):
+            simulate_a2a([v[:-1] for v in vectors], kind)
+
+
+@settings(max_examples=40, deadline=None)
+@given(data=st.data())
+def test_monoid_laws(data):
+    """Associativity + identity of every built-in on drawn integers."""
+    monoid = data.draw(st.sampled_from([SUM, MAX, MIN]), label="monoid")
+    a = data.draw(st.integers(-10**6, 10**6), label="a")
+    b = data.draw(st.integers(-10**6, 10**6), label="b")
+    c = data.draw(st.integers(-10**6, 10**6), label="c")
+    op = monoid.np_op
+    x, y, z = (np.int64(v) for v in (a, b, c))
+    assert op(op(x, y), z) == op(x, op(y, z))
+    e = monoid.identity(np.int64)
+    assert op(x, e) == x and op(e, x) == x
+
+
+def test_conformance_case_count():
+    """The harness above draws >= 200 cases per run (acceptance floor)."""
+    drawn = 120 + 80 + 40
+    assert drawn >= 200
+
+
+# ---------------------------------------------------------------------------
+#  negative / mutation tests: corrupted schedules must be *caught*
+# ---------------------------------------------------------------------------
+
+def _caught_by_machinery(mutated: Schedule, P: int) -> bool:
+    """A corrupted schedule counts as caught when the structural verifier
+    rejects it, the simulator raises, or the simulated result visibly
+    differs from the ground truth -- silence with wrong numbers is the
+    only failure."""
+    try:
+        _verify(mutated)
+        verified = True
+    except InvalidScheduleError:
+        return True
+    assert verified
+    rng = np.random.default_rng(0)
+    vectors = [rng.integers(-1000, 1000, (3 * P + 1,)).astype(np.int64)
+               for _ in range(P)]
+    want = np.stack(vectors).sum(0)
+    try:
+        out = simulate(mutated, vectors)
+    except Exception:
+        return True
+    return any(o.shape != want.shape or not (o == want).all() for o in out)
+
+
+@pytest.mark.parametrize("P", [4, 6, 8])
+def test_mutation_dropped_step(P):
+    sched = build_generalized(P, 1)
+    mutated = dataclasses.replace(sched, steps=sched.steps[:-1])
+    assert _caught_by_machinery(mutated, P), \
+        "dropping the last step went unnoticed"
+    mutated = dataclasses.replace(sched, steps=sched.steps[1:])
+    assert _caught_by_machinery(mutated, P), \
+        "dropping the first step went unnoticed"
+
+
+@pytest.mark.parametrize("P", [4, 6, 8])
+def test_mutation_swapped_ppermute(P):
+    """Perturbing one step's group element (the ppermute pairing) must be
+    caught for every step of the schedule."""
+    sched = build_generalized(P, 1)
+    for k, step in enumerate(sched.steps):
+        wrong = dataclasses.replace(step,
+                                    shift=(step.shift + 1) % P or 1)
+        steps = sched.steps[:k] + (wrong,) + sched.steps[k + 1:]
+        mutated = dataclasses.replace(sched, steps=steps)
+        assert _caught_by_machinery(mutated, P), \
+            f"swapped ppermute at step {k} went unnoticed"
+
+
+@pytest.mark.parametrize("P", [4, 7])
+def test_mutation_wrong_chunk_size(P):
+    """Chunk geometry violations surface as raised errors, not silent
+    mis-reductions: per-device vectors of inconsistent lengths cannot be
+    combined, and the typed ShapeError carries the offending sizes."""
+    sched = build_generalized(P, 0)
+    rng = np.random.default_rng(1)
+    vectors = [rng.integers(0, 10, (2 * P,)).astype(np.int64)
+               for _ in range(P)]
+    vectors[1] = vectors[1][:-3]          # one device disagrees on m
+    with pytest.raises(ShapeError) as ei:
+        simulate(sched, vectors)
+    assert ei.value.actual == (2 * P - 3,)
+    with pytest.raises(ShapeError) as ei:
+        ragged_sizes(-1, P)
+    assert ei.value.actual == -1
+    with pytest.raises(ValueError):
+        compile_a2a_plan(P, "sideways")
+
+
+# ---------------------------------------------------------------------------
+#  combine= argument surface
+# ---------------------------------------------------------------------------
+
+def test_premul_int_truncation_refused():
+    """A fractional premul factor on an integer buffer would silently
+    multiply by 0 in the input dtype -- the bookend must refuse, loudly,
+    at prepare time (the library path, not just the harness's dtype
+    forcing)."""
+    with pytest.raises(TypeError, match="truncate"):
+        premul_sum(0.5).prepare(np.arange(4, dtype=np.int32), 2)
+    # integral factors cast exactly and stay allowed
+    out = premul_sum(2.0).prepare(np.arange(4, dtype=np.int32), 2)
+    assert out.dtype == np.int32 and (out == [0, 2, 4, 6]).all()
+
+
+def test_resolve_combine_surface():
+    assert resolve_combine("sum")[0] is SUM
+    assert resolve_combine("mean")[0] is MEAN
+    assert resolve_combine("auto") == (SUM, "auto")
+    assert resolve_combine("add") == (SUM, "op")
+    assert resolve_combine("max:pallas") == (MAX, "pallas")
+    m, impl = resolve_combine(lambda a, b: a + b)
+    assert m.kind == "custom" and impl == "op"
+    with pytest.raises(ValueError):
+        resolve_combine("median")
+    with pytest.raises(TypeError):
+        resolve_combine(3)
+    assert MIN.identity(np.float32) == np.finfo(np.float32).max
+
+
+# ---------------------------------------------------------------------------
+#  the real lax references on real devices (subprocess, 16 host devices)
+# ---------------------------------------------------------------------------
+
+_WORKER = os.path.join(os.path.dirname(__file__), "_multidevice_worker.py")
+
+
+def test_conformance_vs_lax_16dev():
+    """max/min/mean allreduce and schedule-driven all_to_all, bit-exact
+    vs lax.pmax/pmin/psum/all_to_all for P in {2,3,5,6,7,8,16} incl.
+    ragged sizes (acceptance criterion)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+    env["JAX_PLATFORMS"] = "cpu"
+    res = subprocess.run([sys.executable, _WORKER, "conformance"], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0, f"worker failed:\n{res.stdout}\n{res.stderr}"
+    assert "ALL-OK" in res.stdout, res.stdout
+    for P in (2, 3, 5, 6, 7, 8, 16):
+        assert f"ok conformance P={P}" in res.stdout, res.stdout
