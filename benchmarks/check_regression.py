@@ -36,7 +36,12 @@ Usage (what CI runs):
     python benchmarks/check_regression.py \
         --current results/executor_smoke.json \
         --baseline results/executor.json \
-        --summary regression_summary.md
+        --summary regression_summary.md \
+        --json regression.json
+
+``--json PATH`` additionally writes the full machine-readable verdict
+(every comparison plus the tolerance and exit status) for downstream
+tooling; ``--json -`` writes it to stdout instead of the CSV rows.
 """
 
 from __future__ import annotations
@@ -161,11 +166,41 @@ def main(argv=None) -> int:
         default=",".join(DEFAULT_KEYS),
         help="comma-separated dimensionless row keys to gate on",
     )
+    ap.add_argument(
+        "--json",
+        default=None,
+        metavar="PATH",
+        help="write the machine-readable verdict here ('-' for stdout)",
+    )
     args = ap.parse_args(argv)
 
     current, baseline = load_rows(args.current), load_rows(args.baseline)
     keys = [k for k in args.keys.split(",") if k]
     comparisons, regressions = compare(current, baseline, keys, args.tolerance)
+
+    def emit_json(verdict: str, exit_code: int) -> None:
+        """Machine-readable verdict (--json PATH, or '-' for stdout)."""
+        if not args.json:
+            return
+        payload = {
+            "verdict": verdict,
+            "exit_code": exit_code,
+            "tolerance": args.tolerance,
+            "keys": keys,
+            "current": args.current,
+            "baseline": args.baseline,
+            "n_comparisons": len(comparisons),
+            "n_regressions": len(regressions),
+            "comparisons": comparisons,
+        }
+        if args.json == "-":
+            print(json.dumps(payload, indent=2))
+        else:
+            with open(args.json, "w") as f:
+                json.dump(payload, f, indent=2)
+                f.write("\n")
+            print(f"check_regression,WROTE,{args.json}")
+
     if not comparisons:
         print(
             f"check_regression: no overlapping labels between "
@@ -173,6 +208,7 @@ def main(argv=None) -> int:
             f"({sorted(baseline)}) -- gate is mis-wired",
             file=sys.stderr,
         )
+        emit_json("MISWIRED", 2)
         return 2
     # the baseline is the source of truth for what must stay gated: for
     # every row class it carries (ragged sizes, non-sum monoids,
@@ -189,14 +225,16 @@ def main(argv=None) -> int:
                 f"current run -- {what} dropped out of the gate",
                 file=sys.stderr,
             )
+            emit_json("MISWIRED", 2)
             return 2
-    for c in comparisons:
-        status = "REGRESSED" if c["regressed"] else "ok"
-        print(
-            f"check_regression,{c['label']},{c['key']},"
-            f"base={c['baseline']:.3f},cur={c['current']:.3f},"
-            f"floor={c['floor']:.3f},{status}"
-        )
+    if args.json != "-":
+        for c in comparisons:
+            status = "REGRESSED" if c["regressed"] else "ok"
+            print(
+                f"check_regression,{c['label']},{c['key']},"
+                f"base={c['baseline']:.3f},cur={c['current']:.3f},"
+                f"floor={c['floor']:.3f},{status}"
+            )
     if args.summary:
         write_summary(
             args.summary,
@@ -213,7 +251,9 @@ def main(argv=None) -> int:
             f"beyond the {args.tolerance:.0%} noise tolerance",
             file=sys.stderr,
         )
+        emit_json("REGRESSION", 1)
         return 1
+    emit_json("OK", 0)
     return 0
 
 

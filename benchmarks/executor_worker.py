@@ -57,7 +57,12 @@ from repro.core.autotune import choose, schedule_for
 from repro.core.cost_model import (HOST_CPU, choose_a2a,
                                    pipelined_schedule_cost, schedule_cost)
 from repro.core.monoid import MONOIDS
-from repro.core.schedule import Schedule
+from repro.core.schedule import Schedule, build_ring
+from repro.obs import trace as obs_trace
+from repro.obs.log import data, get_logger
+from repro.obs.metrics import get_metrics
+
+log = get_logger("benchmarks.executor")
 
 
 # ---------------------------------------------------------------------------
@@ -126,6 +131,114 @@ def legacy_allreduce_flat(x, axis_name, sched: Schedule, combine=jnp.add):
 
 
 # ---------------------------------------------------------------------------
+#  instrumented replay mode (--trace)
+# ---------------------------------------------------------------------------
+
+def trace_overhead_ratio(fn, x, iters=20):
+    """Relative cost of the *disabled* tracing hook on one jitted call:
+    time the call bare, then wrapped in a module-level span with the
+    global tracer off (the exact dispatch-path pattern the library
+    uses), and return hooked/plain - 1.  Gated < 2%."""
+    assert not obs_trace.get_tracer().enabled
+    jax.block_until_ready(fn(x))
+    best_plain = best_hooked = float("inf")
+    for _ in range(4):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn(x)
+        jax.block_until_ready(out)
+        best_plain = min(best_plain, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            with obs_trace.span("hook", cat="bench"):
+                out = fn(x)
+        jax.block_until_ready(out)
+        best_hooked = min(best_hooked, time.perf_counter() - t0)
+    return best_hooked / best_plain - 1.0
+
+
+def trace_mode(args, mesh, n, sizes, overhead_probe):
+    """Instrumented per-tick replay of every (kind, n_buckets) combo the
+    benchmark grid exercises, exported as a Perfetto-loadable Chrome
+    trace plus a metrics snapshot embedding the predicted-vs-measured
+    model-error table (see repro.obs.validate)."""
+    from repro.core.schedule import build_generalized
+    from repro.obs.instrument import traced_allreduce
+    from repro.obs.validate import (fit_ratio, model_error_table,
+                                    report_markdown)
+
+    rng = np.random.default_rng(1)
+    metrics = get_metrics()
+    tracer = obs_trace.enable(clear=True)
+    reports = []
+    for label, nbytes in sizes:
+        m = nbytes // 4
+        vecs = [rng.standard_normal(m).astype(np.float32)
+                for _ in range(n)]
+        ch = choose(n, nbytes, HOST_CPU, itemsize=4)
+        nb = max(2, ch.n_buckets)
+        # every (kind, n_buckets) combination the bench grid runs at
+        # this size: the chosen generalized schedule and the ring
+        # baseline, each unpipelined and at the bench's bucket count
+        combos = [("generalized", ch.r if ch.kind == "generalized" else 0),
+                  ("ring", 0)]
+        for kind, r in combos:
+            sched = build_generalized(n, r) if kind == "generalized" \
+                else build_ring(n)
+            for b in (1, nb):
+                rep = traced_allreduce(sched, vecs, n_buckets=b,
+                                       mesh=mesh, reps=3, tracer=tracer)
+                if not rep.verified:
+                    log.error("trace_replay_mismatch", size=label,
+                              kind=kind, r=r, n_buckets=b,
+                              max_abs_err=rep.max_abs_err)
+                    raise SystemExit(1)
+                reports.append(rep)
+                metrics.counter("replays").inc()
+                metrics.counter("replay_ticks").inc(len(rep.ticks))
+                metrics.histogram("replay_total_us").record(rep.total_us)
+                for t in rep.ticks:
+                    metrics.histogram("tick_total_us").record(t.total_us)
+                data(f"executor,trace,{label},{kind},r={r},b={b},"
+                     f"{rep.total_us:.1f}")
+    rows = model_error_table([r.to_dict() for r in reports], HOST_CPU)
+    gm = fit_ratio(rows)
+    mode = "smoke" if args.smoke else "full"
+    out_dir = os.path.dirname(os.path.abspath(args.out)) or "."
+    trace_path = tracer.save(
+        os.path.join(out_dir, f"trace_executor_{mode}.json"),
+        process_name=f"executor-bench-{mode}")
+    obs_trace.disable()
+    snap_extra = {
+        "model_error": rows,
+        "model_error_fabric": HOST_CPU.name,
+        "model_error_geomean_ratio": gm,
+        "trace_off_overhead": overhead_probe,
+        "trace_path": os.path.basename(trace_path),
+    }
+    metrics_path = metrics.save(
+        os.path.join(out_dir, f"metrics_executor_{mode}.json"),
+        extra=snap_extra)
+    report_path = os.path.join(out_dir, f"model_error_{mode}.md")
+    with open(report_path, "w") as f:
+        f.write(report_markdown(
+            rows, title=f"Predicted vs measured ({mode} grid, P={n})",
+            fabric_name=HOST_CPU.name))
+    data(f"executor,WROTE,{trace_path}")
+    data(f"executor,WROTE,{metrics_path}")
+    data(f"executor,WROTE,{report_path}")
+    log.info("trace_mode_done", replays=len(reports),
+             geomean_ratio=round(gm, 3) if gm else None,
+             trace_events=tracer.n_events)
+    return {"trace_path": os.path.basename(trace_path),
+            "metrics_path": os.path.basename(metrics_path),
+            "report_path": os.path.basename(report_path),
+            "n_replays": len(reports),
+            "model_error_geomean_ratio": gm,
+            "trace_off_overhead": overhead_probe}
+
+
+# ---------------------------------------------------------------------------
 #  harness
 # ---------------------------------------------------------------------------
 
@@ -153,6 +266,10 @@ def main():
     ap.add_argument("--op", action="append", default=None,
                     choices=["sum", "max", "a2a"],
                     help="benchmark family to run (repeatable; default all)")
+    ap.add_argument("--trace", action="store_true",
+                    help="also run the instrumented per-tick replay and "
+                         "write a Chrome trace + metrics snapshot + "
+                         "model-error report next to --out")
     args = ap.parse_args()
     ops = args.op or ["sum", "max", "a2a"]
 
@@ -220,7 +337,7 @@ def main():
             timed = bench_interleaved(variants, x, iters)
             for name, us in timed.items():
                 row[f"{name}_us"] = round(us, 1)
-                print(f"executor,{label}{suffix},{name},{us:.1f}")
+                data(f"executor,{label}{suffix},{name},{us:.1f}")
             row["speedup_execplan"] = round(row["legacy_us"]
                                             / row["execplan_us"], 3)
             row["speedup_pipelined"] = round(row["legacy_us"]
@@ -257,7 +374,7 @@ def main():
             timed = bench_interleaved(variants, x, iters)
             for name, us in timed.items():
                 row[f"{name}_us"] = round(us, 1)
-                print(f"executor,{label}@a2a,{name},{us:.1f}")
+                data(f"executor,{label}@a2a,{name},{us:.1f}")
             # informational: XLA CPU a2a wallclock is bimodal across
             # processes here, so these two are not gate-stable
             row["speedup_direct"] = round(row["xla_a2a_us"]
@@ -276,6 +393,21 @@ def main():
     if "a2a" in ops:
         a2a_rows(a2a_sizes)
 
+    trace_summary = None
+    if args.trace:
+        # probe the disabled-hook overhead on a real jitted collective
+        # (must run before trace_mode enables the global tracer)
+        label0, nbytes0 = sizes[0]
+        x0 = rng.standard_normal((n, nbytes0 // 4)).astype(np.float32)
+        ch0 = choose(n, nbytes0, HOST_CPU, itemsize=4)
+        sched0 = schedule_for(ch0, n)
+        nb0 = max(2, ch0.n_buckets)
+        probe_fn = jit_collective(
+            lambda v: allreduce_flat(v, "data", sched0, n_buckets=nb0))
+        overhead = round(trace_overhead_ratio(probe_fn, x0), 4)
+        data(f"executor,trace_off_overhead,{label0},{overhead:.4f}")
+        trace_summary = trace_mode(args, mesh, n, sizes, overhead)
+
     payload = {"P": n, "platform": jax.default_backend(),
                "mode": "smoke" if args.smoke else "full",
                "autotune_fabric": HOST_CPU.name,
@@ -290,10 +422,12 @@ def main():
                          "monoid; @a2a rows compare the schedule-driven "
                          "all-to-all plans against lax.all_to_all."),
                "results": results}
+    if trace_summary is not None:
+        payload["trace"] = trace_summary
     os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2)
-    print(f"executor,WROTE,{args.out}")
+    data(f"executor,WROTE,{args.out}")
 
 
 if __name__ == "__main__":

@@ -17,11 +17,17 @@ plus:
   wall   -- real wall-clock of the JAX executor on 8 host devices
 
 Modes (first positional arg): ``figures`` (default), ``executor
-[--smoke] [--out PATH] [--op sum|max|a2a ...]`` (executor wallclock
-comparison incl. max-monoid and all-to-all rows ->
-results/executor.json), ``tune [--smoke] [--out PATH] [--cache PATH]``
-(measured autotuning grid, sum + max operators ->
-persistent tuning cache + results/tuning.json).
+[--smoke] [--trace] [--out PATH] [--op sum|max|a2a ...]`` (executor
+wallclock comparison incl. max-monoid and all-to-all rows ->
+results/executor.json; ``--trace`` additionally runs the instrumented
+per-tick replay and writes a Chrome trace + metrics snapshot +
+predicted-vs-measured model-error report, see docs/observability.md),
+``tune [--smoke] [--out PATH] [--cache PATH]`` (measured autotuning
+grid, sum + max operators -> persistent tuning cache +
+results/tuning.json).
+
+Protocol CSV rows go to stdout via ``repro.obs.log.data``; diagnostics
+go to stderr as logfmt lines filtered by ``REPRO_LOG``.
 """
 from __future__ import annotations
 
@@ -38,12 +44,15 @@ from repro.core.cost_model import (PAPER_10GE, optimal_r_search,  # noqa: E402
                                    tau_recursive_halving, tau_ring)
 from repro.core.schedule import (build_generalized, build_ring,  # noqa: E402
                                  max_r, n_steps_log, schedule_summary)
+from repro.obs.log import data, get_logger  # noqa: E402
 
 F = PAPER_10GE
 
+log = get_logger("benchmarks.run")
+
 
 def _row(name, us, derived=1):
-    print(f"{name},{us:.3f},{derived}")
+    data(f"{name},{us:.3f},{derived}")
 
 
 def fig1_ratio_heatmap():
@@ -152,11 +161,12 @@ def wallclock_8dev():
     script = os.path.join(os.path.dirname(__file__), "wallclock_worker.py")
     res = _spawn_8dev(script, timeout=900)
     if res.returncode != 0:
-        print(f"wallclock,ERROR,{res.stderr[-200:]}", file=sys.stderr)
+        log.error("worker_failed", worker="wallclock",
+                  stderr=res.stderr[-200:])
         return
     for line in res.stdout.strip().splitlines():
         if line.startswith("wall,"):
-            print(line)
+            data(line)
 
 
 def _worker_bench(script_name: str, prefix: str, extra, timeout=1800) -> None:
@@ -165,25 +175,36 @@ def _worker_bench(script_name: str, prefix: str, extra, timeout=1800) -> None:
     script = os.path.join(os.path.dirname(__file__), script_name)
     res = _spawn_8dev(script, extra, timeout=timeout)
     if res.returncode != 0:
-        print(f"{prefix},ERROR,{res.stderr[-2000:]}", file=sys.stderr)
+        log.error("worker_failed", worker=script_name,
+                  stderr=res.stderr[-2000:])
         raise SystemExit(1)
+    # echo the worker's protocol rows; forward its (REPRO_LOG-filtered)
+    # stderr diagnostics untouched
+    if res.stderr:
+        sys.stderr.write(res.stderr)
     for line in res.stdout.strip().splitlines():
         if line.startswith(prefix + ","):
-            print(line)
+            data(line)
 
 
 def executor_bench(smoke: bool = False,
                    out: str = "results/executor.json",
-                   ops=()) -> None:
+                   ops=(), trace: bool = False) -> None:
     """Old per-row replay vs ExecPlan vs pipelined ExecPlan wallclock on
     8 simulated CPU devices (the perf trajectory's BENCH datapoint);
     writes ``results/executor.json``.  ``--op {sum,max,a2a}``
     (repeatable) restricts the benchmark families: ``max`` rows run the
     executors under the max monoid, ``a2a`` rows time the
-    schedule-driven all-to-all against ``lax.all_to_all``."""
+    schedule-driven all-to-all against ``lax.all_to_all``.  ``--trace``
+    additionally runs the instrumented per-tick replay over the bench
+    grid and writes ``trace_executor_*.json`` /
+    ``metrics_executor_*.json`` / ``model_error_*.md`` next to
+    ``--out``."""
     extra = ["--out", out] + (["--smoke"] if smoke else [])
     for op in ops:
         extra += ["--op", op]
+    if trace:
+        extra += ["--trace"]
     _worker_bench("executor_worker.py", "executor", extra)
 
 
@@ -201,7 +222,7 @@ def tune_bench(smoke: bool = False, out: str = "results/tuning.json",
 
 
 def figures() -> None:
-    print("name,us_per_call,derived")
+    data("name,us_per_call,derived")
     fig1_ratio_heatmap()
     fig7_small_msgs()
     fig8_large_msgs()
@@ -228,7 +249,7 @@ def main(argv=None) -> None:
                     if a == "--op" and i + 1 < len(argv))
         executor_bench(smoke="--smoke" in argv,
                        out=_opt(argv, "--out", "results/executor.json"),
-                       ops=ops)
+                       ops=ops, trace="--trace" in argv)
     elif mode == "tune":
         tune_bench(smoke="--smoke" in argv,
                    out=_opt(argv, "--out", "results/tuning.json"),

@@ -21,6 +21,7 @@ from jax.sharding import PartitionSpec as P
 from repro.compat import shard_map
 from repro.core.allreduce import allreduce_flat
 from repro.core.schedule import build_generalized, build_ring, max_r
+from repro.obs.log import data
 
 
 def bench(fn, x, iters=30):
@@ -47,16 +48,16 @@ def main():
                 mesh=mesh, in_specs=P("data", None),
                 out_specs=P("data", None)))
             us = bench(f, x)
-            print(f"wall,gen_allreduce_{label}_r{r},{us:.1f},1")
+            data(f"wall,gen_allreduce_{label}_r{r},{us:.1f},1")
         sched = build_ring(n)
         f = jax.jit(shard_map(
             lambda v, s=sched: allreduce_flat(v[0], "data", s)[None],
             mesh=mesh, in_specs=P("data", None), out_specs=P("data", None)))
-        print(f"wall,ring_{label},{bench(f, x):.1f},1")
+        data(f"wall,ring_{label},{bench(f, x):.1f},1")
         g = jax.jit(shard_map(
             lambda v: jax.lax.psum(v[0], "data")[None],
             mesh=mesh, in_specs=P("data", None), out_specs=P("data", None)))
-        print(f"wall,xla_psum_{label},{bench(g, x):.1f},1")
+        data(f"wall,xla_psum_{label},{bench(g, x):.1f},1")
 
 
 if __name__ == "__main__":

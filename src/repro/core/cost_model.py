@@ -251,6 +251,74 @@ def ragged_schedule_cost(sched: Schedule, m: int, f: Fabric,
     return t
 
 
+def ragged_tick_costs(sched: Schedule, m: int, f: Fabric,
+                      n_buckets: int = 1,
+                      itemsize: int = 1,
+                      monoid: Optional[Monoid] = None) -> list:
+    """Per-tick predicted cost breakdown of the (pipelined) replay.
+
+    This is the model's *timeline*: one entry per executor tick, in
+    tick order, each a dict with the tick's predicted seconds split
+    into its alpha / wire / combine components plus the true moved and
+    reduced bytes (max over devices, from
+    :func:`repro.core.schedule.ragged_step_units` -- padding bytes
+    never enter).  The observability layer overlays these on measured
+    per-tick spans (:mod:`repro.obs.validate`), so the breakdown must
+    stay exactly consistent with the scalar costs:
+
+    * ``n_buckets <= 1``: one tick per live step, serially priced
+      (``alpha + comm + combine`` -- a step's combine cannot overlap
+      its own arrival); the totals sum to
+      :func:`ragged_schedule_cost` exactly.
+    * ``n_buckets > 1``: the software-pipelined tick loop of
+      :func:`repro.core.execplan.execute` -- tick t runs step ``t - j``
+      of bucket j, each tick pays ``alpha + max(comm, combine)`` over
+      its active buckets, fill/drain included; totals sum to
+      :func:`ragged_pipelined_schedule_cost` exactly.
+
+    >>> from repro.core.schedule import build_generalized
+    >>> s = build_generalized(4, 1)
+    >>> ticks = ragged_tick_costs(s, 4096, PAPER_10GE)
+    >>> len(ticks) == sum(1 for st in s.steps if st.n_tx or st.n_adds)
+    True
+    >>> total = sum(t["total_s"] for t in ticks)
+    >>> abs(total - ragged_schedule_cost(s, 4096, PAPER_10GE)) < 1e-18
+    True
+    """
+    elems = max(int(m) // max(int(itemsize), 1), 0)
+    tx_units, add_units = ragged_step_units(sched, elems)
+    g = _gamma(f, monoid)
+    live = [(tx * itemsize, add * itemsize) for st, tx, add in
+            zip(sched.steps, tx_units, add_units)
+            if st.n_tx or st.n_adds]
+    S = len(live)
+    B = max(int(n_buckets), 1)
+    ticks = []
+    for tick in range(S + B - 1):
+        tx_b = add_b = 0.0
+        steps_active = []
+        for j in range(B):
+            s = tick - j
+            if 0 <= s < S:
+                steps_active.append(s)
+                tx_b += live[s][0] / B
+                add_b += live[s][1] / B
+        comm = tx_b * f.beta
+        comb = add_b * g
+        total = f.alpha + (comm + comb if B == 1 else max(comm, comb))
+        ticks.append({
+            "tick": tick,
+            "steps": steps_active,
+            "alpha_s": f.alpha,
+            "comm_s": comm,
+            "combine_s": comb,
+            "total_s": total,
+            "tx_bytes": tx_b,
+            "add_bytes": add_b,
+        })
+    return ticks
+
+
 def ragged_pipelined_schedule_cost(sched: Schedule, m: int, f: Fabric,
                                    n_buckets: int,
                                    itemsize: int = 1,
@@ -259,26 +327,13 @@ def ragged_pipelined_schedule_cost(sched: Schedule, m: int, f: Fabric,
     replay splits every chunk column-wise into ``n_buckets`` equal
     slices, so each bucket carries ``1 / n_buckets`` of every true
     per-step byte count; ticks overlap comm and combine across buckets
-    exactly as in the uniform model."""
+    exactly as in the uniform model.  Defined as the sum of the
+    per-tick timeline (:func:`ragged_tick_costs`), so the scalar and
+    the breakdown can never drift apart."""
     if n_buckets <= 1:
         return ragged_schedule_cost(sched, m, f, itemsize, monoid)
-    elems = max(int(m) // max(int(itemsize), 1), 0)
-    tx_units, add_units = ragged_step_units(sched, elems)
-    g = _gamma(f, monoid)
-    live = [(tx * itemsize, add * itemsize) for st, tx, add in
-            zip(sched.steps, tx_units, add_units)
-            if st.n_tx or st.n_adds]
-    S = len(live)
-    t = 0.0
-    for tick in range(S + n_buckets - 1):
-        comm = comb = 0.0
-        for j in range(n_buckets):
-            s = tick - j
-            if 0 <= s < S:
-                comm += live[s][0] / n_buckets * f.beta
-                comb += live[s][1] / n_buckets * g
-        t += f.alpha + max(comm, comb)
-    return t
+    return sum(t["total_s"] for t in
+               ragged_tick_costs(sched, m, f, n_buckets, itemsize, monoid))
 
 
 def pipelined_schedule_cost(sched: Schedule, m: float, f: Fabric,

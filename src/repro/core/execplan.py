@@ -48,6 +48,8 @@ from typing import List, Sequence, Tuple
 
 import numpy as np
 
+from repro.obs import trace as obs_trace
+
 from .monoid import CombineLike, Monoid, resolve_combine
 from .schedule import Schedule, ShapeError, ragged_offsets, ragged_sizes
 
@@ -154,6 +156,31 @@ class ExecPlan:
     @property
     def n_steps(self) -> int:
         return len(self.steps)
+
+
+def tick_structure(plan: ExecPlan, n_buckets: int) -> List[List[Tuple[int, int]]]:
+    """The executor's software-pipelining timeline as data.
+
+    Returns one entry per tick of :func:`execute` /
+    :func:`simulate_plan`: the ``(bucket, step)`` pairs active at that
+    tick, in bucket order -- tick ``t`` runs step ``t - j`` of bucket
+    ``j``, over ``n_steps + n_buckets - 1`` ticks.  This is the single
+    source of truth the per-tick cost model
+    (:func:`repro.core.cost_model.ragged_tick_costs`) and the traced
+    replay (:mod:`repro.obs.instrument`) both follow, so predicted and
+    measured timelines line up tick-for-tick by construction.
+
+    >>> from repro.core.schedule import build_generalized
+    >>> plan = compile_plan(build_generalized(4, 0))
+    >>> tick_structure(plan, 2)[:3]
+    [[(0, 0)], [(0, 1), (1, 0)], [(0, 2), (1, 1)]]
+    >>> len(tick_structure(plan, 2)) == plan.n_steps + 1
+    True
+    """
+    B = max(int(n_buckets), 1)
+    S = plan.n_steps
+    return [[(j, t - j) for j in range(B) if 0 <= t - j < S]
+            for t in range(S + B - 1)]
 
 
 @lru_cache(maxsize=None)
@@ -334,8 +361,6 @@ def execute(plan: ExecPlan, bucket_rows: Sequence[List], axis_name, *,
     on the whole message, not per step).
     """
     import jax
-    import jax.numpy as jnp
-    from jax import lax
 
     monoid, impl = resolve_combine(combine)
     if impl == "auto":
@@ -347,8 +372,25 @@ def execute(plan: ExecPlan, bucket_rows: Sequence[List], axis_name, *,
     bucket_rows = [list(rows) for rows in bucket_rows]
     B = len(bucket_rows)
     S = plan.n_steps
-    for t in range(S + B - 1):
-        active = [(j, t - j) for j in range(B) if 0 <= t - j < S]
+    # Trace-time span only: inside shard_map/jit this loop *builds* the
+    # program, it does not run it, so the span measures staging cost.
+    # Per-tick runtime timelines come from the blocking replay in
+    # repro.obs.instrument, which follows the same tick_structure().
+    ticks = tick_structure(plan, B)
+    with obs_trace.span("execplan.execute", cat="trace", kind=plan.kind,
+                        P=plan.P, n_steps=S, n_buckets=B,
+                        n_ticks=len(ticks)):
+        _execute_ticks(plan, bucket_rows, ticks, axis_name, monoid, impl)
+    return bucket_rows
+
+
+def _execute_ticks(plan: ExecPlan, bucket_rows: List[List], ticks,
+                   axis_name, monoid: Monoid, impl: str) -> None:
+    """Stage the tick loop in place over ``bucket_rows`` (see execute)."""
+    import jax.numpy as jnp
+    from jax import lax
+
+    for active in ticks:
         # 1) issue phase: stage every active bucket's communication
         rx = {}
         for j, s in active:
@@ -389,7 +431,6 @@ def execute(plan: ExecPlan, bucket_rows: Sequence[List], axis_name, *,
             rows = bucket_rows[j]
             for slot, arr in zip(sp.recv_slots, sp.recv_arr):
                 rows[slot] = rx[j][arr]
-    return bucket_rows
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,106 @@
+"""Structured leveled logging for the benchmark drivers and workers.
+
+Two output channels with different contracts:
+
+* :func:`data` -- protocol rows (``"executor,256KiB,pipelined,812.4"``)
+  printed verbatim to **stdout**.  The benchmark drivers parse these by
+  prefix (``benchmarks/run.py`` echoes worker lines starting with
+  ``"<prefix>,"``), so they are not log records and are never filtered
+  by level.
+* :func:`debug` / :func:`info` / :func:`warn` / :func:`error` --
+  diagnostics in logfmt (``ts=... level=... event=... k=v ...``) on
+  **stderr**, filtered by the ``REPRO_LOG`` env var (default ``info``;
+  ``REPRO_LOG=debug`` shows everything, ``REPRO_LOG=error`` almost
+  nothing).
+
+Why not :mod:`logging`: the workers are subprocesses whose stdout is a
+machine-parsed CSV stream; a logger that any imported library can
+reconfigure (root handlers, propagation) is a liability there.  This is
+a ~60-line fixed-format writer with no global handler state.
+
+>>> log = get_logger("doctest")
+>>> log.level_name in LEVELS
+True
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+from typing import TextIO
+
+LEVELS = {"debug": 10, "info": 20, "warn": 30, "error": 40}
+
+
+def _env_level() -> int:
+    name = os.environ.get("REPRO_LOG", "info").strip().lower()
+    return LEVELS.get(name, LEVELS["info"])
+
+
+def _fmt_value(v) -> str:
+    if isinstance(v, float):
+        s = f"{v:.6g}"
+    else:
+        s = str(v)
+    if any(c in s for c in ' "='):
+        s = '"' + s.replace('"', "'").replace("\n", " ") + '"'
+    return s
+
+
+class Logger:
+    """One named logfmt writer; level re-read from ``REPRO_LOG`` lazily
+    so tests (and long-lived drivers) can flip verbosity at runtime."""
+
+    def __init__(self, name: str, stream: TextIO = None):
+        self.name = name
+        self._stream = stream
+
+    @property
+    def level(self) -> int:
+        return _env_level()
+
+    @property
+    def level_name(self) -> str:
+        lvl = self.level
+        return next((n for n, v in LEVELS.items() if v == lvl), "info")
+
+    def _emit(self, level: str, event: str, fields: dict) -> None:
+        if LEVELS[level] < self.level:
+            return
+        stream = self._stream if self._stream is not None else sys.stderr
+        parts = [
+            f"ts={time.time():.3f}",
+            f"level={level}",
+            f"logger={self.name}",
+            f"event={_fmt_value(event)}",
+        ]
+        parts += [f"{k}={_fmt_value(v)}" for k, v in fields.items()]
+        print(" ".join(parts), file=stream, flush=True)
+
+    def debug(self, event: str, **fields) -> None:
+        self._emit("debug", event, fields)
+
+    def info(self, event: str, **fields) -> None:
+        self._emit("info", event, fields)
+
+    def warn(self, event: str, **fields) -> None:
+        self._emit("warn", event, fields)
+
+    def error(self, event: str, **fields) -> None:
+        self._emit("error", event, fields)
+
+
+_loggers: dict = {}
+
+
+def get_logger(name: str) -> Logger:
+    """Named logger (cached; cheap enough to call at every site)."""
+    lg = _loggers.get(name)
+    if lg is None:
+        lg = _loggers[name] = Logger(name)
+    return lg
+
+
+def data(line: str) -> None:
+    """Emit one machine-parsed protocol row to stdout, unfiltered."""
+    print(line, flush=True)

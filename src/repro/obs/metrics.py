@@ -1,0 +1,223 @@
+"""Structured counters, gauges and histograms with a JSON snapshot format.
+
+Three primitive kinds, one registry:
+
+* :class:`Counter`   -- monotonic accumulator (bytes moved, combine
+  FLOPs, requests served).  ``inc()`` rejects negative increments, so a
+  snapshot sequence of any counter is non-decreasing by construction.
+* :class:`Gauge`     -- last-written value (queue depth, live slots).
+* :class:`Histogram` -- value distribution with exact count/sum/min/max
+  and interpolated percentiles (p50/p90/p99 in the snapshot); sample
+  storage is capped, the moments stay exact past the cap.
+
+``Metrics.snapshot()`` returns a plain-JSON dict -- the format the
+benchmark workers write under ``results/`` next to their traces -- and
+``save()`` writes it with a schema marker so downstream tooling can
+evolve.
+
+>>> m = Metrics()
+>>> m.counter("tx_bytes").inc(1024)
+>>> m.histogram("latency_us").record_many([100.0, 200.0, 300.0])
+>>> snap = m.snapshot()
+>>> snap["counters"]["tx_bytes"]
+1024
+>>> snap["histograms"]["latency_us"]["p50"]
+200.0
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Dict, Iterable, List, Optional
+
+SNAPSHOT_SCHEMA = "repro-metrics-v1"
+
+
+class Counter:
+    """Monotonic counter; negative increments are a programming error."""
+
+    __slots__ = ("name", "_value", "_lock")
+
+    def __init__(self, name: str):
+        self.name = name
+        self._value = 0
+        self._lock = threading.Lock()
+
+    def inc(self, delta=1) -> None:
+        if delta < 0:
+            raise ValueError(
+                f"counter {self.name!r} is monotonic; inc({delta}) rejected")
+        with self._lock:
+            self._value += delta
+
+    @property
+    def value(self):
+        return self._value
+
+
+class Gauge:
+    """Last-written value."""
+
+    __slots__ = ("name", "_value")
+
+    def __init__(self, name: str):
+        self.name = name
+        self._value = None
+
+    def set(self, value) -> None:
+        self._value = value
+
+    @property
+    def value(self):
+        return self._value
+
+
+class Histogram:
+    """Value distribution; exact moments, capped sample storage.
+
+    Percentiles use linear interpolation over the sorted retained
+    samples.  The cap (default 65536) only ever affects percentile
+    resolution of pathologically long runs -- count/sum/min/max stay
+    exact because they are tracked as running moments.
+    """
+
+    __slots__ = ("name", "_samples", "_cap", "_count", "_sum",
+                 "_min", "_max", "_lock")
+
+    def __init__(self, name: str, cap: int = 65536):
+        self.name = name
+        self._samples: List[float] = []
+        self._cap = int(cap)
+        self._count = 0
+        self._sum = 0.0
+        self._min: Optional[float] = None
+        self._max: Optional[float] = None
+        self._lock = threading.Lock()
+
+    def record(self, value) -> None:
+        v = float(value)
+        with self._lock:
+            self._count += 1
+            self._sum += v
+            self._min = v if self._min is None else min(self._min, v)
+            self._max = v if self._max is None else max(self._max, v)
+            if len(self._samples) < self._cap:
+                self._samples.append(v)
+
+    def record_many(self, values: Iterable) -> None:
+        for v in values:
+            self.record(v)
+
+    @property
+    def count(self) -> int:
+        return self._count
+
+    @property
+    def sum(self) -> float:
+        return self._sum
+
+    def percentile(self, p: float) -> Optional[float]:
+        """Interpolated percentile of the retained samples (p in 0..100)."""
+        with self._lock:
+            xs = sorted(self._samples)
+        if not xs:
+            return None
+        if len(xs) == 1:
+            return xs[0]
+        rank = (min(max(p, 0.0), 100.0) / 100.0) * (len(xs) - 1)
+        lo = int(rank)
+        frac = rank - lo
+        hi = min(lo + 1, len(xs) - 1)
+        return xs[lo] + (xs[hi] - xs[lo]) * frac
+
+    def summary(self) -> dict:
+        mean = self._sum / self._count if self._count else None
+        return {
+            "count": self._count,
+            "sum": self._sum,
+            "min": self._min,
+            "max": self._max,
+            "mean": mean,
+            "p50": self.percentile(50),
+            "p90": self.percentile(90),
+            "p99": self.percentile(99),
+        }
+
+
+class Metrics:
+    """Registry of named counters/gauges/histograms + JSON snapshots."""
+
+    def __init__(self):
+        self._counters: Dict[str, Counter] = {}
+        self._gauges: Dict[str, Gauge] = {}
+        self._histograms: Dict[str, Histogram] = {}
+        self._lock = threading.Lock()
+
+    def counter(self, name: str) -> Counter:
+        with self._lock:
+            c = self._counters.get(name)
+            if c is None:
+                c = self._counters[name] = Counter(name)
+            return c
+
+    def gauge(self, name: str) -> Gauge:
+        with self._lock:
+            g = self._gauges.get(name)
+            if g is None:
+                g = self._gauges[name] = Gauge(name)
+            return g
+
+    def histogram(self, name: str, cap: int = 65536) -> Histogram:
+        with self._lock:
+            h = self._histograms.get(name)
+            if h is None:
+                h = self._histograms[name] = Histogram(name, cap)
+            return h
+
+    def snapshot(self, extra: Optional[dict] = None) -> dict:
+        """Plain-JSON view of every registered metric.
+
+        ``extra`` is merged in under its own keys (e.g. the
+        predicted-vs-measured model-error table a benchmark attaches to
+        its committed snapshot).
+        """
+        snap = {
+            "schema": SNAPSHOT_SCHEMA,
+            "counters": {n: c.value for n, c in sorted(self._counters.items())},
+            "gauges": {n: g.value for n, g in sorted(self._gauges.items())},
+            "histograms": {n: h.summary()
+                           for n, h in sorted(self._histograms.items())},
+        }
+        if extra:
+            for k, v in extra.items():
+                snap[k] = v
+        return snap
+
+    def save(self, path: str, extra: Optional[dict] = None) -> str:
+        path = os.path.abspath(path)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(self.snapshot(extra), f, indent=2)
+        return path
+
+    def reset(self) -> None:
+        with self._lock:
+            self._counters.clear()
+            self._gauges.clear()
+            self._histograms.clear()
+
+
+_metrics = Metrics()
+
+
+def get_metrics() -> Metrics:
+    """Process-global metrics registry."""
+    return _metrics
+
+
+def set_metrics(metrics: Metrics) -> Metrics:
+    """Swap the global registry (tests); returns the previous one."""
+    global _metrics
+    prev, _metrics = _metrics, metrics
+    return prev

@@ -1,0 +1,134 @@
+"""Arrival-pattern telemetry: per-participant timestamp deltas.
+
+Proficz (arXiv:1804.05349) shows that *imbalanced process arrival
+patterns* -- ranks reaching the collective at different times -- often
+dominate allreduce wallclock in practice.  Before any PAP-aware
+schedule can exist (ROADMAP item 4: sorted/pre-reduced variants that
+let early arrivals start combining), the skew has to be *measured*.
+This module is that measurement half:
+
+* :class:`ArrivalRecorder` -- a host-side timestamp collector: each
+  participant (device, worker process, request) calls
+  :meth:`~ArrivalRecorder.record` when it reaches the rendezvous;
+  :meth:`~ArrivalRecorder.stats` reduces the timestamps to deltas
+  against the earliest arrival plus the max-min skew.  Pure stdlib, so
+  multi-process workers can use it without importing jax.
+* :func:`device_arrival_probe` -- an in-process probe over the visible
+  jax devices: dispatches one identical tiny program per device
+  asynchronously, then records each device's completion timestamp.  On
+  forced-host virtual devices this measures scheduler-induced skew (the
+  only kind that exists there); on a real multi-chip backend it
+  measures per-chip readiness.  The tuning grid runs it per message
+  size and persists the skew through the tuning cache
+  (``Measurement.skew_us``).
+
+>>> rec = ArrivalRecorder()
+>>> for rank, ts in [(0, 10.0), (1, 10.5), (2, 12.0)]:
+...     _ = rec.record(rank, ts_us=ts)
+>>> st = rec.stats()
+>>> st.skew_us
+2.0
+>>> st.deltas_us
+(0.0, 0.5, 2.0)
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class ArrivalStats:
+    """Reduced arrival pattern of one rendezvous."""
+
+    n: int                       # participants recorded
+    deltas_us: Tuple[float, ...]  # per-rank arrival minus earliest, rank order
+    skew_us: float               # max - min arrival (the PAP imbalance)
+    mean_delta_us: float         # average lateness vs the earliest
+
+    def to_dict(self) -> dict:
+        return {"n": self.n, "deltas_us": list(self.deltas_us),
+                "skew_us": self.skew_us,
+                "mean_delta_us": self.mean_delta_us}
+
+
+class ArrivalRecorder:
+    """Collect per-participant arrival timestamps for one rendezvous.
+
+    Ranks may record in any order and from any thread; re-recording a
+    rank overwrites (the collective only cares about the *last* arrival
+    before the operation fires).  Timestamps default to a monotonic
+    microsecond clock shared by all participants in this process; a
+    multi-process deployment passes its own synchronized ``ts_us``.
+    """
+
+    def __init__(self):
+        self._ts: Dict[int, float] = {}
+        self._lock = threading.Lock()
+
+    def record(self, rank: int, ts_us: Optional[float] = None) -> float:
+        ts = time.perf_counter_ns() / 1e3 if ts_us is None else float(ts_us)
+        with self._lock:
+            self._ts[int(rank)] = ts
+        return ts
+
+    @property
+    def n(self) -> int:
+        return len(self._ts)
+
+    def stats(self) -> ArrivalStats:
+        with self._lock:
+            items = sorted(self._ts.items())
+        if not items:
+            return ArrivalStats(0, (), 0.0, 0.0)
+        ts = [t for _, t in items]
+        t0 = min(ts)
+        deltas = tuple(round(t - t0, 3) for t in ts)
+        return ArrivalStats(
+            n=len(ts), deltas_us=deltas,
+            skew_us=round(max(ts) - t0, 3),
+            mean_delta_us=round(sum(deltas) / len(deltas), 3))
+
+    def clear(self) -> None:
+        with self._lock:
+            self._ts.clear()
+
+
+def device_arrival_probe(nbytes: int = 1 << 16, reps: int = 3,
+                         devices=None) -> ArrivalStats:
+    """Measure per-device completion skew of one identical dispatch.
+
+    For each rep: put one ``nbytes`` buffer on every device, dispatch
+    the same trivial jitted program on all of them back-to-back
+    (asynchronously), then block on each device **in submission order**
+    and record its completion timestamp.  The rep with the smallest
+    skew is kept -- transient host noise only ever *adds* skew, so the
+    minimum is the floor the fabric itself imposes.
+
+    Returns an :class:`ArrivalStats` whose rank order is the device
+    order.  Requires jax; with a single device the skew is trivially 0.
+    """
+    import jax
+    import numpy as np
+
+    devs = list(devices if devices is not None else jax.devices())
+    n_elems = max(int(nbytes) // 4, 1)
+    host = np.arange(n_elems, dtype=np.float32)
+    bufs = [jax.device_put(host, d) for d in devs]
+    fn = jax.jit(lambda v: v * 2.0 + 1.0)
+    for b in bufs:
+        jax.block_until_ready(fn(b))            # compile/warm every device
+
+    best: Optional[ArrivalStats] = None
+    for _ in range(max(int(reps), 1)):
+        outs = [fn(b) for b in bufs]            # async dispatch, all devices
+        rec = ArrivalRecorder()
+        for rank, out in enumerate(outs):
+            jax.block_until_ready(out)
+            rec.record(rank)
+        st = rec.stats()
+        if best is None or st.skew_us < best.skew_us:
+            best = st
+    return best

@@ -1,0 +1,163 @@
+"""Predicted-vs-measured validation of the collective cost model.
+
+The tuner's choices are only as good as the alpha-beta-gamma model
+behind them (ROADMAP item: validate the model against measurement).
+This module overlays the model's per-tick timeline
+(:func:`repro.core.cost_model.ragged_tick_costs`) on a measured one
+(:func:`repro.obs.instrument.traced_allreduce`, or any source of
+per-tick microseconds) and reduces the overlay to a model-error table:
+one row per (kind, r, n_buckets, nbytes) cell with the predicted and
+measured totals and their ratio.  ``ratio = measured / predicted``; a
+perfectly calibrated fabric gives 1.0, and ``log2(ratio)`` is the
+signed miscalibration in doublings (the scale on which the tuner's
+cost comparisons actually operate).
+
+The report is pure arithmetic over plain dicts -- no jax -- so the
+golden test can prove it *exact*: feeding the model's own per-tick
+costs back as "measured" must produce ratio 1.0 on every row.
+
+>>> from repro.core.cost_model import PAPER_10GE
+>>> from repro.core.schedule import build_generalized
+>>> s = build_generalized(4, 1)
+>>> pred = predicted_ticks_us(s, 4096, PAPER_10GE)
+>>> row = validate_ticks(s, 4096, PAPER_10GE, measured_ticks_us=pred)
+>>> row["ratio"], row["max_tick_ratio"]
+(1.0, 1.0)
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Optional, Sequence
+
+
+def _sched_for(kind: str, P: int, r: int):
+    from repro.core.schedule import (build_all_gather,
+                                     build_bruck_all_gather,
+                                     build_generalized,
+                                     build_reduce_scatter, build_ring)
+    builders = {"ring": build_ring,
+                "reduce_scatter": build_reduce_scatter,
+                "all_gather": build_all_gather,
+                "bruck_all_gather": build_bruck_all_gather}
+    if kind in builders:
+        return builders[kind](P)
+    if kind == "generalized":
+        return build_generalized(P, r)
+    raise ValueError(f"no schedule builder for kind {kind!r}")
+
+
+def predicted_ticks_us(sched, nbytes: int, fabric, n_buckets: int = 1,
+                       itemsize: int = 1, monoid=None) -> List[float]:
+    """Model's per-tick timeline in microseconds (see ragged_tick_costs)."""
+    from repro.core.cost_model import ragged_tick_costs
+    return [t["total_s"] * 1e6 for t in
+            ragged_tick_costs(sched, nbytes, fabric, n_buckets,
+                              itemsize=itemsize, monoid=monoid)]
+
+
+def validate_ticks(sched, nbytes: int, fabric, *,
+                   measured_ticks_us: Sequence[float],
+                   n_buckets: int = 1, itemsize: int = 1,
+                   monoid=None) -> dict:
+    """Overlay one measured tick timeline on the model's prediction.
+
+    The measured timeline must have exactly the model's tick count
+    (``n_live_steps + n_buckets - 1``) -- both sides follow
+    :func:`repro.core.execplan.tick_structure`, so a length mismatch
+    means the caller paired the wrong (schedule, n_buckets) with the
+    measurement and is reported as a ``ValueError``, not a bad ratio.
+    """
+    pred = predicted_ticks_us(sched, nbytes, fabric, n_buckets,
+                              itemsize=itemsize, monoid=monoid)
+    meas = [float(x) for x in measured_ticks_us]
+    if len(meas) != len(pred):
+        raise ValueError(
+            f"measured timeline has {len(meas)} ticks, model predicts "
+            f"{len(pred)} for kind={sched.kind!r} n_buckets={n_buckets}")
+    pred_total = sum(pred)
+    meas_total = sum(meas)
+    tick_ratios = [m / p if p else math.inf for m, p in zip(meas, pred)]
+    ratio = meas_total / pred_total if pred_total else math.inf
+    return {
+        "kind": sched.kind, "r": sched.r, "P": sched.P,
+        "n_buckets": int(n_buckets), "nbytes": int(nbytes),
+        "n_ticks": len(pred),
+        "predicted_us": pred, "measured_us": meas,
+        "predicted_total_us": pred_total,
+        "measured_total_us": meas_total,
+        "ratio": ratio,
+        "log2_ratio": math.log2(ratio) if 0 < ratio < math.inf else None,
+        "max_tick_ratio": max(tick_ratios) if tick_ratios else None,
+    }
+
+
+def validate_replay(report, fabric, monoid=None) -> dict:
+    """Model-error row for one traced replay.
+
+    ``report`` is a :class:`repro.obs.instrument.ReplayReport` or its
+    ``to_dict()`` form (what the benchmark workers serialize).
+    """
+    if isinstance(report, dict):
+        kind, r, P = report["kind"], report["r"], report["P"]
+        n_buckets, itemsize = report["n_buckets"], report["itemsize"]
+        nbytes = report["nbytes"]
+        meas = [t["total_us"] for t in report["ticks"]]
+    else:
+        kind, r, P = report.kind, report.r, report.P
+        n_buckets, itemsize = report.n_buckets, report.itemsize
+        nbytes = report.nbytes
+        meas = report.measured_tick_us()
+    row = validate_ticks(_sched_for(kind, P, r), nbytes, fabric,
+                         measured_ticks_us=meas, n_buckets=n_buckets,
+                         itemsize=itemsize, monoid=monoid)
+    return row
+
+
+def model_error_table(reports, fabric, monoid=None) -> List[dict]:
+    """One model-error row per traced replay, stably ordered by cell."""
+    rows = [validate_replay(rep, fabric, monoid=monoid) for rep in reports]
+    rows.sort(key=lambda r: (r["kind"], r["r"], r["n_buckets"],
+                             r["nbytes"]))
+    return rows
+
+
+def fit_ratio(rows: Sequence[dict]) -> Optional[float]:
+    """Geometric-mean measured/predicted ratio over a table -- the single
+    scale factor a fabric recalibration would apply."""
+    logs = [r["log2_ratio"] for r in rows if r.get("log2_ratio") is not None]
+    if not logs:
+        return None
+    return 2.0 ** (sum(logs) / len(logs))
+
+
+def report_markdown(rows: Sequence[dict], *, title: str = "",
+                    fabric_name: str = "") -> str:
+    """Render a model-error table as a GitHub-markdown report."""
+    out = []
+    if title:
+        out.append(f"## {title}")
+        out.append("")
+    if fabric_name:
+        out.append(f"Fabric: `{fabric_name}`.  "
+                   "`ratio` = measured / predicted total; "
+                   "`log2` is the signed miscalibration in doublings.")
+        out.append("")
+    out.append("| kind | r | buckets | bytes | ticks | predicted us "
+               "| measured us | ratio | log2 |")
+    out.append("|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        l2 = r.get("log2_ratio")
+        out.append(
+            f"| {r['kind']} | {r['r']} | {r['n_buckets']} | {r['nbytes']} "
+            f"| {r['n_ticks']} | {r['predicted_total_us']:.2f} "
+            f"| {r['measured_total_us']:.2f} | {r['ratio']:.3f} "
+            f"| {l2:+.2f} |" if l2 is not None else
+            f"| {r['kind']} | {r['r']} | {r['n_buckets']} | {r['nbytes']} "
+            f"| {r['n_ticks']} | {r['predicted_total_us']:.2f} "
+            f"| {r['measured_total_us']:.2f} | {r['ratio']:.3f} | - |")
+    gm = fit_ratio(rows)
+    if gm is not None:
+        out.append("")
+        out.append(f"Geometric-mean ratio: **{gm:.3f}** "
+                   f"(fabric scale miscalibration x{gm:.2f}).")
+    return "\n".join(out) + "\n"

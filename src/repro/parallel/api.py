@@ -39,6 +39,7 @@ from repro.core.allreduce import (all_gather_flat, allreduce_tree,
 from repro.core.cost_model import Fabric, TPU_V5E_ICI
 from repro.core.monoid import CombineLike, resolve_combine
 from repro.core.schedule import ShapeError, max_r
+from repro.obs import trace as obs_trace
 from repro.topology.fabric import Topology
 
 AxisName = Union[str, Tuple[str, ...]]
@@ -65,6 +66,10 @@ class ParallelConfig:
     tuning: bool = False           # consult the measured tuning table
     # (repro.tuning) for gradient-sync schedule choice; False = analytic
     # cost model only
+    trace: bool = False            # emit gradient-sync spans into the
+    # global tracer (repro.obs.trace) when it is enabled; spans are
+    # trace-time only (staging inside jit), runtime timelines come from
+    # the blocking replay in repro.obs.instrument
     remat: bool = True
     scan_layers: bool = True
     accum_dtype = jnp.float32
@@ -135,23 +140,33 @@ def dp_grad_allreduce(tree, pc: ParallelConfig, *, mean: bool = True,
     if mean and monoid.name not in ("sum", "mean"):
         raise ValueError(f"dp_grad_allreduce(op={monoid.name!r}) needs "
                          f"mean=False (mean only composes with sum)")
-    if pc.hierarchical_dp:
-        outer = pc.topology.outer
-        if pc.grad_r is not None and not 0 <= pc.grad_r <= max_r(outer.size):
-            raise ValueError(
-                f"grad_r={pc.grad_r} invalid for hierarchical DP over "
-                f"{pc.topology.describe()}: it tunes the outer level "
-                f"{outer.name}[{outer.size}], so the valid range is "
-                f"[0, {max_r(outer.size)}] (use grad_r=None to autotune "
-                f"flat-vs-hierarchical)")
-        return hierarchical_allreduce(tree, pc.dp_axes, pc.topology,
-                                      r=pc.grad_r, mean=mean,
-                                      combine=combine,
-                                      n_buckets=pc.grad_n_buckets,
-                                      tune=pc.tuning)
-    return allreduce_tree(tree, pc.dp_axis_name, mean=mean, r=pc.grad_r,
-                          fabric=fabric, combine=combine,
-                          n_buckets=pc.grad_n_buckets, tune=pc.tuning)
+    if pc.trace:
+        n_elems = sum(int(x.size) for x in jax.tree.leaves(tree))
+        sp = obs_trace.span("dp_grad_allreduce", cat="trace",
+                            dp=pc.dp, n_elems=n_elems, op=monoid.name,
+                            hierarchical=pc.hierarchical_dp,
+                            tuning=pc.tuning)
+    else:
+        sp = obs_trace._NULL_SPAN
+    with sp:
+        if pc.hierarchical_dp:
+            outer = pc.topology.outer
+            if pc.grad_r is not None and \
+                    not 0 <= pc.grad_r <= max_r(outer.size):
+                raise ValueError(
+                    f"grad_r={pc.grad_r} invalid for hierarchical DP over "
+                    f"{pc.topology.describe()}: it tunes the outer level "
+                    f"{outer.name}[{outer.size}], so the valid range is "
+                    f"[0, {max_r(outer.size)}] (use grad_r=None to autotune "
+                    f"flat-vs-hierarchical)")
+            return hierarchical_allreduce(tree, pc.dp_axes, pc.topology,
+                                          r=pc.grad_r, mean=mean,
+                                          combine=combine,
+                                          n_buckets=pc.grad_n_buckets,
+                                          tune=pc.tuning)
+        return allreduce_tree(tree, pc.dp_axis_name, mean=mean, r=pc.grad_r,
+                              fabric=fabric, combine=combine,
+                              n_buckets=pc.grad_n_buckets, tune=pc.tuning)
 
 
 def grads_all_finite(tree, pc: ParallelConfig, *,

@@ -31,8 +31,12 @@ from repro.checkpoint.checkpoint import AsyncCheckpointer, restore
 from repro.data.pipeline import DataConfig, synth_batch
 from repro.launch.mesh import make_mesh, parallel_config_for
 from repro.models.model import init_params
+from repro.obs import trace as obs_trace
+from repro.obs.log import get_logger
 from repro.train.optimizer import OptConfig, init_opt_state
 from repro.train.step import make_train_step
+
+_log = get_logger("repro.runtime.elastic")
 
 
 class StragglerAlert(RuntimeError):
@@ -81,33 +85,47 @@ class ElasticRunner:
         Works for any new dp count (the generalized allreduce needs no
         power-of-two), including prime sizes.
         """
-        self.ckpt.wait()
-        params_host = jax.device_get(self.params)
-        opt_host = jax.device_get(self.opt)
-        self._build(mesh_shape, axes, devices, seed=0, fresh=False)
-        self.params = params_host
-        fresh_opt = init_opt_state(params_host, self.pc, self.bundle.specs)
-        _, restored = _merge_opt(opt_host, fresh_opt)
-        self.opt = restored
+        with obs_trace.span("train.resize", cat="train",
+                            mesh=list(mesh_shape)):
+            self.ckpt.wait()
+            params_host = jax.device_get(self.params)
+            opt_host = jax.device_get(self.opt)
+            self._build(mesh_shape, axes, devices, seed=0, fresh=False)
+            self.params = params_host
+            fresh_opt = init_opt_state(params_host, self.pc,
+                                       self.bundle.specs)
+            reset, restored = _merge_opt(opt_host, fresh_opt)
+            self.opt = restored
+            if reset:
+                _log.info("resize_reset_opt", keys=",".join(reset))
 
     # -------------------------------------------------------------- run
     def run(self, n_steps: int):
         metrics_log = []
+        tracer = obs_trace.get_tracer()
         for _ in range(n_steps):
-            batch = synth_batch(self.cfg, self.dc, self.step)
-            t0 = time.perf_counter()
-            self.params, self.opt, metrics = self.bundle.train_step(
-                self.params, self.opt, batch)
-            loss = float(metrics["loss"])       # blocks; realistic timing
-            dt = time.perf_counter() - t0
+            with obs_trace.span("train.step", cat="train",
+                                step=self.step) as sp:
+                batch = synth_batch(self.cfg, self.dc, self.step)
+                t0 = time.perf_counter()
+                self.params, self.opt, metrics = self.bundle.train_step(
+                    self.params, self.opt, batch)
+                loss = float(metrics["loss"])   # blocks; realistic timing
+                dt = time.perf_counter() - t0
+                sp.set(loss=loss, dt_us=round(dt * 1e6, 1))
+            tracer.counter("train_step_us", round(dt * 1e6, 1),
+                           cat="train")
             self._watch_straggler(dt)
             metrics_log.append({"step": self.step, "loss": loss,
                                 "dt": dt})
             self.step += 1
             if self.step % self.ec.ckpt_every == 0:
-                self.ckpt.save(self.step,
-                               {"params": self.params, "opt": self.opt},
-                               meta={"dp": self.pc.dp, "tp": self.pc.tp})
+                with obs_trace.span("train.checkpoint", cat="train",
+                                    step=self.step):
+                    self.ckpt.save(
+                        self.step,
+                        {"params": self.params, "opt": self.opt},
+                        meta={"dp": self.pc.dp, "tp": self.pc.tp})
         return metrics_log
 
     def _watch_straggler(self, dt: float):
@@ -117,6 +135,12 @@ class ElasticRunner:
         if dt > self.ec.straggler_factor * self.step_time_ewma \
                 and self.step > 2:
             self.alerts.append((self.step, dt, self.step_time_ewma))
+            _log.warn("straggler", step=self.step, dt_s=round(dt, 4),
+                      ewma_s=round(self.step_time_ewma, 4),
+                      factor=self.ec.straggler_factor)
+            obs_trace.get_tracer().instant(
+                "straggler", cat="train", step=self.step,
+                dt_us=round(dt * 1e6, 1))
         self.step_time_ewma = (self.ec.ewma * self.step_time_ewma
                                + (1 - self.ec.ewma) * dt)
 

@@ -15,6 +15,7 @@ positions host-side and re-prefills individual slots.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field, replace
 from typing import List, Optional
 
@@ -23,8 +24,14 @@ import numpy as np
 
 from repro.models.config import ModelConfig
 from repro.models.model import init_caches
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import Histogram
 from repro.parallel.api import ParallelConfig
 from repro.train.step import make_serve_step
+
+
+def _now_us() -> float:
+    return time.perf_counter_ns() / 1e3
 
 
 @dataclass
@@ -33,6 +40,25 @@ class Request:
     max_new_tokens: int = 16
     out_tokens: List[int] = field(default_factory=list)
     done: bool = False
+    # lifecycle timestamps (microseconds, perf_counter epoch), recorded
+    # unconditionally -- latency accounting must not require tracing on
+    t_enqueue_us: Optional[float] = None
+    t_first_token_us: Optional[float] = None
+    t_done_us: Optional[float] = None
+
+    @property
+    def ttft_us(self) -> Optional[float]:
+        """Enqueue -> first generated token."""
+        if self.t_enqueue_us is None or self.t_first_token_us is None:
+            return None
+        return self.t_first_token_us - self.t_enqueue_us
+
+    @property
+    def latency_us(self) -> Optional[float]:
+        """Enqueue -> done."""
+        if self.t_enqueue_us is None or self.t_done_us is None:
+            return None
+        return self.t_done_us - self.t_enqueue_us
 
 
 class Engine:
@@ -55,6 +81,12 @@ class Engine:
         self.temperature = temperature
         self.bundle = make_serve_step(cfg, pc, mesh, rolling=rolling)
         self.rng = np.random.default_rng(seed)
+        # always-on request accounting (tracing adds spans on top)
+        self._ttft = Histogram("ttft_us")
+        self._latency = Histogram("request_latency_us")
+        self._n_requests = 0
+        self._n_tokens = 0
+        self._n_waves = 0
 
     # ------------------------------------------------------------ helpers
     def _sample(self, logits: np.ndarray) -> np.ndarray:
@@ -67,13 +99,52 @@ class Engine:
         return np.array([self.rng.choice(p.shape[-1], p=row)
                          for row in p], np.int32)
 
+    def _note_tokens(self, reqs: List["Request"]):
+        """Stamp first-token / done timestamps on freshly updated requests
+        and fold finished ones into the always-on latency accounting."""
+        now = _now_us()
+        for r in reqs:
+            if r.out_tokens and r.t_first_token_us is None:
+                r.t_first_token_us = now
+                if r.ttft_us is not None:
+                    self._ttft.record(r.ttft_us)
+            if r.done and r.t_done_us is None:
+                r.t_done_us = now
+                if r.latency_us is not None:
+                    self._latency.record(r.latency_us)
+
+    def stats(self) -> dict:
+        """Always-on serving statistics (independent of tracing).
+
+        ``ttft_us`` / ``request_latency_us`` are enqueue -> first-token
+        and enqueue -> done distributions (count/mean/p50/p90/p99) over
+        every request this engine has finished; ``tokens`` counts
+        generated tokens.  The dict is plain JSON, merged into the
+        metrics snapshot by the serving benchmarks.
+        """
+        return {
+            "requests": self._n_requests,
+            "waves": self._n_waves,
+            "tokens": self._n_tokens,
+            "ttft_us": self._ttft.summary(),
+            "request_latency_us": self._latency.summary(),
+        }
+
     # ------------------------------------------------------------- waves
     def generate(self, requests: List[Request]) -> List[Request]:
         """Serve requests in waves of B slots."""
+        now = _now_us()
+        for r in requests:
+            if r.t_enqueue_us is None:
+                r.t_enqueue_us = now
+        self._n_requests += len(requests)
         pending = list(requests)
         while pending:
             wave, pending = pending[:self.B], pending[self.B:]
-            self._run_wave(wave)
+            with obs_trace.span("engine.wave", cat="serve",
+                                n_requests=len(wave), queued=len(pending)):
+                self._run_wave(wave)
+            self._n_waves += 1
         return requests
 
     def _run_wave(self, wave: List[Request]):
@@ -89,24 +160,31 @@ class Engine:
             toks[i, plen - len(r.prompt):] = r.prompt  # left-pad
         pos = 0
         logits = None
-        for lo in range(0, plen, self.prefill_chunk):
-            chunk = toks[:, lo:lo + self.prefill_chunk]
-            logits, caches = self.bundle.serve_step(
-                self.params, jnp.asarray(chunk), caches, jnp.int32(pos))
-            pos += chunk.shape[1]
-        nxt = self._sample(np.asarray(logits[:, -1], np.float32))
-        max_new = max(r.max_new_tokens for r in reqs)
-        for t in range(max_new):
-            for i, r in enumerate(reqs):
-                if not r.done and t < r.max_new_tokens:
-                    r.out_tokens.append(int(nxt[i]))
-                    if len(r.out_tokens) >= r.max_new_tokens:
-                        r.done = True
-            if all(r.done or r.max_new_tokens == 0 for r in reqs):
-                break
-            logits, caches = self.bundle.serve_step(
-                self.params, jnp.asarray(nxt[:, None]), caches,
-                jnp.int32(pos))
-            pos += 1
+        with obs_trace.span("engine.prefill", cat="serve", tokens=plen,
+                            chunk=self.prefill_chunk):
+            for lo in range(0, plen, self.prefill_chunk):
+                chunk = toks[:, lo:lo + self.prefill_chunk]
+                logits, caches = self.bundle.serve_step(
+                    self.params, jnp.asarray(chunk), caches, jnp.int32(pos))
+                pos += chunk.shape[1]
             nxt = self._sample(np.asarray(logits[:, -1], np.float32))
+        max_new = max(r.max_new_tokens for r in reqs)
+        with obs_trace.span("engine.decode", cat="serve",
+                            max_new=max_new) as sp:
+            for t in range(max_new):
+                for i, r in enumerate(reqs):
+                    if not r.done and t < r.max_new_tokens:
+                        r.out_tokens.append(int(nxt[i]))
+                        self._n_tokens += 1
+                        if len(r.out_tokens) >= r.max_new_tokens:
+                            r.done = True
+                self._note_tokens(wave)
+                if all(r.done or r.max_new_tokens == 0 for r in reqs):
+                    sp.set(steps=t + 1)
+                    break
+                logits, caches = self.bundle.serve_step(
+                    self.params, jnp.asarray(nxt[:, None]), caches,
+                    jnp.int32(pos))
+                pos += 1
+                nxt = self._sample(np.asarray(logits[:, -1], np.float32))
         return reqs

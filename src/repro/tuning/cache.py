@@ -29,7 +29,12 @@ from dataclasses import asdict, dataclass, field
 from pathlib import Path
 from typing import Dict, List, Optional
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
+# Older schemas this reader still understands.  v1 rows lack the
+# per-rep timings / noise / arrival-skew telemetry added in v2; they
+# load with the v1 defaults (no rep detail, noise 0, no skew) and are
+# rewritten as v2 on the next save.
+COMPAT_VERSIONS = (1, SCHEMA_VERSION)
 
 
 def _package_version() -> str:
@@ -104,6 +109,14 @@ class Measurement:
     lookup only consults measurements taken under its own operator.
     Entries written before either field existed load with the benchmark
     defaults (f32 sum grid).
+
+    Schema v2 adds measurement-quality telemetry: ``reps_us`` keeps every
+    rep's own best-of-iters figure (``us`` stays their minimum), ``noise``
+    is the relative rep-to-rep spread ``(max - min) / min`` -- the figure
+    :func:`repro.tuning.policy.unstable_cells` thresholds -- and
+    ``skew_us`` is the per-device arrival skew the grid's probe observed
+    around this measurement (None where not probed).  v1 rows load with
+    all three absent/zero.
     """
 
     P: int
@@ -114,6 +127,9 @@ class Measurement:
     us: float  # best-of-reps wallclock per call
     itemsize: int = 4  # element width of the measured buffer (f32 grid)
     op: str = "sum"  # combine operator the candidate was timed under
+    reps_us: Optional[tuple] = None  # per-rep best-of-iters wallclocks
+    noise: float = 0.0  # (max - min) / min over reps_us
+    skew_us: Optional[float] = None  # device arrival skew near this cell
 
     @property
     def ragged(self) -> bool:
@@ -122,6 +138,8 @@ class Measurement:
 
     @classmethod
     def from_dict(cls, d: dict) -> "Measurement":
+        reps = d.get("reps_us")
+        skew = d.get("skew_us")
         return cls(
             P=int(d["P"]),
             nbytes=int(d["nbytes"]),
@@ -131,6 +149,9 @@ class Measurement:
             us=float(d["us"]),
             itemsize=int(d.get("itemsize", 4)),
             op=str(d.get("op", "sum")),
+            reps_us=tuple(float(x) for x in reps) if reps else None,
+            noise=float(d.get("noise", 0.0)),
+            skew_us=float(skew) if skew is not None else None,
         )
 
 
@@ -168,7 +189,7 @@ class TuningCache:
         try:
             with open(p) as f:
                 raw = json.load(f)
-            if not isinstance(raw, dict) or raw.get("version") != SCHEMA_VERSION:
+            if not isinstance(raw, dict) or raw.get("version") not in COMPAT_VERSIONS:
                 raise ValueError(f"unsupported tuning-cache schema in {p}")
             entries = raw["entries"]
             for ent in entries.values():

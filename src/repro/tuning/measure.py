@@ -33,8 +33,14 @@ from repro.core.autotune import choose
 from repro.core.cost_model import HOST_CPU, Fabric
 from repro.core.monoid import MONOIDS
 from repro.core.schedule import build_generalized, build_ring, max_r
+from repro.obs import trace as obs_trace
+from repro.obs.log import data, get_logger
+from repro.obs.skew import device_arrival_probe
 
 from .cache import Measurement, TuningCache, current_fingerprint
+from .policy import NOISE_THRESHOLD, unstable_cells
+
+_log = get_logger("repro.tuning.measure")
 
 Candidate = Tuple[str, int, int]  # (kind, r, n_buckets)
 
@@ -93,20 +99,31 @@ def _schedule(kind: str, P: int, r: int):
 
 
 def _bench_interleaved(variants: Dict[str, object], x, iters: int, reps: int):
-    """{name: best_us_per_call} with round-robin repetitions."""
+    """(best, per_rep) round-robin timings: ``best[name]`` is the minimum
+    per-call microseconds over reps, ``per_rep[name]`` every rep's own
+    figure in rep order (the spread feeds ``Measurement.noise``)."""
     import jax
 
     for fn in variants.values():
         jax.block_until_ready(fn(x))  # warm-up / compile
-    best = {name: float("inf") for name in variants}
+    per_rep: Dict[object, List[float]] = {name: [] for name in variants}
     for _ in range(reps):
         for name, fn in variants.items():
             t0 = time.perf_counter()
             for _ in range(iters):
                 out = fn(x)
             jax.block_until_ready(out)
-            best[name] = min(best[name], (time.perf_counter() - t0) / iters * 1e6)
-    return best
+            per_rep[name].append((time.perf_counter() - t0) / iters * 1e6)
+    best = {name: min(ts) for name, ts in per_rep.items()}
+    return best, per_rep
+
+
+def _noise(reps_us: Sequence[float]) -> float:
+    """Relative rep-to-rep spread ``(max - min) / min`` of one cell."""
+    if not reps_us:
+        return 0.0
+    lo = min(reps_us)
+    return (max(reps_us) - lo) / lo if lo > 0 else 0.0
 
 
 def run_tuning(
@@ -157,6 +174,7 @@ def run_tuning(
 
     fp = current_fingerprint()
     cache = TuningCache.load(cache_path)
+    tracer = obs_trace.get_tracer()
     results = []
     refs = {
         "sum": lambda v: lax.psum(v, "data"),
@@ -167,6 +185,16 @@ def run_tuning(
         m = nbytes // 4
         x = rng.standard_normal((n, m)).astype(np.float32)
         grid = candidate_grid(n, nbytes, smoke=smoke)
+        # arrival-skew telemetry for this message size: how unevenly the
+        # devices come ready for one identical dispatch (persisted per
+        # measurement so PAP-aware scheduling has real data to start from)
+        try:
+            skew_us = device_arrival_probe(nbytes=nbytes).skew_us
+        except Exception as e:  # never let telemetry sink a tuning run
+            _log.warn("arrival_probe_failed", size=label, error=repr(e))
+            skew_us = None
+        tracer.counter("arrival_skew_us", skew_us if skew_us is not None
+                       else 0.0, cat="tuning")
         for op in GRID_OPS:
             monoid = MONOIDS[op]
             variants = {}
@@ -177,26 +205,39 @@ def run_tuning(
                         v, "data", s, n_buckets=nb, combine=mo
                     )
                 )
-            ref = np.asarray(jit_collective(refs[op])(x))[0]
-            for name, fn in variants.items():
-                np.testing.assert_allclose(
-                    np.asarray(fn(x))[0],
-                    ref,
-                    rtol=1e-5,
-                    atol=1e-5,
-                    err_msg=f"candidate {op}:{name} disagrees with lax.p{op}",
-                )
-            timed = _bench_interleaved(variants, x, iters, reps)
+            with tracer.span("tune.verify", cat="tuning", size=label, op=op,
+                             n_candidates=len(variants)):
+                ref = np.asarray(jit_collective(refs[op])(x))[0]
+                for name, fn in variants.items():
+                    np.testing.assert_allclose(
+                        np.asarray(fn(x))[0],
+                        ref,
+                        rtol=1e-5,
+                        atol=1e-5,
+                        err_msg=f"candidate {op}:{name} disagrees with lax.p{op}",
+                    )
+            with tracer.span("tune.bench", cat="tuning", size=label, op=op,
+                             iters=iters, reps=reps) as sp:
+                timed, per_rep = _bench_interleaved(variants, x, iters, reps)
+                sp.set(best_us=min(timed.values()))
             meas_rows = []
             for (kind, r, b), us in sorted(timed.items(), key=lambda kv: kv[1]):
+                reps_us = tuple(round(t, 3) for t in per_rep[(kind, r, b)])
+                noise = round(_noise(reps_us), 4)
                 meas = Measurement(
                     P=n, nbytes=nbytes, kind=kind, r=r, n_buckets=b, us=us,
                     itemsize=4,  # the grid times f32 buffers
                     op=op,
+                    reps_us=reps_us,
+                    noise=noise,
+                    skew_us=skew_us,
                 )
                 cache.record(fp, meas)
                 meas_rows.append(asdict(meas))
-                print(f"tune,{label},{op},{kind},r={r},b={b},{us:.1f}")
+                data(f"tune,{label},{op},{kind},r={r},b={b},{us:.1f}")
+                if noise > NOISE_THRESHOLD:
+                    _log.warn("noisy_cell", size=label, op=op, kind=kind,
+                              r=r, n_buckets=b, noise=noise)
             win = meas_rows[0]
             # benchmarks run f32 buffers: raggedness is per-element
             # (itemsize=4); candidates are priced with the op's gamma
@@ -221,11 +262,19 @@ def run_tuning(
                 }
             )
     saved = cache.save(cache_path)
+    all_meas = [Measurement.from_dict(m) for r_ in results
+                for m in r_["measurements"]]
+    unstable = unstable_cells(all_meas)
+    if unstable:
+        _log.warn("unstable_cells", count=len(unstable),
+                  threshold=NOISE_THRESHOLD)
     payload = {
         "fingerprint": asdict(fp),
         "mode": "smoke" if smoke else "full",
         "model_fabric": model_fabric.name,
         "cache_path": str(saved),
+        "noise_threshold": NOISE_THRESHOLD,
+        "unstable_cells": unstable,
         "notes": (
             "best-of-reps interleaved wallclock per call; candidates are the "
             "executor's own jitted shard_map programs, verified against "
@@ -238,5 +287,5 @@ def run_tuning(
         os.makedirs(os.path.dirname(os.path.abspath(out)), exist_ok=True)
         with open(out, "w") as f:
             json.dump(payload, f, indent=2)
-        print(f"tune,WROTE,{out}")
+        data(f"tune,WROTE,{out}")
     return payload

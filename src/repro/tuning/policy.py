@@ -36,6 +36,12 @@ from .cache import (
 # the table is considered to have no opinion and the model decides
 MAX_EXTRAPOLATION_RATIO = 4.0
 
+# a cell whose rep-to-rep spread (max - min) / min exceeds this is
+# considered unstable: its best-of-reps figure may rank candidates by
+# luck rather than by fabric, so the grid should be re-measured (the
+# tuning summary and the metrics snapshot both surface these cells)
+NOISE_THRESHOLD = 0.25
+
 # (path, mtime_ns, size) -> TuningCache; reloads automatically when the
 # file changes (e.g. after `benchmarks/run.py tune` repopulates it)
 _loaded: Dict[Tuple[str, int, int], TuningCache] = {}
@@ -104,6 +110,42 @@ def lookup(
     if not meas:
         return None
     return best_measured(meas, nbytes, itemsize=itemsize, op=op)
+
+
+def unstable_cells(
+    meas: List[Measurement], threshold: float = NOISE_THRESHOLD
+) -> List[dict]:
+    """Grid cells whose measured noise exceeds ``threshold``.
+
+    Returns one plain dict per flagged cell (sorted worst first) --
+    the shape the tuning summary and the benchmark metrics snapshot
+    embed verbatim.  Cells measured without rep detail (schema-v1 rows)
+    have ``noise == 0`` and are never flagged.
+
+    >>> from repro.tuning.cache import Measurement
+    >>> meas = [Measurement(8, 1024, "generalized", 1, 1, 50.0,
+    ...                     reps_us=(50.0, 90.0), noise=0.8),
+    ...         Measurement(8, 1024, "ring", 0, 1, 80.0, noise=0.01)]
+    >>> [c["kind"] for c in unstable_cells(meas)]
+    ['generalized']
+    """
+    flagged = [
+        {
+            "P": m.P,
+            "nbytes": m.nbytes,
+            "kind": m.kind,
+            "r": m.r,
+            "n_buckets": m.n_buckets,
+            "op": m.op,
+            "us": m.us,
+            "noise": m.noise,
+            "reps_us": list(m.reps_us) if m.reps_us else None,
+        }
+        for m in meas
+        if m.noise > threshold
+    ]
+    flagged.sort(key=lambda c: -c["noise"])
+    return flagged
 
 
 def best_measured(

@@ -1,0 +1,340 @@
+"""Observability layer: Chrome-trace golden schema, metrics snapshots,
+predicted-vs-measured model-error exactness, structured logging, engine
+request accounting, and arrival-skew telemetry."""
+import io
+import json
+import math
+
+import pytest
+
+from repro.core.cost_model import (HOST_CPU, PAPER_10GE,
+                                   ragged_pipelined_schedule_cost,
+                                   ragged_tick_costs)
+from repro.core.execplan import compile_plan, tick_structure
+from repro.core.schedule import build_generalized, build_ring
+from repro.obs import log as obs_log
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import Histogram, Metrics
+from repro.obs.skew import ArrivalRecorder, device_arrival_probe
+from repro.obs.trace import Tracer
+from repro.obs.validate import (fit_ratio, model_error_table,
+                                predicted_ticks_us, report_markdown,
+                                validate_ticks)
+
+
+# ---------------------------------------------------------------------------
+#  trace: Chrome trace-event golden schema
+# ---------------------------------------------------------------------------
+
+def test_trace_golden_schema(tmp_path):
+    t = Tracer(enabled=True)
+    with t.span("outer", cat="exec", kind="generalized", r=1):
+        with t.span("inner", cat="exec"):
+            t.counter("tx_bytes", 4096)
+        t.counter("tx_bytes", 8192)
+    t.instant("mark", cat="exec", step=3)
+    path = t.save(str(tmp_path / "trace.json"), process_name="test-proc")
+    doc = json.loads(open(path).read())
+
+    assert set(doc) == {"traceEvents", "displayTimeUnit"}
+    assert doc["displayTimeUnit"] == "ms"
+    evs = doc["traceEvents"]
+    meta = [e for e in evs if e["ph"] == "M"]
+    assert {m["name"] for m in meta} >= {"process_name", "thread_name"}
+    assert meta[0]["args"]["name"] == "test-proc"
+
+    spans = [e for e in evs if e["ph"] == "X"]
+    assert {e["name"] for e in spans} == {"outer", "inner"}
+    for e in spans:
+        assert {"name", "cat", "ph", "ts", "dur", "pid", "tid"} <= set(e)
+        assert e["ts"] >= 0 and e["dur"] >= 0
+    # span args survive export
+    outer = next(e for e in spans if e["name"] == "outer")
+    assert outer["args"] == {"kind": "generalized", "r": 1}
+
+    counters = [e for e in evs if e["ph"] == "C"]
+    assert [c["args"]["tx_bytes"] for c in counters] == [4096, 8192]
+    instants = [e for e in evs if e["ph"] == "i"]
+    assert instants[0]["args"] == {"step": 3}
+    # counter samples of a monotonic source must be non-decreasing
+    vals = [c["args"]["tx_bytes"] for c in counters]
+    assert vals == sorted(vals)
+
+
+def test_trace_nesting_balanced():
+    """Every child span's [ts, ts+dur] interval nests inside its parent's
+    (same thread), and depth returns to zero when all spans close."""
+    t = Tracer(enabled=True)
+    with t.span("a"):
+        assert t.depth == 1
+        with t.span("b"):
+            assert t.depth == 2
+            with t.span("c"):
+                assert t.depth == 3
+    assert t.depth == 0
+    evs = {e["name"]: e for e in t.export()["traceEvents"]
+           if e["ph"] == "X"}
+    for child, parent in (("c", "b"), ("b", "a")):
+        c, p = evs[child], evs[parent]
+        assert p["ts"] <= c["ts"]
+        assert c["ts"] + c["dur"] <= p["ts"] + p["dur"] + 1e-6
+
+
+def test_trace_disabled_is_noop_and_allocation_free():
+    t = Tracer(enabled=False)
+    with t.span("never", cat="x"):
+        t.counter("n", 1)
+        t.instant("m")
+    assert t.n_events == 0
+    # the module-level fast path returns one shared null span object
+    prev = obs_trace.set_tracer(Tracer(enabled=False))
+    try:
+        s1, s2 = obs_trace.span("a"), obs_trace.span("b", cat="c", k=1)
+        assert s1 is s2
+        with s1 as sp:
+            assert sp.set(result=42) is sp
+    finally:
+        obs_trace.set_tracer(prev)
+
+
+def test_trace_enable_disable_roundtrip():
+    prev = obs_trace.set_tracer(Tracer(enabled=False))
+    try:
+        tr = obs_trace.enable(clear=True)
+        with obs_trace.span("live", cat="t"):
+            pass
+        obs_trace.counter("c", 7)
+        assert tr.n_events == 2
+        obs_trace.disable()
+        with obs_trace.span("dead"):
+            pass
+        assert tr.n_events == 2
+        tr.clear()
+        assert tr.n_events == 0
+    finally:
+        obs_trace.set_tracer(prev)
+
+
+# ---------------------------------------------------------------------------
+#  metrics
+# ---------------------------------------------------------------------------
+
+def test_counter_monotonic():
+    m = Metrics()
+    c = m.counter("tx")
+    c.inc(5)
+    c.inc(0)
+    c.inc(3)
+    assert c.value == 8
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    assert c.value == 8  # rejected increment left no trace
+
+
+def test_histogram_percentiles_and_moments():
+    h = Histogram("lat")
+    h.record_many(float(v) for v in range(1, 101))  # 1..100
+    assert h.count == 100 and h.sum == 5050.0
+    assert h.percentile(0) == 1.0 and h.percentile(100) == 100.0
+    assert h.percentile(50) == pytest.approx(50.5)
+    s = h.summary()
+    assert s["min"] == 1.0 and s["max"] == 100.0
+    assert s["mean"] == pytest.approx(50.5)
+    assert s["p90"] == pytest.approx(90.1)
+    # moments stay exact past the sample cap
+    h2 = Histogram("capped", cap=4)
+    h2.record_many([1.0, 2.0, 3.0, 4.0, 1000.0])
+    s2 = h2.summary()
+    assert s2["count"] == 5
+    assert s2["max"] == 1000.0
+    assert s2["sum"] == 1010.0
+
+
+def test_metrics_snapshot_and_save(tmp_path):
+    m = Metrics()
+    m.counter("replays").inc(3)
+    m.gauge("depth").set(7)
+    m.histogram("us").record_many([10.0, 20.0])
+    snap = m.snapshot(extra={"model_error": [{"ratio": 1.0}]})
+    assert snap["schema"] == "repro-metrics-v1"
+    assert snap["counters"] == {"replays": 3}
+    assert snap["gauges"] == {"depth": 7}
+    assert snap["histograms"]["us"]["count"] == 2
+    assert snap["model_error"] == [{"ratio": 1.0}]
+    path = m.save(str(tmp_path / "m.json"))
+    assert json.load(open(path))["counters"] == {"replays": 3}
+    m.reset()
+    assert m.snapshot()["counters"] == {}
+
+
+# ---------------------------------------------------------------------------
+#  validate: predicted-vs-measured exactness (the golden property)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind,r,n_buckets", [
+    ("generalized", 1, 1), ("generalized", 2, 3), ("ring", 0, 1),
+    ("ring", 0, 4)])
+def test_model_error_exact_on_synthetic_time(kind, r, n_buckets):
+    """Feeding the model's own per-tick timeline back as 'measured' must
+    produce ratio exactly 1.0 -- the report is pure arithmetic."""
+    P, nbytes = 8, 1 << 20
+    sched = build_generalized(P, r) if kind == "generalized" \
+        else build_ring(P)
+    pred = predicted_ticks_us(sched, nbytes, PAPER_10GE,
+                              n_buckets=n_buckets)
+    row = validate_ticks(sched, nbytes, PAPER_10GE,
+                         measured_ticks_us=pred, n_buckets=n_buckets)
+    assert row["ratio"] == 1.0
+    assert row["log2_ratio"] == 0.0
+    assert row["max_tick_ratio"] == 1.0
+    assert row["n_ticks"] == len(pred)
+
+
+def test_validate_rejects_tick_count_mismatch():
+    sched = build_ring(8)
+    with pytest.raises(ValueError, match="ticks"):
+        validate_ticks(sched, 4096, PAPER_10GE,
+                       measured_ticks_us=[1.0, 2.0], n_buckets=1)
+
+
+def test_model_error_table_and_fit_ratio():
+    sched = build_generalized(8, 1)
+    pred = predicted_ticks_us(sched, 4096, PAPER_10GE)
+    # measured = 2x predicted everywhere -> every ratio 2, geomean 2
+    report = {"kind": "generalized", "r": 1, "P": 8, "n_buckets": 1,
+              "itemsize": 1, "nbytes": 4096,
+              "ticks": [{"total_us": 2 * p} for p in pred]}
+    rows = model_error_table([report, report], PAPER_10GE)
+    assert [r["ratio"] for r in rows] == pytest.approx([2.0, 2.0])
+    assert fit_ratio(rows) == pytest.approx(2.0)
+    md = report_markdown(rows, title="t", fabric_name="paper-10ge")
+    assert "| generalized | 1 | 1 | 4096 |" in md
+    assert "Geometric-mean ratio: **2.000**" in md
+
+
+def test_tick_costs_consistent_with_scalar_cost():
+    """The per-tick breakdown is the single source of truth: its sum IS
+    the pipelined scalar cost, and its length follows tick_structure."""
+    for P, r, nb in [(8, 1, 2), (8, 2, 3), (12, 1, 4)]:
+        sched = build_generalized(P, r)
+        ticks = ragged_tick_costs(sched, 1 << 20, HOST_CPU, nb)
+        plan = compile_plan(sched)
+        assert len(ticks) == len(tick_structure(plan, nb))
+        total = ragged_pipelined_schedule_cost(sched, 1 << 20, HOST_CPU, nb)
+        assert sum(t["total_s"] for t in ticks) == total
+
+
+def test_tick_structure_covers_every_step_once():
+    plan = compile_plan(build_generalized(8, 1))
+    B = 3
+    ticks = tick_structure(plan, B)
+    S = len(plan.steps)
+    assert len(ticks) == S + B - 1
+    seen = [(b, s) for tick in ticks for b, s in tick]
+    assert len(seen) == len(set(seen)) == S * B
+    for t, tick in enumerate(ticks):
+        for b, s in tick:
+            assert t == s + b  # bucket b runs step t-b at tick t
+
+
+# ---------------------------------------------------------------------------
+#  log: leveled logfmt diagnostics + unfiltered protocol rows
+# ---------------------------------------------------------------------------
+
+def test_logger_levels_via_env(monkeypatch):
+    buf = io.StringIO()
+    lg = obs_log.Logger("t", stream=buf)
+    monkeypatch.setenv("REPRO_LOG", "warn")
+    lg.info("dropped", a=1)
+    lg.warn("kept", path="/tmp/x y")  # space forces quoting
+    monkeypatch.setenv("REPRO_LOG", "debug")  # lazily re-read
+    lg.debug("now_visible")
+    lines = buf.getvalue().strip().splitlines()
+    assert len(lines) == 2
+    assert "event=kept" in lines[0] and 'path="/tmp/x y"' in lines[0]
+    assert "level=warn" in lines[0]
+    assert "event=now_visible" in lines[1]
+
+
+def test_data_rows_bypass_level_filter(monkeypatch, capsys):
+    monkeypatch.setenv("REPRO_LOG", "error")
+    obs_log.data("executor,256KiB,pipelined,812.4")
+    out = capsys.readouterr()
+    assert out.out == "executor,256KiB,pipelined,812.4\n"
+    assert out.err == ""
+
+
+def test_get_logger_cached():
+    assert obs_log.get_logger("same") is obs_log.get_logger("same")
+
+
+# ---------------------------------------------------------------------------
+#  skew: arrival-pattern telemetry
+# ---------------------------------------------------------------------------
+
+def test_arrival_recorder_stats():
+    rec = ArrivalRecorder()
+    for rank, ts in [(2, 12.0), (0, 10.0), (1, 10.5)]:
+        rec.record(rank, ts_us=ts)
+    st = rec.stats()
+    assert st.n == 3
+    assert st.deltas_us == (0.0, 0.5, 2.0)  # rank order, not record order
+    assert st.skew_us == 2.0
+    assert st.mean_delta_us == pytest.approx(2.5 / 3, abs=1e-3)
+    rec.record(2, ts_us=10.0)  # re-record overwrites
+    assert rec.stats().skew_us == 0.5
+    rec.clear()
+    empty = rec.stats()
+    assert empty.n == 0 and empty.skew_us == 0.0 and empty.deltas_us == ()
+    assert empty.to_dict()["deltas_us"] == []
+
+
+def test_device_arrival_probe_runs():
+    import jax
+    st = device_arrival_probe(nbytes=1 << 10, reps=2)
+    assert st.n == len(jax.devices())
+    assert st.skew_us >= 0.0
+    assert len(st.deltas_us) == st.n
+    assert math.isfinite(st.mean_delta_us)
+
+
+# ---------------------------------------------------------------------------
+#  engine: always-on request accounting (tracing off)
+# ---------------------------------------------------------------------------
+
+def test_engine_stats_without_tracing():
+    import jax
+    import numpy as np
+
+    from repro.configs import ARCHS, get_config, get_reduced
+    from repro.launch.mesh import make_mesh
+    from repro.models.model import init_params
+    from repro.parallel.api import ParallelConfig
+    from repro.serve.engine import Engine, Request
+
+    assert not obs_trace.get_tracer().enabled
+    arch = next(a for a in ARCHS if get_config(a).is_decoder)
+    cfg = get_reduced(arch)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    pc = ParallelConfig(dp=1, tp=1)
+    params, _ = init_params(cfg, pc, jax.random.PRNGKey(0))
+    eng = Engine(cfg, pc, mesh, params, batch_slots=2, max_len=64)
+    rng = np.random.default_rng(0)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab, (5,)).astype(np.int32),
+                    max_new_tokens=3) for _ in range(3)]
+    done = eng.generate(reqs)
+
+    for r in done:
+        assert r.done and len(r.out_tokens) == 3
+        assert r.t_enqueue_us is not None
+        assert r.t_first_token_us is not None
+        assert r.t_done_us is not None
+        assert r.ttft_us >= 0.0
+        assert r.latency_us >= r.ttft_us
+    st = eng.stats()
+    assert st["requests"] == 3
+    assert st["waves"] == 2        # 3 requests over 2 slots
+    assert st["tokens"] == 9
+    assert st["ttft_us"]["count"] == 3
+    assert st["request_latency_us"]["count"] == 3
+    assert st["request_latency_us"]["p50"] >= st["ttft_us"]["min"]

@@ -304,3 +304,78 @@ def test_measure_grid_prunes_tiny_buckets():
     assert {b for _, _, b in grid_big} == {1, 2, 4}
     kinds = {(k, r) for k, r, _ in grid_big}
     assert ("ring", 0) in kinds and ("generalized", 0) in kinds
+
+
+# ---------------------------------------------------------------------------
+#  schema v2: per-rep timings, noise, arrival skew
+# ---------------------------------------------------------------------------
+
+
+def test_measurement_v2_fields_roundtrip(tuned_env):
+    m = Measurement(
+        P=8,
+        nbytes=1 << 20,
+        kind="generalized",
+        r=1,
+        n_buckets=2,
+        us=100.0,
+        reps_us=(110.0, 100.0, 130.0),
+        noise=0.3,
+        skew_us=42.5,
+    )
+    c = TuningCache.load(tuned_env)
+    c.record(FP, m)
+    c.save()
+    back = TuningCache.load(tuned_env).lookup(FP, 8)[0]
+    assert back.reps_us == (110.0, 100.0, 130.0)
+    assert back.noise == 0.3
+    assert back.skew_us == 42.5
+    assert json.loads(tuned_env.read_text())["version"] == 2
+
+
+def test_cache_v1_file_loads_with_defaults(tuned_env):
+    """A v1 cache (pre reps/noise/skew) must load, not quarantine."""
+    c = TuningCache.load(tuned_env)
+    c.record(FP, meas(1 << 20, "ring", 0, 1, 77.0))
+    c.save()
+    raw = json.loads(tuned_env.read_text())
+    raw["version"] = 1
+    for entry in raw["entries"].values():
+        for m in entry["measurements"]:
+            for k in ("reps_us", "noise", "skew_us"):
+                m.pop(k, None)
+    tuned_env.write_text(json.dumps(raw))
+    back = TuningCache.load(tuned_env)
+    assert back.n_measurements == 1
+    m = back.lookup(FP, 8)[0]
+    assert m.us == 77.0
+    assert m.reps_us is None and m.noise == 0.0 and m.skew_us is None
+    # re-saving migrates the file to the current schema
+    back.save()
+    assert json.loads(tuned_env.read_text())["version"] == cache_mod.SCHEMA_VERSION
+
+
+def test_unstable_cells_flags_noisy_measurements():
+    from repro.tuning.policy import NOISE_THRESHOLD, unstable_cells
+
+    quiet = Measurement(
+        P=8, nbytes=1 << 20, kind="ring", r=0, n_buckets=1, us=100.0, noise=0.05
+    )
+    noisy = Measurement(
+        P=8,
+        nbytes=1 << 20,
+        kind="generalized",
+        r=2,
+        n_buckets=2,
+        us=50.0,
+        reps_us=(50.0, 80.0),
+        noise=0.6,
+    )
+    noisier = Measurement(
+        P=8, nbytes=64 << 10, kind="ring", r=0, n_buckets=1, us=10.0, noise=0.9
+    )
+    out = unstable_cells([quiet, noisy, noisier])
+    assert [c["noise"] for c in out] == [0.9, 0.6]  # worst first
+    assert out[1]["kind"] == "generalized" and out[1]["reps_us"] == [50.0, 80.0]
+    assert unstable_cells([quiet]) == []
+    assert 0.0 < NOISE_THRESHOLD < 1.0
