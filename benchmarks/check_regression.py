@@ -31,6 +31,13 @@ run -- a size- or family-list edit cannot silently drop the ragged
 split, the monoid combines, or the schedule-driven all-to-all out of
 the gate.
 
+The same gate also guards the chaos benchmark (results/chaos.json):
+its ``recovery_steps`` key -- steps of training work re-executed after
+an injected failure -- is *lower*-is-better and deterministic, so the
+gate checks a ceiling (``cur <= base * (1 + tol)``) instead of a floor;
+the companion ``recovered`` key (1.0 when the run finished every step)
+gates as a normal floor.
+
 Usage (what CI runs):
     python benchmarks/run.py executor --smoke --out results/executor_smoke.json
     python benchmarks/check_regression.py \
@@ -38,6 +45,11 @@ Usage (what CI runs):
         --baseline results/executor.json \
         --summary regression_summary.md \
         --json regression.json
+    python benchmarks/run.py chaos --smoke --out results/chaos_smoke.json
+    python benchmarks/check_regression.py \
+        --current results/chaos_smoke.json \
+        --baseline results/chaos.json \
+        --keys recovery_steps,recovered
 
 ``--json PATH`` additionally writes the full machine-readable verdict
 (every comparison plus the tolerance and exit status) for downstream
@@ -56,6 +68,13 @@ import sys
 # CPU's all_to_all wallclock is bimodal across processes on the
 # baseline host
 DEFAULT_KEYS = ("speedup_execplan", "speedup_pipelined", "speedup_bruck_vs_direct")
+
+# most gated keys are speedups, where bigger is better and the gate is a
+# floor; these are costs, where the gate is a *ceiling* (cur > base *
+# (1 + tol) regresses).  recovery_steps = steps of work re-executed
+# after a failure (chaos benchmark): deterministic, so any growth is a
+# real behavior change, not noise.
+LOWER_IS_BETTER = frozenset({"recovery_steps"})
 
 
 def is_ragged(row: dict) -> bool:
@@ -87,22 +106,42 @@ def load_rows(path: str) -> dict:
 
 
 def compare(current: dict, baseline: dict, keys, tolerance: float):
-    """Returns (comparisons, regressions); each comparison is a dict."""
-    overlap = sorted(set(current) & set(baseline), key=lambda lb: baseline[lb]["bytes"])
+    """Returns (comparisons, regressions); each comparison is a dict.
+
+    Direction-aware: keys in LOWER_IS_BETTER (costs, e.g. the chaos
+    benchmark's recovery_steps) regress when the current value climbs
+    ABOVE ``base * (1 + tol)``; everything else (speedup ratios)
+    regresses when it drops below ``base * (1 - tol)``.
+    """
+    overlap = sorted(
+        set(current) & set(baseline),
+        key=lambda lb: (baseline[lb].get("bytes", 0), lb),
+    )
     comparisons, regressions = [], []
     for label in overlap:
         for key in keys:
             base, cur = baseline[label].get(key), current[label].get(key)
             if base is None or cur is None:
                 continue
-            floor = base * (1.0 - tolerance)
+            if key in LOWER_IS_BETTER:
+                bound = base * (1.0 + tolerance)
+                regressed = cur > bound
+                direction = "<="
+            else:
+                bound = base * (1.0 - tolerance)
+                regressed = cur < bound
+                direction = ">="
             entry = {
                 "label": label,
                 "key": key,
                 "baseline": base,
                 "current": cur,
-                "floor": round(floor, 3),
-                "regressed": cur < floor,
+                # bound supersedes the old floor field; floor is kept
+                # (floor semantics) for downstream --json consumers
+                "bound": round(bound, 3),
+                "direction": direction,
+                "floor": round(base * (1.0 - tolerance), 3),
+                "regressed": regressed,
             }
             comparisons.append(entry)
             if entry["regressed"]:
@@ -127,14 +166,15 @@ def write_summary(
         "(documented benchmark noise envelope)",
         f"- verdict: {'REGRESSION' if regressions else 'OK'}",
         "",
-        "| size | metric | baseline | current | floor | status |",
+        "| size | metric | baseline | current | bound | status |",
         "| --- | --- | --- | --- | --- | --- |",
     ]
     for c in comparisons:
         status = "**REGRESSED**" if c["regressed"] else "ok"
         lines.append(
             f"| {c['label']} | {c['key']} | {c['baseline']:.3f} "
-            f"| {c['current']:.3f} | {c['floor']:.3f} | {status} |"
+            f"| {c['current']:.3f} | {c['direction']} {c['bound']:.3f} "
+            f"| {status} |"
         )
     lines.append("")
     lines.append(
@@ -233,7 +273,7 @@ def main(argv=None) -> int:
             print(
                 f"check_regression,{c['label']},{c['key']},"
                 f"base={c['baseline']:.3f},cur={c['current']:.3f},"
-                f"floor={c['floor']:.3f},{status}"
+                f"bound={c['direction']}{c['bound']:.3f},{status}"
             )
     if args.summary:
         write_summary(

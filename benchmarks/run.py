@@ -24,7 +24,9 @@ per-tick replay and writes a Chrome trace + metrics snapshot +
 predicted-vs-measured model-error report, see docs/observability.md),
 ``tune [--smoke] [--out PATH] [--cache PATH]`` (measured autotuning
 grid, sum + max operators -> persistent tuning cache +
-results/tuning.json).
+results/tuning.json), ``chaos [--smoke] [--trace] [--out PATH]``
+(deterministic fault scenarios on the multi-process runtime mesh ->
+results/chaos.json; exact recovery_steps rows, gated lower-is-better).
 
 Protocol CSV rows go to stdout via ``repro.obs.log.data``; diagnostics
 go to stderr as logfmt lines filtered by ``REPRO_LOG``.
@@ -221,6 +223,32 @@ def tune_bench(smoke: bool = False, out: str = "results/tuning.json",
     _worker_bench("tune_worker.py", "tune", extra, timeout=3600)
 
 
+def chaos_bench(smoke: bool = False, out: str = "results/chaos.json",
+                trace: bool = False) -> None:
+    """Deterministic fault scenarios on the real coordinator/worker
+    process mesh (kill -> recover at P-1, torn checkpoint fallback,
+    delay -> skew telemetry); writes ``results/chaos.json`` whose exact
+    ``recovery_steps`` rows are gated by check_regression.py
+    (lower-is-better).  No forced host devices needed: the runtime mesh
+    is OS processes over TCP."""
+    script = os.path.join(os.path.dirname(__file__), "chaos_worker.py")
+    extra = ["--out", out] + (["--smoke"] if smoke else []) \
+        + (["--trace"] if trace else [])
+    env = dict(os.environ)
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    res = subprocess.run([sys.executable, script, *extra], env=env,
+                         capture_output=True, text=True, timeout=1800)
+    if res.returncode != 0:
+        log.error("worker_failed", worker="chaos_worker.py",
+                  stderr=res.stderr[-2000:])
+        raise SystemExit(1)
+    if res.stderr:
+        sys.stderr.write(res.stderr)
+    for line in res.stdout.strip().splitlines():
+        if line.startswith("chaos,"):
+            data(line)
+
+
 def figures() -> None:
     data("name,us_per_call,derived")
     fig1_ratio_heatmap()
@@ -254,8 +282,13 @@ def main(argv=None) -> None:
         tune_bench(smoke="--smoke" in argv,
                    out=_opt(argv, "--out", "results/tuning.json"),
                    cache=_opt(argv, "--cache", None))
+    elif mode == "chaos":
+        chaos_bench(smoke="--smoke" in argv,
+                    out=_opt(argv, "--out", "results/chaos.json"),
+                    trace="--trace" in argv)
     else:
-        raise SystemExit(f"unknown mode {mode!r} (figures | executor | tune)")
+        raise SystemExit(
+            f"unknown mode {mode!r} (figures | executor | tune | chaos)")
 
 
 if __name__ == "__main__":

@@ -23,25 +23,37 @@ forces the model.
 from __future__ import annotations
 
 import os
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from functools import lru_cache
-from typing import Optional
+from typing import Optional, Sequence, Tuple
 
-from .cost_model import (Fabric, TPU_V5E_ICI, choose_n_buckets,
-                         pipelined_schedule_cost, ragged_choose_n_buckets,
+from .cost_model import (Fabric, TPU_V5E_ICI, choose_arrival_order,
+                         choose_n_buckets, pipelined_schedule_cost,
+                         ragged_choose_n_buckets,
                          ragged_pipelined_schedule_cost, ragged_schedule_cost,
-                         schedule_cost)
+                         schedule_cost, skewed_schedule_cost)
 from .monoid import Monoid
-from .schedule import Schedule, build_generalized, build_ring, n_steps_log
+from .schedule import (Schedule, build_generalized, build_ring,
+                       build_sorted_generalized, n_steps_log)
+
+# The skew-aware path engages only when the measured arrival spread is
+# worth acting on: at least this fraction of the best barrier-model cost
+# (tiny relative skews cannot change any winner) AND at least one fabric
+# alpha (absolute floor below which the probe is pure noise).
+SKEW_COST_FRACTION = 0.05
 
 
 @dataclass(frozen=True)
 class Choice:
-    kind: str          # "generalized" | "ring"
+    kind: str          # "generalized" | "ring" | "sorted"
     r: int
     cost: float        # modeled seconds, or measured seconds when tuned
     n_buckets: int = 1   # pipelined buckets for the ExecPlan executor
-    source: str = "model"  # "model" | "measured"
+    source: str = "model"  # "model" | "measured" | "skew"
+    # arrival-sorted rank order (kind == "sorted" only): order[j] is the
+    # physical device at logical position j.  repr-suppressed so the
+    # common kinds keep their stable printed form.
+    order: Optional[Tuple[int, ...]] = field(default=None, repr=False)
 
 
 def _tune_default() -> bool:
@@ -50,7 +62,8 @@ def _tune_default() -> bool:
 
 def choose(P: int, nbytes: int, fabric: Fabric = TPU_V5E_ICI,
            allow_ring: bool = True, tune: Optional[bool] = None,
-           itemsize: int = 1, monoid: Optional[Monoid] = None) -> Choice:
+           itemsize: int = 1, monoid: Optional[Monoid] = None,
+           arrival_deltas_us: Optional[Sequence[float]] = None) -> Choice:
     """Pick (kind, r, n_buckets) minimizing time for an allreduce of
     ``nbytes`` over ``P`` devices.
 
@@ -70,24 +83,54 @@ def choose(P: int, nbytes: int, fabric: Fabric = TPU_V5E_ICI,
     fingerprint matches this process (see :mod:`repro.tuning.policy`).
     Everything else falls through to the analytic model.
 
+    ``arrival_deltas_us`` engages the arrival-skew timeline
+    (:func:`repro.core.cost_model.skewed_schedule_cost`): per-device
+    arrival deltas in microseconds, e.g. from
+    :func:`repro.obs.skew.device_arrival_probe` or a runtime's step
+    barrier.  When omitted and tuning is on, the deltas persisted in the
+    tuning cache (``Measurement.deltas_us``) are used.  If the spread
+    clears the threshold (``SKEW_COST_FRACTION`` of the best barrier
+    cost and at least one fabric alpha), every candidate -- including
+    the arrival-sorted relabeling
+    (:func:`repro.core.schedule.build_sorted_generalized`) -- is priced
+    by the skew timeline instead; such choices carry
+    ``source="skew"``.  Skew below the threshold changes nothing.
+
     >>> choose(8, 1 << 26, tune=False)      # big message: bandwidth-optimal
     Choice(kind='generalized', r=0, cost=0.00235581024, n_buckets=2, \
 source='model')
     >>> choose(8, 512, tune=False).r        # tiny message: latency-optimal
     3
+    >>> c = choose(8, 512, tune=False, fabric=TPU_V5E_ICI,
+    ...            arrival_deltas_us=[0, 0, 0, 0, 0, 0, 0, 300.0])
+    >>> c.source                            # heavy skew: timeline-priced
+    'skew'
     """
     if P <= 1:
         return Choice("generalized", 0, 0.0)
-    if _tune_default() if tune is None else tune:
+    itemsize = max(int(itemsize), 1)
+    op = monoid.name if monoid is not None else "sum"
+    tuned = _tune_default() if tune is None else tune
+    deltas = arrival_deltas_us
+    if deltas is None and tuned:
+        from repro.tuning import policy  # deferred: tuning sits above core
+        deltas = policy.arrival_deltas(P, int(nbytes), op=op)
+    if deltas is not None and len(deltas) == P:
+        base = _choose_model(P, int(nbytes), fabric, allow_ring,
+                             itemsize, monoid)
+        skew_s = (max(deltas) - min(deltas)) * 1e-6
+        if skew_s >= max(SKEW_COST_FRACTION * base.cost, fabric.alpha):
+            return _choose_skewed(P, int(nbytes), fabric, allow_ring,
+                                  itemsize, monoid,
+                                  tuple(int(round(d)) for d in deltas))
+    if tuned:
         from repro.tuning import policy  # deferred: tuning sits above core
         measured = policy.lookup(P, int(nbytes), allow_ring=allow_ring,
-                                 itemsize=max(int(itemsize), 1),
-                                 op=monoid.name if monoid is not None
-                                 else "sum")
+                                 itemsize=itemsize, op=op)
         if measured is not None:
             return measured
     return _choose_model(P, int(nbytes), fabric, allow_ring,
-                         max(int(itemsize), 1), monoid)
+                         itemsize, monoid)
 
 
 @lru_cache(maxsize=None)
@@ -138,12 +181,63 @@ def _choose_model(P: int, nbytes: int, fabric: Fabric,
     return best
 
 
+# bounded: keyed by the quantized delta tuple, whose cardinality is
+# unbounded when a long-lived runtime's arrival pattern drifts
+@lru_cache(maxsize=512)
+def _choose_skewed(P: int, nbytes: int, fabric: Fabric, allow_ring: bool,
+                   itemsize: int, monoid: Optional[Monoid],
+                   deltas_us: Tuple[int, ...]) -> Choice:
+    """Skew-timeline pick under measured arrival deltas.
+
+    Every candidate is priced by
+    :func:`repro.core.cost_model.skewed_schedule_cost` -- under heavy
+    skew the winner legitimately flips toward larger ``r`` (fewer steps
+    after the last arrival's data enters the combine tree), which the
+    barrier model cannot see.  The arrival-sorted relabeling of the
+    winning ``r`` is taken when its timeline beats the identity order
+    (on the vertex-transitive cyclic schedules the margin comes from
+    aligning the ragged +1-element chunks away from late devices, so it
+    is small but never negative -- identity is always a candidate).
+    ``n_buckets`` stays 1: the skew timeline prices whole-step messages,
+    and bucketing decisions under skew would be guesses.
+    """
+    deltas = [float(d) for d in deltas_us]
+    best: Optional[Choice] = None
+    for r in range(n_steps_log(P) + 1):
+        s = build_generalized(P, r)
+        c = skewed_schedule_cost(s, nbytes, fabric, deltas, itemsize, monoid)
+        if best is None or c < best.cost:
+            best = Choice("generalized", r, c, source="skew")
+    if allow_ring:
+        c = skewed_schedule_cost(build_ring(P), nbytes, fabric, deltas,
+                                 itemsize, monoid)
+        if c < best.cost:
+            best = Choice("ring", 0, c, source="skew")
+    if best.kind == "generalized":
+        order, c = choose_arrival_order(P, best.r, nbytes, fabric, deltas,
+                                        itemsize, monoid)
+        if c < best.cost and order != tuple(range(P)):
+            sched = build_sorted_generalized(P, best.r, order)
+            # exact physical-delta cost of the relabeled schedule (the
+            # search priced it by logical-delta conjugation, which is
+            # off by the ragged chunk placement)
+            c_exact = skewed_schedule_cost(sched, nbytes, fabric, deltas,
+                                           itemsize, monoid)
+            if c_exact < best.cost:
+                best = Choice("sorted", best.r, c_exact, source="skew",
+                              order=order)
+    return best
+
+
 def clear_cache() -> None:
     """Drop memoized analytic picks (tests; after fabric/table changes)."""
     _choose_model.cache_clear()
+    _choose_skewed.cache_clear()
 
 
 def schedule_for(choice: Choice, P: int) -> Schedule:
     if choice.kind == "ring":
         return build_ring(P)
+    if choice.kind == "sorted":
+        return build_sorted_generalized(P, choice.r, choice.order)
     return build_generalized(P, choice.r)

@@ -27,8 +27,9 @@ from dataclasses import dataclass
 from typing import Optional
 
 from .monoid import Monoid
-from .schedule import (Schedule, build_generalized, build_ring, n_steps_log,
-                       ragged_step_units)
+from .schedule import (Schedule, ShapeError, _place_chunk_table,
+                       build_generalized, build_ring, n_steps_log,
+                       ragged_sizes, ragged_step_units)
 
 
 def _gamma(f: "Fabric", monoid: Optional[Monoid]) -> float:
@@ -410,6 +411,141 @@ def ragged_choose_n_buckets(sched: Schedule, m: int, f: Fabric,
         if c < best_c:
             best_b, best_c = b, c
     return best_b
+
+
+# ---------------------------------------------------------------------------
+#  arrival-skew timeline (imbalanced process arrival patterns,
+#  Proficz arXiv:1804.05349)
+# ---------------------------------------------------------------------------
+
+def skewed_schedule_cost(sched: Schedule, m: int, f: Fabric,
+                         deltas_us, itemsize: int = 1,
+                         monoid: Optional[Monoid] = None) -> float:
+    """Completion time of a schedule whose devices *arrive late*.
+
+    ``deltas_us[d]`` is the arrival delta of physical device ``d``
+    (microseconds after the earliest arrival -- the quantity
+    :mod:`repro.obs.skew` measures).  The barrier models
+    (:func:`ragged_schedule_cost` and friends) charge every step at the
+    slowest device and are therefore *order-blind*: under them a late
+    arrival always costs ``max(delta)`` extra, wherever it sits.  This
+    model tracks readiness per ``(row, device)`` instead -- a device's
+    step-k message departs when the *transmitted rows* are ready, not
+    when its last inbound row of step k-1 has landed -- which exposes
+    the schedule's real slack: lateness only propagates along chains of
+    rows that are actually re-transmitted, so *where* a late device
+    stands in the rank order changes the completion time.  That is the
+    quantity :func:`choose_arrival_order` minimizes and the sorted
+    schedule kind (:func:`repro.core.schedule.build_sorted_generalized`)
+    realizes.
+
+    Per step, a device's message pays ``alpha + true_tx_bytes * beta``
+    (exact ragged chunk geometry, like :func:`ragged_schedule_cost`) and
+    each combined row pays its own bytes at the monoid-scaled gamma.
+    Returns seconds, measured from the earliest device's arrival.
+
+    >>> s = build_generalized(8, 1)
+    >>> zero = skewed_schedule_cost(s, 1 << 20, PAPER_10GE, [0.0] * 8)
+    >>> zero <= ragged_schedule_cost(s, 1 << 20, PAPER_10GE)
+    True
+    >>> late = skewed_schedule_cost(s, 1 << 20, PAPER_10GE,
+    ...                             [0, 0, 0, 0, 0, 0, 0, 400.0])
+    >>> late >= zero
+    True
+    >>> shifted = skewed_schedule_cost(s, 1 << 20, PAPER_10GE,
+    ...                                [100.0] * 8)
+    >>> abs(shifted - zero - 100e-6) < 1e-12     # uniform delay shifts all
+    True
+    """
+    import numpy as np
+    P = sched.P
+    deltas = [float(d) for d in deltas_us]
+    if len(deltas) != P:
+        raise ShapeError("skewed_schedule_cost needs one delta per device",
+                         expected=P, actual=len(deltas))
+    g_comb = _gamma(f, monoid)
+    elems = max(int(m) // max(int(itemsize), 1), 0)
+    sizes = np.asarray(ragged_sizes(elems, P), dtype=np.int64)
+    tbl = _place_chunk_table(sched)
+    # ready[row, d]: seconds at which device d's copy of row is usable
+    ready = np.tile(np.asarray(deltas, dtype=np.float64) * 1e-6, (P, 1))
+    rows = sched.initial_slots
+    for st in sched.steps:
+        arrive = None
+        if st.n_tx:
+            depart = ready[list(st.tx_rows)].max(axis=0)          # (P,)
+            tx_bytes = sum(sizes[tbl[rows[ri].place]]
+                           for ri in st.tx_rows) * itemsize       # (P,)
+            perm = np.asarray(sched.group.perm(st.shift))
+            arrive = np.empty(P, dtype=np.float64)
+            arrive[perm] = depart + f.alpha + tx_bytes * f.beta
+        nxt = np.empty((len(st.out), P), dtype=np.float64)
+        for i, (op, meta) in enumerate(zip(st.out, st.out_slots)):
+            if op.kind == "keep":
+                nxt[i] = ready[op.res]
+            elif op.kind == "recv":
+                nxt[i] = arrive
+            else:
+                row_bytes = sizes[tbl[meta.place]] * itemsize     # (P,)
+                nxt[i] = (np.maximum(ready[op.res], arrive)
+                          + row_bytes * g_comb)
+        ready = nxt
+        rows = st.out_slots
+    return float(ready.max())
+
+
+def choose_arrival_order(P: int, r: int, m: int, f: Fabric,
+                         deltas_us, itemsize: int = 1,
+                         monoid: Optional[Monoid] = None,
+                         sweeps: int = 3):
+    """Rank order minimizing :func:`skewed_schedule_cost` under measured
+    arrival deltas.  Returns ``(order, cost_s)`` with ``order[j]`` the
+    physical device assigned to logical position ``j`` -- the argument
+    :func:`repro.core.schedule.build_sorted_generalized` takes.
+
+    Evaluating an order never rebuilds a schedule: a relabeled schedule
+    with physical deltas is the base schedule with *logically permuted*
+    deltas (conjugation, see :class:`repro.core.group.RelabeledGroup`),
+    so candidates are priced on ``build_generalized(P, r)`` directly.
+    Search is deterministic: seed with identity / arrival-ascending /
+    arrival-descending, then pairwise-swap hill climbing (at most
+    ``sweeps`` passes) -- the identity order is always a candidate, so
+    the result is never worse than leaving the ranks alone.
+
+    >>> deltas = [0, 0, 0, 0, 0, 800.0]
+    >>> order, c = choose_arrival_order(6, 1, 1 << 20, PAPER_10GE, deltas)
+    >>> c <= skewed_schedule_cost(build_generalized(6, 1), 1 << 20,
+    ...                           PAPER_10GE, deltas)
+    True
+    >>> sorted(order)
+    [0, 1, 2, 3, 4, 5]
+    """
+    base = build_generalized(P, r)
+    deltas = [float(d) for d in deltas_us]
+    if len(deltas) != P:
+        raise ShapeError("choose_arrival_order needs one delta per device",
+                         expected=P, actual=len(deltas))
+
+    def cost(order):
+        return skewed_schedule_cost(base, m, f,
+                                    [deltas[p] for p in order],
+                                    itemsize, monoid)
+
+    asc = tuple(sorted(range(P), key=lambda p: (deltas[p], p)))
+    best = min((tuple(range(P)), asc, tuple(reversed(asc))), key=cost)
+    best_c = cost(best)
+    for _ in range(max(int(sweeps), 0)):
+        improved = False
+        for i in range(P):
+            for j in range(i + 1, P):
+                cand = list(best)
+                cand[i], cand[j] = cand[j], cand[i]
+                c = cost(tuple(cand))
+                if c < best_c * (1.0 - 1e-12):
+                    best, best_c, improved = tuple(cand), c, True
+        if not improved:
+            break
+    return best, best_c
 
 
 # ---------------------------------------------------------------------------

@@ -94,6 +94,73 @@ class MixedRadixGroup:
         return f"MixedRadixGroup({self.describe()})"
 
 
+@dataclass(frozen=True)
+class RelabeledGroup:
+    """A :class:`MixedRadixGroup` acting through a device relabeling.
+
+    ``relabel[j]`` is the physical device standing at logical position
+    ``j`` of the base group's enumeration.  Element arithmetic (compose /
+    inverse, i.e. everything the schedule compiler reasons about) is the
+    base group's unchanged; only the *action* on device ranks is
+    conjugated: ``apply(g, p) = relabel[base.apply(g, relabel^-1[p])]``.
+    Conjugation preserves every group law, so a schedule compiled over a
+    relabeled group is the same symbolic object replayed on permuted
+    devices -- this is how the skew-sorted allreduce assigns late
+    arrivals to forgiving positions without touching the compiler.
+
+    >>> g = RelabeledGroup(CyclicGroup(4), (2, 0, 3, 1))
+    >>> g.order, g.inverse(3), g.compose(1, 2)   # element arithmetic: base
+    (4, 1, 3)
+    >>> g.apply(1, 2)   # device 2 is logical 0; t_1 -> logical 1 = device 0
+    0
+    >>> sorted(g.perm(1)) == [0, 1, 2, 3]        # still a permutation
+    True
+    """
+
+    base: MixedRadixGroup
+    relabel: Tuple[int, ...]
+
+    def __post_init__(self):
+        if sorted(self.relabel) != list(range(self.base.order)):
+            raise ValueError(
+                f"relabel {self.relabel} is not a permutation of "
+                f"0..{self.base.order - 1}")
+
+    @property
+    def order(self) -> int:
+        return self.base.order
+
+    @property
+    def radices(self) -> Tuple[int, ...]:
+        return self.base.radices
+
+    def logical(self, p: int) -> int:
+        """Logical position of physical device ``p`` (relabel^-1)."""
+        return self.relabel.index(p)
+
+    def compose(self, a: int, b: int) -> int:
+        return self.base.compose(a, b)
+
+    def inverse(self, a: int) -> int:
+        return self.base.inverse(a)
+
+    def apply(self, g: int, p: int) -> int:
+        return self.relabel[self.base.apply(g, self.logical(p))]
+
+    def perm(self, g: int):
+        return [self.apply(g, p) for p in range(self.order)]
+
+    @property
+    def is_cyclic(self) -> bool:
+        return self.base.is_cyclic
+
+    def describe(self) -> str:
+        return f"{self.base.describe()}@{','.join(map(str, self.relabel))}"
+
+    def __repr__(self):  # pragma: no cover - cosmetic
+        return f"RelabeledGroup({self.describe()})"
+
+
 def CyclicGroup(P: int) -> MixedRadixGroup:
     """The cyclic group T_P with generator c = (1 2 ... P-1 0).
 

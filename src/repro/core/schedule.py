@@ -44,7 +44,8 @@ from dataclasses import dataclass
 from functools import lru_cache
 from typing import Dict, FrozenSet, List, Optional, Tuple
 
-from .group import CyclicGroup, HypercubeGroup, MixedRadixGroup
+from .group import (CyclicGroup, HypercubeGroup, MixedRadixGroup,
+                    RelabeledGroup)
 
 
 class InvalidScheduleError(ValueError):
@@ -494,6 +495,62 @@ def build_generalized(P: int, r: int = 0,
     return sched
 
 
+# bounded: keyed by the relabeling permutation, whose cardinality is
+# unbounded when arrival patterns drift in a long-lived process
+@lru_cache(maxsize=512)
+def build_sorted_generalized(P: int, r: int = 0,
+                             order: Optional[Tuple[int, ...]] = None
+                             ) -> Schedule:
+    """The generalized allreduce over an arrival-sorted rank order.
+
+    ``order[j]`` is the physical device assigned to logical position
+    ``j`` of the cyclic enumeration -- the arrival-pattern-aware
+    relabeling (Proficz, arXiv:1804.05349): devices whose data shows up
+    early sit at the positions whose rows feed the combine tree first,
+    late devices at positions whose lateness the schedule's own slack
+    absorbs (see :func:`repro.core.cost_model.choose_arrival_order`).
+
+    The compiled object is *structurally identical* to
+    ``build_generalized(P, r)`` -- same steps, same traffic, same
+    symbolic verification -- acting through a
+    :class:`repro.core.group.RelabeledGroup`, so every executor
+    (simulator, ExecPlan, shard_map) replays it unchanged and the result
+    stays bit-exact: the relabeling only permutes *which device* plays
+    which role.
+
+    >>> s = build_sorted_generalized(6, r=1, order=(2, 0, 5, 1, 4, 3))
+    >>> s.kind, s.n_steps, s.units_sent, s.s
+    ('sorted', 5, 12, 2)
+    >>> base = build_generalized(6, r=1)
+    >>> [st.tx_rows for st in s.steps] == [st.tx_rows for st in base.steps]
+    True
+    """
+    if P < 1:
+        raise InvalidScheduleError("P must be >= 1")
+    if order is None:
+        order = tuple(range(P))
+    order = tuple(int(x) for x in order)
+    if sorted(order) != list(range(P)):
+        raise InvalidScheduleError(
+            f"order {order} is not a permutation of 0..{P - 1}")
+    g = RelabeledGroup(CyclicGroup(P), order)
+    b = _Builder(g)
+    if P == 1:
+        sched = Schedule(P=P, group=g, kind="sorted", r=0, s=1,
+                         steps=(), initial_slots=b.initial_slots,
+                         final_slots=b.initial_slots)
+        _verify(sched)
+        return sched
+    s = result_multiplicity(P, r)
+    _reduction_phase(b, s)
+    _distribution_phase(b, r)
+    sched = Schedule(P=P, group=g, kind="sorted", r=r, s=s,
+                     steps=tuple(b.steps), initial_slots=b.initial_slots,
+                     final_slots=tuple(b.rows))
+    _verify(sched)
+    return sched
+
+
 @lru_cache(maxsize=None)
 def build_reduce_scatter(P: int, group_kind: str = "cyclic") -> Schedule:
     """Reduction phase only (s=1): every device ends with one fully reduced
@@ -616,7 +673,8 @@ def _verify(sched: Schedule, expect_final_rows: Optional[int] = None,
     """Structural checks; numeric equivalence is covered by the simulator."""
     P = sched.P
     full = frozenset(range(P))
-    if expect_final_rows is None and sched.kind in ("generalized", "ring"):
+    if expect_final_rows is None and sched.kind in ("generalized", "ring",
+                                                    "sorted"):
         expect_final_rows = P
     if expect_final_rows is not None and len(sched.final_slots) != expect_final_rows:
         raise InvalidScheduleError(
@@ -624,7 +682,7 @@ def _verify(sched: Schedule, expect_final_rows: Optional[int] = None,
     for sl in sched.final_slots:
         if sl.content != full:
             raise InvalidScheduleError(f"final slot {sl} not fully reduced")
-    if sched.kind in ("generalized", "ring"):
+    if sched.kind in ("generalized", "ring", "sorted"):
         places = sorted(s.place for s in sched.final_slots)
         if places != list(range(P)):
             raise InvalidScheduleError(f"final placements {places} incomplete")
@@ -694,9 +752,17 @@ def _place_chunk_table(sched: Schedule):
     built only for the places actually used (O(P) per place), so large
     flattened device indexes never materialize an O(P^2) action table.
     Cached per schedule: the key set is the small set of compiled
-    schedules, each entry O(n_places * P)."""
+    schedules, each entry O(n_places * P).
+
+    A :class:`repro.core.group.RelabeledGroup` acts through its device
+    relabeling pi: tbl'[e][p] = pi[tbl_base[e][pi^-1[p]]] -- the base
+    group's vectorized digit arithmetic composed with the permutation,
+    never an O(P^2) action table."""
     import numpy as np
     g = sched.group
+    relabel = getattr(g, "relabel", None)
+    if relabel is not None:
+        g = g.base
     P = g.order
     x = np.arange(P, dtype=np.int64)
     digs = []
@@ -708,12 +774,18 @@ def _place_chunk_table(sched: Schedule):
     tx_places, add_places = step_place_tables(sched)
     needed = sorted({e for places in tx_places + add_places
                      for e in places})
+    if relabel is not None:
+        pi = np.asarray(relabel, dtype=np.int64)
+        pi_inv = np.empty(P, dtype=np.int64)
+        pi_inv[pi] = np.arange(P, dtype=np.int64)
     out = {}
     for e in needed:
         diff = (digs - digs[e]) % radices                    # (P, n)
         idx = np.zeros(P, dtype=np.int64)
         for k, r in enumerate(g.radices):
             idx = idx * r + diff[:, k]
+        if relabel is not None:
+            idx = pi[idx[pi_inv]]
         idx.setflags(write=False)
         out[e] = idx
     return out

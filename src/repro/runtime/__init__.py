@@ -1,0 +1,24 @@
+"""Fault-tolerant elastic runtime.
+
+Two execution tiers live here:
+
+* :mod:`repro.runtime.elastic` -- the in-process tier: one JAX process,
+  ``ElasticRunner`` owning the (mesh, step-bundle, state) triple with
+  straggler watch, checkpointing, and elastic ``resize``.
+* :mod:`repro.runtime.coordinator` / :mod:`repro.runtime.worker` -- the
+  multi-process tier: a coordinator process spawning one OS process per
+  rank, relaying the compiled schedule's per-step messages over TCP
+  (:mod:`repro.runtime.protocol`), detecting worker death through the
+  heartbeat/step-barrier protocol, and recovering by restoring the last
+  valid checkpoint and recompiling the collective for the survivor
+  count -- any count, including primes, which is exactly what the
+  generalized allreduce buys (a power-of-two-only schedule family would
+  force spares or padding here).
+
+Deterministic fault injection for both tiers is in
+:mod:`repro.runtime.faults` (``REPRO_FAULTS`` env var).
+"""
+
+from .faults import Fault, FaultPlan, parse_faults
+
+__all__ = ["Fault", "FaultPlan", "parse_faults"]

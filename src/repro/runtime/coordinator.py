@@ -1,0 +1,480 @@
+"""Multi-process coordinator: spawn, step-barrier, relay, recover.
+
+The coordinator owns a mesh of single-rank worker subprocesses
+(:mod:`repro.runtime.worker`) connected over TCP in a star topology and
+drives data-parallel training through a per-step protocol:
+
+1. **barrier** -- broadcast ``step`` to every worker (carrying a new
+   schedule spec when the collective was re-chosen);
+2. **relay**   -- for each compiled
+   :class:`~repro.core.schedule.CommStep`, collect every rank's TX rows,
+   route each payload to ``perm[src]`` under the step's shift
+   permutation, and forward; the first collect of every step timestamps
+   each rank's arrival (:class:`repro.obs.skew.ArrivalRecorder`), which
+   is the live feed for skew-aware schedule selection;
+3. **commit**  -- collect ``step_done`` from every rank, check the
+   losses agree across the mesh to association-order tolerance (each
+   rank reduces along a different combine tree, so only the last ulps
+   may differ), record rank 0's as canonical, checkpoint on schedule.
+
+**Failure handling.** A worker death surfaces as a dead socket (instant)
+or as a barrier timeout, probed by ping/pong with configurable
+retry/backoff (:class:`CoordinatorConfig`).  Recovery is the full arc
+the generalized allreduce makes cheap: mark the dead rank, restore the
+newest *valid* checkpoint (content-checksummed -- a torn post-commit
+write is skipped and quarantined), re-rank the survivors ``0..P'-1``,
+recompile the schedule for the survivor count ``P'`` -- any count,
+including primes, with no padding or spares -- and resume.  Replayed
+steps are deterministic, so a recovered run's losses are bit-identical
+to a clean run launched at ``P'`` from the same checkpoint.
+
+**Skew awareness.**  With ``sort_on_skew`` enabled, a step whose
+measured arrival spread clears ``skew_threshold_us`` re-runs schedule
+selection through :func:`repro.core.autotune.choose` with the live
+deltas; under heavy skew the choice legitimately flips to a higher-``r``
+(latency-leaning) schedule or to the arrival-sorted relabeling, and the
+new spec ships with the next step barrier.
+"""
+from __future__ import annotations
+
+import os
+import select
+import socket
+import subprocess
+import sys
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.autotune import Choice, choose
+from repro.core.cost_model import HOST_CPU
+from repro.core.schedule import Schedule
+from repro.obs import trace as obs_trace
+from repro.obs.log import get_logger
+from repro.obs.skew import ArrivalRecorder
+
+from .faults import FaultPlan, parse_faults
+from .protocol import ProtocolError, pack_rows, recv_msg, send_msg, unpack_rows
+from .worker import build_schedule
+
+_log = get_logger("repro.runtime.coordinator")
+
+
+@dataclass
+class CoordinatorConfig:
+    P: int
+    ckpt_dir: str
+    dim: int = 32
+    batch: int = 8
+    lr: float = 0.1
+    seed: int = 0
+    ckpt_every: int = 5
+    min_P: int = 2
+    resume: bool = False  # restore the latest valid checkpoint at start
+    # barrier/heartbeat: wait step_timeout_s, then ping and wait
+    # step_timeout_s * backoff**attempt, up to `retries` pings, before
+    # declaring the silent workers dead
+    step_timeout_s: float = 30.0
+    retries: int = 2
+    backoff: float = 1.5
+    # schedule selection: None -> autotune.choose on the gradient
+    # message size; an explicit (kind, r[, order]) pins it (tests,
+    # benchmarks).  A pinned sorted order that no longer fits the mesh
+    # (recovery changed P) falls back to choose().
+    schedule_kind: Optional[str] = None
+    schedule_r: int = 0
+    schedule_order: Optional[Tuple[int, ...]] = None
+    sort_on_skew: bool = False
+    skew_threshold_us: float = 1000.0
+    faults: Optional[str] = None  # spec string; None -> REPRO_FAULTS env
+
+
+@dataclass
+class _Handle:
+    wid: int  # launch id (never reused; faults key on it)
+    rank: int  # current mesh rank (re-assigned on recovery)
+    proc: subprocess.Popen
+    sock: socket.socket
+    alive: bool = True
+
+
+class DeadWorker(Exception):
+    """One or more workers died or stopped answering pings."""
+
+    def __init__(self, wids: List[int]):
+        super().__init__(f"dead workers: {wids}")
+        self.wids = wids
+
+
+@dataclass
+class Recovery:
+    """One completed recovery arc (surfaced in results / regression gate)."""
+
+    failed_wids: Tuple[int, ...]
+    at_step: int  # step being executed when death was detected
+    restored_step: int  # step the surviving mesh resumed from
+    new_P: int
+    recovery_steps: int = field(init=False)  # re-executed steps
+
+    def __post_init__(self):
+        self.recovery_steps = self.at_step - self.restored_step
+
+
+class Coordinator:
+    """Drives a worker mesh; see the module docstring for the protocol."""
+
+    def __init__(self, cfg: CoordinatorConfig):
+        if cfg.P < 2:
+            raise ValueError("coordinator needs P >= 2 workers")
+        self.cfg = cfg
+        spec = cfg.faults if cfg.faults is not None else \
+            os.environ.get("REPRO_FAULTS", "")
+        # the coordinator owns only the checkpoint-tearing faults;
+        # kill/delay ship to the workers via their environment
+        self.faults = FaultPlan(tuple(
+            f for f in parse_faults(spec) if f.kind == "ckpt_torn"))
+        self._worker_faults = spec
+        self.workers: List[_Handle] = []
+        self.records: List[dict] = []
+        self.recoveries: List[Recovery] = []
+        self.step = 0
+        self.w = np.zeros(cfg.dim)
+        self._listener: Optional[socket.socket] = None
+        self._choice: Optional[Choice] = None
+        self._resched: Optional[dict] = None  # spec to ship next barrier
+        self._sched: Optional[Schedule] = None
+
+    # ------------------------------------------------------------ schedule
+    @property
+    def _nbytes(self) -> int:
+        return (self.cfg.dim + 1) * 8  # grad ++ loss, float64
+
+    def _schedule_spec(self, P: int,
+                       deltas_us: Optional[List[float]] = None) -> dict:
+        cfg = self.cfg
+        if cfg.schedule_kind is not None and deltas_us is None:
+            if cfg.schedule_kind != "sorted":
+                return {"kind": cfg.schedule_kind, "P": P,
+                        "r": cfg.schedule_r}
+            if cfg.schedule_order is not None \
+                    and len(cfg.schedule_order) == P:
+                return {"kind": "sorted", "P": P, "r": cfg.schedule_r,
+                        "order": list(cfg.schedule_order)}
+        ch = choose(P, self._nbytes, HOST_CPU, tune=False, itemsize=8,
+                    arrival_deltas_us=deltas_us)
+        spec = {"kind": ch.kind, "P": P, "r": ch.r}
+        if ch.order is not None:
+            spec["order"] = list(ch.order)
+        self._choice = ch
+        return spec
+
+    # --------------------------------------------------------------- start
+    def start(self) -> None:
+        cfg = self.cfg
+        if cfg.resume:
+            try:
+                from repro.checkpoint.checkpoint import restore
+                step, out = restore(cfg.ckpt_dir,
+                                    {"params": {"w": self.w}})
+                self.step, self.w = step, out["params"]["w"]
+            except FileNotFoundError:
+                pass
+        self._listener = socket.socket()
+        self._listener.bind(("127.0.0.1", 0))
+        self._listener.listen(cfg.P)
+        port = self._listener.getsockname()[1]
+        import repro
+        src = os.path.dirname(os.path.dirname(os.path.abspath(
+            repro.__file__)))
+        env = dict(os.environ)
+        env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+        env["REPRO_FAULTS"] = self._worker_faults
+        env.setdefault("JAX_PLATFORMS", "cpu")
+        procs = {}
+        for wid in range(cfg.P):
+            procs[wid] = subprocess.Popen(
+                [sys.executable, "-m", "repro.runtime.worker",
+                 "--port", str(port), "--id", str(wid)],
+                env=env)
+        deadline = time.monotonic() + cfg.step_timeout_s * (cfg.retries + 1)
+        for _ in range(cfg.P):
+            self._listener.settimeout(max(0.1, deadline - time.monotonic()))
+            sock, _ = self._listener.accept()
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            hello, _ = recv_msg(sock)
+            wid = int(hello["id"])
+            self.workers.append(_Handle(wid=wid, rank=wid,
+                                        proc=procs[wid], sock=sock))
+        self.workers.sort(key=lambda h: h.wid)
+        spec = self._schedule_spec(cfg.P)
+        self._sched = build_schedule(spec)
+        for h in self.workers:
+            send_msg(h.sock, self._init_header(h.rank, cfg.P, spec),
+                     pack_rows([self.w]))
+        self._collect("ready")
+        _log.info("mesh_up", P=cfg.P, port=port,
+                  schedule=f"{spec['kind']},r={spec['r']}")
+
+    def _init_header(self, rank: int, P: int, spec: dict,
+                     reconfig: bool = False) -> dict:
+        return {"type": "reconfig" if reconfig else "init",
+                "rank": rank, "P": P, "step": self.step,
+                "seed": self.cfg.seed, "dim": self.cfg.dim,
+                "batch": self.cfg.batch, "lr": self.cfg.lr,
+                "schedule": spec}
+
+    # ------------------------------------------------------------- collect
+    def _alive(self) -> List[_Handle]:
+        return [h for h in self.workers if h.alive]
+
+    def _collect(self, want: str, cstep: Optional[int] = None,
+                 recorder: Optional[ArrivalRecorder] = None
+                 ) -> Dict[int, Tuple[dict, bytes]]:
+        """One frame of type ``want`` from every alive worker.
+
+        Unexpected types are discarded (stale TX of an abandoned step,
+        late pongs); a closed socket or an exhausted ping/retry budget
+        raises :class:`DeadWorker` with the guilty launch ids.
+        """
+        cfg = self.cfg
+        pending = {h.sock: h for h in self._alive()}
+        out: Dict[int, Tuple[dict, bytes]] = {}
+        dead: List[int] = []
+        attempt = 0
+        deadline = time.monotonic() + cfg.step_timeout_s
+        while pending:
+            wait = deadline - time.monotonic()
+            if wait <= 0:
+                if attempt >= cfg.retries:
+                    raise DeadWorker(dead + [h.wid
+                                             for h in pending.values()])
+                attempt += 1
+                for h in pending.values():
+                    try:
+                        send_msg(h.sock, {"type": "ping"})
+                    except OSError:
+                        pass
+                deadline = (time.monotonic()
+                            + cfg.step_timeout_s * cfg.backoff ** attempt)
+                continue
+            readable, _, _ = select.select(list(pending), [], [], wait)
+            for sock in readable:
+                h = pending[sock]
+                try:
+                    header, payload = recv_msg(sock)
+                except (ProtocolError, OSError):
+                    dead.append(h.wid)
+                    del pending[sock]
+                    continue
+                t = header["type"]
+                if t != want:
+                    continue  # pong / stale frame of an abandoned step
+                if cstep is not None and header.get("cstep") != cstep:
+                    continue
+                if recorder is not None:
+                    recorder.record(h.rank)
+                out[h.rank] = (header, payload)
+                del pending[sock]
+        if dead:
+            raise DeadWorker(dead)
+        return out
+
+    # ---------------------------------------------------------------- step
+    def _one_step(self) -> None:
+        cfg = self.cfg
+        s = self.step
+        ship_ckpt = (s + 1) % cfg.ckpt_every == 0
+        alive = self._alive()
+        P = len(alive)
+        header = {"type": "step", "step": s}
+        if self._resched is not None:
+            header["schedule"] = self._resched
+            self._sched = build_schedule(self._resched)
+            self._resched = None
+        for h in alive:
+            hd = dict(header)
+            if ship_ckpt and h.rank == 0:
+                hd["ship_params"] = True
+            send_msg(h.sock, hd)
+        rec = ArrivalRecorder()
+        with obs_trace.span("coord.step", cat="runtime", step=s,
+                            P=P) as sp:
+            for i, st in enumerate(self._sched.steps):
+                txs = self._collect("tx", cstep=i,
+                                    recorder=rec if i == 0 else None)
+                perm = self._sched.group.perm(st.shift)
+                by_rank = {h.rank: h for h in alive}
+                for src, (_, payload) in txs.items():
+                    send_msg(by_rank[perm[src]].sock,
+                             {"type": "rx", "step": s, "cstep": i},
+                             payload)
+            done = self._collect("step_done")
+            losses = {r: float.fromhex(h["loss"])
+                      for r, (h, _) in done.items()}
+            # ranks reduce each chunk along different combine trees, so
+            # cross-rank losses agree only to association order (last
+            # ulps); rank 0 is canonical, gross disagreement is a bug
+            loss = losses[0]
+            spread = max(losses.values()) - min(losses.values())
+            if spread > 1e-9 * max(1.0, abs(loss)):
+                raise RuntimeError(
+                    f"step {s}: loss disagreement across ranks: {losses}")
+            stats = rec.stats()
+            sp.set(loss=round(loss, 6), skew_us=stats.skew_us)
+        obs_trace.get_tracer().counter("coord_arrival_skew_us",
+                                       stats.skew_us, cat="runtime")
+        if ship_ckpt:
+            (w,) = unpack_rows(done[0][1])
+            self.w = w
+            self._checkpoint(s + 1, P)
+        self.records.append({"step": s, "loss": loss, "P": P,
+                             "skew_us": stats.skew_us,
+                             "schedule": self._spec_label()})
+        self.step = s + 1
+        if cfg.sort_on_skew and stats.skew_us >= cfg.skew_threshold_us \
+                and len(stats.deltas_us) == P:
+            spec = self._schedule_spec(P, deltas_us=list(stats.deltas_us))
+            if spec != self._current_spec(P):
+                _log.info("skew_reschedule", step=s,
+                          skew_us=stats.skew_us,
+                          to=f"{spec['kind']},r={spec['r']}")
+                self._resched = spec
+
+    def _current_spec(self, P: int) -> dict:
+        sch = self._sched
+        spec = {"kind": sch.kind, "P": P, "r": sch.r}
+        relabel = getattr(sch.group, "relabel", None)
+        if relabel is not None:
+            spec["order"] = list(relabel)
+        return spec
+
+    def _spec_label(self) -> str:
+        spec = self._current_spec(self._sched.P)
+        label = f"{spec['kind']},r={spec['r']}"
+        if "order" in spec:
+            label += ",order=" + "-".join(map(str, spec["order"]))
+        return label
+
+    # ----------------------------------------------------------- recovery
+    def _checkpoint(self, step: int, P: int) -> None:
+        from repro.checkpoint.checkpoint import save
+        with obs_trace.span("coord.checkpoint", cat="runtime", step=step):
+            d = save(self.cfg.ckpt_dir, step, {"params": {"w": self.w}},
+                     meta={"P": P, "dim": self.cfg.dim,
+                           "seed": self.cfg.seed})
+        if self.faults.fire("ckpt_torn", step) is not None:
+            for fn in sorted(os.listdir(d)):
+                if fn.endswith(".npy"):
+                    p = os.path.join(d, fn)
+                    with open(p, "r+b") as f:
+                        f.truncate(os.path.getsize(p) // 2)
+                    _log.warn("fault_ckpt_torn", step=step, file=fn)
+                    break
+
+    def _mark_dead(self, wids: List[int]) -> None:
+        for h in self.workers:
+            if h.wid in wids and h.alive:
+                h.alive = False
+                try:
+                    h.sock.close()
+                except OSError:
+                    pass
+                h.proc.kill()
+                h.proc.wait()
+                obs_trace.get_tracer().instant(
+                    "worker_dead", cat="runtime", wid=h.wid,
+                    step=self.step)
+                _log.warn("worker_dead", wid=h.wid, step=self.step)
+
+    def _recover(self) -> None:
+        """Restore-from-checkpoint + re-rank + recompile for P-1.
+
+        May raise :class:`DeadWorker` again if another worker dies while
+        being reconfigured; the run loop marks it and retries.
+        """
+        cfg = self.cfg
+        at_step = self.step
+        survivors = self._alive()
+        if len(survivors) < cfg.min_P:
+            raise RuntimeError(
+                f"only {len(survivors)} workers left (min_P={cfg.min_P})")
+        from repro.checkpoint.checkpoint import restore
+        try:
+            restored_step, out = restore(cfg.ckpt_dir,
+                                         {"params": {"w": self.w}})
+            self.w = out["params"]["w"]
+        except FileNotFoundError:  # death before the first checkpoint
+            restored_step = 0
+            self.w = np.zeros(cfg.dim)
+        new_P = len(survivors)
+        with obs_trace.span("coord.recover", cat="runtime",
+                            at_step=at_step, new_P=new_P,
+                            restored_step=restored_step):
+            self.step = restored_step
+            spec = self._schedule_spec(new_P)
+            self._sched = build_schedule(spec)
+            self._resched = None
+            for new_rank, h in enumerate(survivors):
+                h.rank = new_rank
+                send_msg(h.sock,
+                         self._init_header(new_rank, new_P, spec,
+                                           reconfig=True),
+                         pack_rows([self.w]))
+            self._collect("ready")
+        rec = Recovery(failed_wids=tuple(h.wid for h in self.workers
+                                         if not h.alive),
+                       at_step=at_step, restored_step=restored_step,
+                       new_P=new_P)
+        self.recoveries.append(rec)
+        _log.info("recovered", new_P=new_P, restored_step=restored_step,
+                  recovery_steps=rec.recovery_steps)
+
+    # ------------------------------------------------------------ run/stop
+    def run(self, n_steps: int) -> List[dict]:
+        """Train until ``self.step == n_steps``, recovering as needed."""
+        while self.step < n_steps:
+            try:
+                self._one_step()
+            except DeadWorker as e:
+                self._mark_dead(e.wids)
+                while True:
+                    try:
+                        self._recover()
+                        break
+                    except DeadWorker as e2:
+                        self._mark_dead(e2.wids)
+        return self.records
+
+    def final_losses(self) -> Dict[int, float]:
+        """Per-step loss, last execution wins (recovery re-runs steps)."""
+        return {r["step"]: r["loss"] for r in self.records}
+
+    def close(self) -> None:
+        for h in self.workers:
+            if h.alive:
+                try:
+                    send_msg(h.sock, {"type": "stop"})
+                except OSError:
+                    pass
+        for h in self.workers:
+            try:
+                h.proc.wait(timeout=10)
+            except subprocess.TimeoutExpired:
+                h.proc.kill()
+                h.proc.wait()
+            try:
+                h.sock.close()
+            except OSError:
+                pass
+        if self._listener is not None:
+            self._listener.close()
+            self._listener = None
+
+    def __enter__(self) -> "Coordinator":
+        self.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

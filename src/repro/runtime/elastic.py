@@ -44,6 +44,48 @@ class StragglerAlert(RuntimeError):
 
 
 @dataclass
+class StragglerWatch:
+    """Per-step wall-time EWMA with outlier-robust folding.
+
+    A step slower than ``factor`` x the EWMA alerts.  The alerting
+    step's time is folded into the baseline *clamped* to
+    ``factor * ewma`` -- folding the raw outlier in (the old behavior)
+    inflates the threshold so one slow step masks the next straggler,
+    while excluding it entirely would make a genuine regime change
+    alert forever.  Clamped folding keeps one-off spikes from moving
+    the baseline yet still converges onto a persistent slowdown in a
+    few steps.
+
+    >>> w = StragglerWatch(factor=3.0, decay=0.9)
+    >>> [w.observe(0.1) for _ in range(5)]
+    [False, False, False, False, False]
+    >>> w.observe(2.0)                  # 20x the baseline: alert
+    True
+    >>> w.observe(0.8)                  # next straggler is NOT masked
+    True
+    >>> sum(w.observe(1.0) for _ in range(30)) < 30  # regime change adapts
+    True
+    """
+
+    factor: float = 3.0
+    decay: float = 0.9
+    warmup: int = 3  # observations before alerting can start
+    value: Optional[float] = None  # current EWMA baseline (seconds)
+    n: int = 0
+
+    def observe(self, dt: float) -> bool:
+        """Fold one step time into the baseline; True iff it alerts."""
+        self.n += 1
+        if self.value is None:
+            self.value = dt
+            return False
+        alerted = self.n > self.warmup and dt > self.factor * self.value
+        folded = min(dt, self.factor * self.value) if alerted else dt
+        self.value = self.decay * self.value + (1 - self.decay) * folded
+        return alerted
+
+
+@dataclass
 class ElasticConfig:
     ckpt_dir: str
     ckpt_every: int = 50
@@ -60,7 +102,8 @@ class ElasticRunner:
                  mesh_shape, axes=("data", "model"), devices=None, seed=0):
         self.cfg, self.oc, self.ec, self.dc = cfg, oc, ec, dc
         self.ckpt = AsyncCheckpointer(ec.ckpt_dir)
-        self.step_time_ewma: Optional[float] = None
+        self.watch = StragglerWatch(factor=ec.straggler_factor,
+                                    decay=ec.ewma)
         self.alerts: list = []
         self.step = 0
         self._build(mesh_shape, axes, devices, seed, fresh=True)
@@ -128,21 +171,20 @@ class ElasticRunner:
                         meta={"dp": self.pc.dp, "tp": self.pc.tp})
         return metrics_log
 
+    @property
+    def step_time_ewma(self) -> Optional[float]:
+        return self.watch.value
+
     def _watch_straggler(self, dt: float):
-        if self.step_time_ewma is None:
-            self.step_time_ewma = dt
-            return
-        if dt > self.ec.straggler_factor * self.step_time_ewma \
-                and self.step > 2:
-            self.alerts.append((self.step, dt, self.step_time_ewma))
+        baseline = self.watch.value
+        if self.watch.observe(dt):
+            self.alerts.append((self.step, dt, baseline))
             _log.warn("straggler", step=self.step, dt_s=round(dt, 4),
-                      ewma_s=round(self.step_time_ewma, 4),
+                      ewma_s=round(baseline, 4),
                       factor=self.ec.straggler_factor)
             obs_trace.get_tracer().instant(
                 "straggler", cat="train", step=self.step,
                 dt_us=round(dt * 1e6, 1))
-        self.step_time_ewma = (self.ec.ewma * self.step_time_ewma
-                               + (1 - self.ec.ewma) * dt)
 
     # --------------------------------------------------------- recovery
     def restore_latest(self):

@@ -1,0 +1,129 @@
+"""Deterministic fault injection for the elastic runtime.
+
+Faults are declared up front -- in code or via the ``REPRO_FAULTS`` env
+var -- and fire at exact (kind, worker, step) coordinates, so a chaos
+run is a *reproducible experiment*: the same spec produces the same
+failure at the same point of the same training run every time.  The
+chaos CI job and the recovery tests are built on this.
+
+Spec syntax (``;``-separated clauses, each ``kind:key=value,...``)::
+
+    kill:rank=1,step=3;delay:rank=2,step=4,us=5000;ckpt_torn:step=5
+
+* ``kill``      -- worker ``rank`` exits hard (``os._exit``) at the
+  start of training step ``step``, before sending anything: the
+  coordinator sees a dead socket mid-barrier.
+* ``delay``     -- worker ``rank`` sleeps ``us`` microseconds before
+  its first send of step ``step``: a deterministic straggler, visible
+  to the coordinator's arrival-skew telemetry.
+* ``ckpt_torn`` -- the coordinator truncates a leaf file of the
+  checkpoint committed *as* step ``step`` right after writing it: a
+  torn-after-commit write, which only the content checksums of
+  :mod:`repro.checkpoint.checkpoint` can catch.
+
+``rank`` in a spec always means the worker's *original* id at launch:
+recovery re-ranks survivors, and a fault that silently re-targeted a
+different process after a resize would not be reproducible.
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+KINDS = ("kill", "delay", "ckpt_torn")
+_REQUIRED: Dict[str, Tuple[str, ...]] = {
+    "kill": ("rank", "step"),
+    "delay": ("rank", "step", "us"),
+    "ckpt_torn": ("step",),
+}
+
+
+@dataclass(frozen=True)
+class Fault:
+    """One scheduled fault."""
+
+    kind: str
+    step: int
+    rank: Optional[int] = None  # worker id at launch; None for ckpt_torn
+    us: int = 0  # delay duration (kind == "delay")
+
+
+def parse_faults(spec: str) -> Tuple[Fault, ...]:
+    """Parse a ``REPRO_FAULTS`` spec string.
+
+    >>> parse_faults("kill:rank=1,step=3;ckpt_torn:step=5")
+    (Fault(kind='kill', step=3, rank=1, us=0), \
+Fault(kind='ckpt_torn', step=5, rank=None, us=0))
+    >>> parse_faults("delay:rank=0,step=2,us=7000")[0].us
+    7000
+    >>> parse_faults("")
+    ()
+    >>> parse_faults("explode:step=1")
+    Traceback (most recent call last):
+        ...
+    ValueError: unknown fault kind 'explode' (expected one of kill, \
+delay, ckpt_torn)
+    >>> parse_faults("kill:step=3")
+    Traceback (most recent call last):
+        ...
+    ValueError: fault 'kill' requires rank=... in clause 'kill:step=3'
+    """
+    out = []
+    for clause in filter(None, (c.strip() for c in spec.split(";"))):
+        kind, _, args = clause.partition(":")
+        kind = kind.strip()
+        if kind not in KINDS:
+            raise ValueError(f"unknown fault kind {kind!r} "
+                             f"(expected one of {', '.join(KINDS)})")
+        kv = {}
+        for item in filter(None, (a.strip() for a in args.split(","))):
+            k, _, v = item.partition("=")
+            if not _ or k.strip() not in ("rank", "step", "us"):
+                raise ValueError(f"bad fault argument {item!r} "
+                                 f"in clause {clause!r}")
+            kv[k.strip()] = int(v)
+        for req in _REQUIRED[kind]:
+            if req not in kv:
+                raise ValueError(f"fault {kind!r} requires {req}=... "
+                                 f"in clause {clause!r}")
+        out.append(Fault(kind=kind, step=kv["step"], rank=kv.get("rank"),
+                         us=kv.get("us", 0)))
+    return tuple(out)
+
+
+class FaultPlan:
+    """Queryable set of scheduled faults.
+
+    Each fault fires at most once (``pop`` semantics), matching how the
+    real failure it models happens once: a re-executed step after
+    recovery must not re-kill the already-dead worker's successor.
+
+    >>> plan = FaultPlan(parse_faults("kill:rank=1,step=3"))
+    >>> plan.fire("kill", step=3, rank=0) is None
+    True
+    >>> plan.fire("kill", step=3, rank=1).kind
+    'kill'
+    >>> plan.fire("kill", step=3, rank=1) is None   # at most once
+    True
+    """
+
+    def __init__(self, faults: Tuple[Fault, ...] = ()):
+        self._pending = list(faults)
+
+    @classmethod
+    def from_env(cls, var: str = "REPRO_FAULTS") -> "FaultPlan":
+        return cls(parse_faults(os.environ.get(var, "")))
+
+    def fire(self, kind: str, step: int,
+             rank: Optional[int] = None) -> Optional[Fault]:
+        """Pop and return the matching pending fault, else ``None``."""
+        for i, f in enumerate(self._pending):
+            if f.kind == kind and f.step == step and \
+                    (f.rank is None or f.rank == rank):
+                return self._pending.pop(i)
+        return None
+
+    @property
+    def pending(self) -> Tuple[Fault, ...]:
+        return tuple(self._pending)

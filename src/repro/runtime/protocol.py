@@ -1,0 +1,98 @@
+"""Length-prefixed socket framing for the coordinator/worker runtime.
+
+One frame = an 8-byte big-endian prefix (header length, payload length)
+followed by a JSON header and an opaque binary payload.  The header
+carries control fields (message type, step indices, ranks); the payload
+carries row data packed by :func:`pack_rows` -- each row self-describing
+(4-byte element count + little-endian float64 bytes), so a receiver
+never needs out-of-band shape tables to deserialize a step's arrivals.
+
+Everything here is stdlib + numpy: worker processes use it without
+importing the JAX half of the package.
+"""
+from __future__ import annotations
+
+import json
+import socket
+import struct
+from typing import List, Tuple
+
+import numpy as np
+
+_PREFIX = struct.Struct(">II")
+_ROW = struct.Struct(">I")
+
+# a frame whose declared sizes exceed this is treated as stream
+# corruption, not an allocation request (64 MiB of float64 rows is far
+# beyond anything the toy DP worker ships)
+MAX_FRAME_BYTES = 64 << 20
+
+
+class ProtocolError(ConnectionError):
+    """Framing violation: truncated stream or absurd declared length."""
+
+
+def send_msg(sock: socket.socket, header: dict, payload: bytes = b"") -> None:
+    """Write one frame.  ``sendall`` so partial writes never tear it."""
+    h = json.dumps(header, separators=(",", ":")).encode()
+    sock.sendall(_PREFIX.pack(len(h), len(payload)) + h + payload)
+
+
+def recv_msg(sock: socket.socket) -> Tuple[dict, bytes]:
+    """Read one frame; raises :class:`ProtocolError` on EOF/corruption.
+
+    >>> a, b = socket.socketpair()
+    >>> send_msg(a, {"type": "ping", "step": 3})
+    >>> hdr, payload = recv_msg(b)
+    >>> (hdr["type"], hdr["step"], payload)
+    ('ping', 3, b'')
+    >>> a.close(); b.close()
+    """
+    raw = _recv_exact(sock, _PREFIX.size)
+    hlen, plen = _PREFIX.unpack(raw)
+    if hlen + plen > MAX_FRAME_BYTES:
+        raise ProtocolError(f"frame declares {hlen + plen} bytes")
+    header = json.loads(_recv_exact(sock, hlen))
+    payload = _recv_exact(sock, plen) if plen else b""
+    return header, payload
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes:
+    buf = bytearray()
+    while len(buf) < n:
+        got = sock.recv(n - len(buf))
+        if not got:
+            raise ProtocolError(
+                f"connection closed mid-frame ({len(buf)}/{n} bytes)")
+        buf += got
+    return bytes(buf)
+
+
+def pack_rows(rows: List[np.ndarray]) -> bytes:
+    """Serialize float64 rows, each prefixed with its element count.
+
+    >>> rows = [np.arange(3.0), np.array([7.5])]
+    >>> [r.tolist() for r in unpack_rows(pack_rows(rows))]
+    [[0.0, 1.0, 2.0], [7.5]]
+    >>> unpack_rows(b"")
+    []
+    """
+    parts = []
+    for r in rows:
+        a = np.ascontiguousarray(np.asarray(r, dtype="<f8"))
+        parts.append(_ROW.pack(a.size) + a.tobytes())
+    return b"".join(parts)
+
+
+def unpack_rows(buf: bytes) -> List[np.ndarray]:
+    """Inverse of :func:`pack_rows`."""
+    rows, off = [], 0
+    while off < len(buf):
+        (n,) = _ROW.unpack_from(buf, off)
+        off += _ROW.size
+        end = off + n * 8
+        if end > len(buf):
+            raise ProtocolError(f"row declares {n} elems past buffer end")
+        rows.append(np.frombuffer(buf, dtype="<f8", count=n, offset=off).copy())
+        off = end
+    return rows

@@ -1,0 +1,230 @@
+"""One-rank data-parallel worker process for the multi-process runtime.
+
+Launched by :class:`repro.runtime.coordinator.Coordinator` as
+``python -m repro.runtime.worker --host H --port P --id K``.  The worker
+is deliberately *numpy-only at runtime*: it replays the compiled
+:class:`~repro.core.schedule.Schedule` row tables itself -- the same
+symbolic steps the in-process simulator and the shard_map executor run
+-- with the wire replaced by TCP frames relayed through the coordinator
+(star topology: P sockets instead of P^2, and the coordinator gets to
+timestamp every rank's arrival for skew telemetry).
+
+Training is a deterministic least-squares problem: the batch for
+``(seed, P, step, rank)`` is a pure function of those four integers and
+every numpy op runs in a fixed order, so any two runs that agree on
+them -- e.g. a recovered run and a clean run restored from the same
+checkpoint at the same survivor count -- produce bit-identical rank-0
+losses.  Across ranks the schedule reduces each chunk along different
+combine trees, so (float addition being non-associative) rank states
+agree only to the last ulps; the coordinator checks that spread against
+a tight tolerance as a whole-pipeline integrity check and records rank
+0 as canonical.
+
+Fault injection (``REPRO_FAULTS``): ``kill`` exits hard before the
+step's first send; ``delay`` sleeps before it.  Both key on the
+worker's launch id, which survives re-ranking.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import socket
+import time
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core.execplan import final_row_table, initial_row_table
+from repro.core.schedule import (Schedule, build_generalized, build_ring,
+                                 build_sorted_generalized, ragged_offsets,
+                                 ragged_sizes)
+
+from .faults import FaultPlan
+from .protocol import pack_rows, recv_msg, send_msg, unpack_rows
+
+
+def build_schedule(spec: dict) -> Schedule:
+    """Rebuild a schedule from its wire spec ``{kind, P, r, order?}``.
+
+    Both sides compile from the same spec, so the coordinator's routing
+    permutations and the worker's row ops always describe one schedule.
+
+    >>> build_schedule({"kind": "generalized", "P": 5, "r": 1}).n_steps
+    5
+    >>> build_schedule({"kind": "sorted", "P": 4, "r": 0,
+    ...                 "order": [2, 0, 3, 1]}).kind
+    'sorted'
+    """
+    kind, P, r = spec["kind"], int(spec["P"]), int(spec.get("r", 0))
+    if kind == "ring":
+        return build_ring(P)
+    if kind == "sorted":
+        return build_sorted_generalized(P, r, tuple(spec["order"]))
+    return build_generalized(P, r)
+
+
+def local_batch(seed: int, P: int, step: int, rank: int,
+                dim: int, batch: int):
+    """Deterministic per-rank batch: pure function of its coordinates."""
+    rng = np.random.default_rng([seed, P, step, rank])
+    w_star = np.random.default_rng([seed, 999]).standard_normal(dim)
+    X = rng.standard_normal((batch, dim))
+    return X, X @ w_star
+
+
+def grad_and_loss(w: np.ndarray, X: np.ndarray, y: np.ndarray):
+    resid = X @ w - y
+    return X.T @ resid / len(y), 0.5 * float(resid @ resid) / len(y)
+
+
+class _Reconfigure(Exception):
+    """Raised out of a blocked receive when the coordinator reconfigures
+    the mesh mid-step; carries the reconfig header + params payload."""
+
+    def __init__(self, header, payload):
+        super().__init__(header["type"])
+        self.header, self.payload = header, payload
+
+
+class _Stop(Exception):
+    pass
+
+
+class Worker:
+    def __init__(self, sock: socket.socket, wid: int,
+                 faults: Optional[FaultPlan] = None):
+        self.sock = sock
+        self.wid = wid  # launch id: stable across re-ranking, keys faults
+        self.faults = faults if faults is not None else FaultPlan.from_env()
+        self.rank = wid
+        self.P = 0
+        self.step = 0
+        self.sched: Optional[Schedule] = None
+        self.w: Optional[np.ndarray] = None
+
+    # ---------------------------------------------------------- messaging
+    def _next(self, *want: str):
+        """Receive the next frame of an expected type.
+
+        ``ping`` is answered transparently (the coordinator's liveness
+        probe must work even while we block mid-collective); ``reconfig``
+        and ``stop`` unwind whatever step is in flight.
+        """
+        while True:
+            header, payload = recv_msg(self.sock)
+            t = header["type"]
+            if t == "ping":
+                send_msg(self.sock, {"type": "pong", "id": self.wid})
+                continue
+            if t == "reconfig":
+                raise _Reconfigure(header, payload)
+            if t == "stop":
+                raise _Stop()
+            if t in want:
+                return header, payload
+            raise RuntimeError(f"worker {self.wid}: unexpected {t!r}, "
+                               f"wanted {want}")
+
+    # --------------------------------------------------------------- state
+    def _apply_init(self, header: dict, payload: bytes) -> None:
+        self.rank = int(header["rank"])
+        self.P = int(header["P"])
+        self.step = int(header["step"])
+        self.seed = int(header["seed"])
+        self.dim = int(header["dim"])
+        self.batch = int(header["batch"])
+        self.lr = float(header["lr"])
+        self.sched = build_schedule(header["schedule"])
+        (self.w,) = unpack_rows(payload)
+
+    # ----------------------------------------------------------- training
+    def _allreduce(self, vec: np.ndarray) -> np.ndarray:
+        """Replay the schedule with TCP frames as the wire.
+
+        Mirrors :func:`repro.core.simulator._replay` exactly, but holds
+        only this rank's rows: per step, ship the TX rows to the
+        coordinator (which routes them by the step's shift permutation)
+        and build the new row state from residents + arrivals.
+        """
+        sched, d, P = self.sched, self.rank, self.P
+        tbl = initial_row_table(sched)
+        sizes = ragged_sizes(len(vec), P)
+        offs = ragged_offsets(sizes)
+        chunks = [vec[offs[c]:offs[c] + sizes[c]] for c in range(P)]
+        state: List[np.ndarray] = [chunks[tbl[row, d]].copy()
+                                   for row in range(len(sched.initial_slots))]
+        for i, st in enumerate(sched.steps):
+            send_msg(self.sock,
+                     {"type": "tx", "step": self.step, "cstep": i,
+                      "rank": d},
+                     pack_rows([state[ri] for ri in st.tx_rows]))
+            header, payload = self._next("rx")
+            assert header["cstep"] == i, (header, i)
+            arrivals = unpack_rows(payload)
+            new_rows = []
+            for o in st.out:
+                if o.kind == "keep":
+                    new_rows.append(state[o.res])
+                elif o.kind == "recv":
+                    new_rows.append(arrivals[o.arr])
+                else:
+                    new_rows.append(state[o.res] + arrivals[o.arr])
+            state = new_rows
+        ftbl = final_row_table(sched)
+        return np.concatenate([state[ftbl[c, d]] for c in range(P)])
+
+    def _run_step(self, header: dict) -> None:
+        assert header["step"] == self.step, (header, self.step)
+        if "schedule" in header:  # coordinator re-chose (e.g. skew-sorted)
+            self.sched = build_schedule(header["schedule"])
+        f = self.faults.fire("delay", self.step, self.wid)
+        if f is not None:
+            time.sleep(f.us * 1e-6)
+        if self.faults.fire("kill", self.step, self.wid) is not None:
+            os._exit(17)  # hard death: no goodbye frame, no flush
+        X, y = local_batch(self.seed, self.P, self.step, self.rank,
+                           self.dim, self.batch)
+        g, loss = grad_and_loss(self.w, X, y)
+        total = self._allreduce(np.concatenate([g, [loss]]))
+        avg = total / self.P
+        self.w = self.w - self.lr * avg[:-1]
+        done = {"type": "step_done", "step": self.step, "rank": self.rank,
+                "loss": float(avg[-1]).hex()}
+        payload = pack_rows([self.w]) if header.get("ship_params") else b""
+        send_msg(self.sock, done, payload)
+        self.step += 1
+
+    # ------------------------------------------------------------ mainloop
+    def run(self) -> None:
+        try:
+            header, payload = self._next("init")
+            self._apply_init(header, payload)
+            send_msg(self.sock, {"type": "ready", "id": self.wid})
+            while True:
+                try:
+                    header, _ = self._next("step")
+                    self._run_step(header)
+                except _Reconfigure as rc:
+                    self._apply_init(rc.header, rc.payload)
+                    send_msg(self.sock, {"type": "ready", "id": self.wid})
+        except _Stop:
+            pass
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, required=True)
+    ap.add_argument("--id", type=int, required=True)
+    args = ap.parse_args(argv)
+    sock = socket.create_connection((args.host, args.port))
+    sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    send_msg(sock, {"type": "hello", "id": args.id, "pid": os.getpid()})
+    try:
+        Worker(sock, args.id).run()
+    finally:
+        sock.close()
+
+
+if __name__ == "__main__":
+    main()

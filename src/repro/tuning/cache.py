@@ -117,6 +117,12 @@ class Measurement:
     ``skew_us`` is the per-device arrival skew the grid's probe observed
     around this measurement (None where not probed).  v1 rows load with
     all three absent/zero.
+
+    ``deltas_us`` keeps the probe's full per-device arrival profile (one
+    microsecond delta per device, min at 0) behind the scalar
+    ``skew_us``: :func:`repro.tuning.policy.arrival_deltas` feeds it to
+    the skew-aware path of :func:`repro.core.autotune.choose`.  Additive
+    on schema v2 -- rows written before it existed load with ``None``.
     """
 
     P: int
@@ -130,6 +136,7 @@ class Measurement:
     reps_us: Optional[tuple] = None  # per-rep best-of-iters wallclocks
     noise: float = 0.0  # (max - min) / min over reps_us
     skew_us: Optional[float] = None  # device arrival skew near this cell
+    deltas_us: Optional[tuple] = None  # per-device arrival deltas (probe)
 
     @property
     def ragged(self) -> bool:
@@ -140,6 +147,7 @@ class Measurement:
     def from_dict(cls, d: dict) -> "Measurement":
         reps = d.get("reps_us")
         skew = d.get("skew_us")
+        deltas = d.get("deltas_us")
         return cls(
             P=int(d["P"]),
             nbytes=int(d["nbytes"]),
@@ -152,6 +160,7 @@ class Measurement:
             reps_us=tuple(float(x) for x in reps) if reps else None,
             noise=float(d.get("noise", 0.0)),
             skew_us=float(skew) if skew is not None else None,
+            deltas_us=tuple(float(x) for x in deltas) if deltas else None,
         )
 
 

@@ -38,7 +38,8 @@ from repro.obs.log import data, get_logger
 from repro.obs.skew import device_arrival_probe
 
 from .cache import Measurement, TuningCache, current_fingerprint
-from .policy import NOISE_THRESHOLD, unstable_cells
+from .policy import (NOISE_THRESHOLD, SKEW_THRESHOLD_US, skewed_cells,
+                     unstable_cells)
 
 _log = get_logger("repro.tuning.measure")
 
@@ -187,12 +188,17 @@ def run_tuning(
         grid = candidate_grid(n, nbytes, smoke=smoke)
         # arrival-skew telemetry for this message size: how unevenly the
         # devices come ready for one identical dispatch (persisted per
-        # measurement so PAP-aware scheduling has real data to start from)
+        # measurement so PAP-aware scheduling has real data to start from:
+        # the full per-device profile feeds policy.arrival_deltas and from
+        # there the skew-aware path of autotune.choose)
         try:
-            skew_us = device_arrival_probe(nbytes=nbytes).skew_us
+            arr = device_arrival_probe(nbytes=nbytes)
+            skew_us = arr.skew_us
+            deltas_us = arr.deltas_us if len(arr.deltas_us) == n else None
         except Exception as e:  # never let telemetry sink a tuning run
             _log.warn("arrival_probe_failed", size=label, error=repr(e))
             skew_us = None
+            deltas_us = None
         tracer.counter("arrival_skew_us", skew_us if skew_us is not None
                        else 0.0, cat="tuning")
         for op in GRID_OPS:
@@ -231,6 +237,7 @@ def run_tuning(
                     reps_us=reps_us,
                     noise=noise,
                     skew_us=skew_us,
+                    deltas_us=deltas_us,
                 )
                 cache.record(fp, meas)
                 meas_rows.append(asdict(meas))
@@ -268,6 +275,10 @@ def run_tuning(
     if unstable:
         _log.warn("unstable_cells", count=len(unstable),
                   threshold=NOISE_THRESHOLD)
+    skewed = skewed_cells(all_meas)
+    if skewed:
+        _log.warn("skewed_cells", count=len(skewed),
+                  threshold_us=SKEW_THRESHOLD_US)
     payload = {
         "fingerprint": asdict(fp),
         "mode": "smoke" if smoke else "full",
@@ -275,6 +286,8 @@ def run_tuning(
         "cache_path": str(saved),
         "noise_threshold": NOISE_THRESHOLD,
         "unstable_cells": unstable,
+        "skew_threshold_us": SKEW_THRESHOLD_US,
+        "skewed_cells": skewed,
         "notes": (
             "best-of-reps interleaved wallclock per call; candidates are the "
             "executor's own jitted shard_map programs, verified against "

@@ -42,6 +42,12 @@ MAX_EXTRAPOLATION_RATIO = 4.0
 # tuning summary and the metrics snapshot both surface these cells)
 NOISE_THRESHOLD = 0.25
 
+# arrival skew (max - min over the probe's per-device deltas) above this
+# is surfaced in the tuning summary next to unstable_cells: it marks
+# sizes where the barrier cost model is mispricing real dispatches and
+# the skew-aware path of ``choose()`` has something to act on
+SKEW_THRESHOLD_US = 100.0
+
 # (path, mtime_ns, size) -> TuningCache; reloads automatically when the
 # file changes (e.g. after `benchmarks/run.py tune` repopulates it)
 _loaded: Dict[Tuple[str, int, int], TuningCache] = {}
@@ -145,6 +151,79 @@ def unstable_cells(
         if m.noise > threshold
     ]
     flagged.sort(key=lambda c: -c["noise"])
+    return flagged
+
+
+def arrival_deltas(
+    P: int,
+    nbytes: int,
+    *,
+    op: str = "sum",
+    fingerprint: Optional[Fingerprint] = None,
+    cache_path: Optional[os.PathLike] = None,
+) -> Optional[Tuple[float, ...]]:
+    """Per-device arrival deltas (microseconds) the tuning grid's probe
+    recorded nearest to ``nbytes``, or ``None`` when the table has none.
+
+    This is the persisted-telemetry feed of the skew-aware path in
+    :func:`repro.core.autotune.choose`: when a caller enables tuning but
+    passes no live ``arrival_deltas_us``, the deltas measured alongside
+    the nearest-size grid cell (same backend fingerprint, same combine
+    operator, one delta per device) stand in.  Nearest is by log-size
+    distance, capped at ``MAX_EXTRAPOLATION_RATIO`` like every other
+    table answer.
+    """
+    if P <= 1:
+        return None
+    fp = fingerprint if fingerprint is not None else _cached_fingerprint()
+    meas = _load(cache_path).lookup(fp, P)
+    rows = [
+        m
+        for m in meas
+        if m.op == op and m.deltas_us is not None and len(m.deltas_us) == P
+    ]
+    if not rows or nbytes <= 0:
+        return None
+    nearest = min(rows, key=lambda m: abs(math.log(m.nbytes) - math.log(nbytes)))
+    ratio = max(nearest.nbytes, nbytes) / min(nearest.nbytes, nbytes)
+    if ratio > MAX_EXTRAPOLATION_RATIO:
+        return None
+    return nearest.deltas_us
+
+
+def skewed_cells(
+    meas: List[Measurement], threshold_us: float = SKEW_THRESHOLD_US
+) -> List[dict]:
+    """Grid cells whose probed arrival skew exceeds ``threshold_us``.
+
+    The companion of :func:`unstable_cells` for the *other* measurement
+    hazard: ``unstable_cells`` flags noisy wallclock, this flags dispatch
+    skew large enough that the skew-aware path of ``choose()`` may
+    legitimately override the measured ranking.  One dict per flagged
+    cell, worst first -- the shape the tuning summary embeds verbatim.
+
+    >>> from repro.tuning.cache import Measurement
+    >>> meas = [Measurement(8, 1024, "generalized", 1, 1, 50.0,
+    ...                     skew_us=250.0, deltas_us=(0.0,) * 7 + (250.0,)),
+    ...         Measurement(8, 1024, "ring", 0, 1, 80.0, skew_us=3.0)]
+    >>> [c["kind"] for c in skewed_cells(meas)]
+    ['generalized']
+    """
+    flagged = [
+        {
+            "P": m.P,
+            "nbytes": m.nbytes,
+            "kind": m.kind,
+            "r": m.r,
+            "n_buckets": m.n_buckets,
+            "op": m.op,
+            "skew_us": m.skew_us,
+            "deltas_us": list(m.deltas_us) if m.deltas_us else None,
+        }
+        for m in meas
+        if m.skew_us is not None and m.skew_us > threshold_us
+    ]
+    flagged.sort(key=lambda c: -c["skew_us"])
     return flagged
 
 

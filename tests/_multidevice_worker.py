@@ -22,7 +22,8 @@ from repro.core.allreduce import (all_gather_flat, all_to_all_flat,  # noqa: E40
                                   hierarchical_allreduce_flat, psum_tree,
                                   reduce_scatter_flat, tree_all_gather,
                                   tree_reduce_scatter)
-from repro.core.schedule import build_generalized, build_ring, max_r  # noqa: E402
+from repro.core.schedule import (build_generalized, build_ring,  # noqa: E402
+                                 build_sorted_generalized, max_r)
 from repro.topology import Level, Topology, build_hierarchical  # noqa: E402
 from repro.topology.fabric import TPU_DCN  # noqa: E402
 from repro.core.cost_model import TPU_V5E_ICI  # noqa: E402
@@ -543,6 +544,67 @@ def check_moe_dispatch():
     print("ok moe_dispatch")
 
 
+def check_elastic_resize():
+    """Elastic resize across prime dp counts (8 -> 7 -> 5): non-power-of
+    -two survivor meshes are first-class for the generalized allreduce,
+    so shrinking never pads or waits for spares.  Checks the zero1
+    opt-state reset on layout change (the flat moment buffers are
+    ``(dp * ceil(N/dp),)`` -- dp-dependent) and ``restore_latest`` both
+    across a layout change and after a post-resize checkpoint."""
+    import tempfile
+
+    from repro.checkpoint.checkpoint import latest_steps
+    from repro.data.pipeline import DataConfig
+    from repro.models.config import ModelConfig
+    from repro.runtime.elastic import ElasticConfig, ElasticRunner
+    from repro.train.optimizer import OptConfig
+
+    cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=160, vocab=256,
+                      head_dim=16, act="swiglu")
+    d = tempfile.mkdtemp(prefix="repro_elastic_resize_")
+    runner = ElasticRunner(
+        cfg, OptConfig(lr=1e-3, warmup_steps=2, total_steps=60),
+        ElasticConfig(ckpt_dir=d, ckpt_every=4, param_mode="zero1"),
+        DataConfig(seq_len=16, global_batch=8), mesh_shape=(8, 1))
+    runner.run(4)                       # checkpoint lands at step 4 (dp=8)
+    m8 = np.asarray(jax.device_get(runner.opt["m"]))
+    assert m8.any(), "moments should be warm after 4 steps"
+
+    # ---- shrink to a prime: dp=7 --------------------------------------
+    runner.dc = DataConfig(seq_len=16, global_batch=14)
+    runner.resize((7, 1), devices=jax.devices()[:7])
+    assert runner.pc.dp == 7
+    m7 = np.asarray(jax.device_get(runner.opt["m"]))
+    assert m7.shape != m8.shape, "zero1 flat layout must change with dp"
+    assert not m7.any(), "dp-dependent zero1 moments must reset on resize"
+    assert int(runner.opt["step"]) > 0, "scalar step count survives"
+
+    # ---- restore_latest across the layout change ----------------------
+    # the newest checkpoint was written at dp=8: params (global arrays)
+    # restore exactly; the incompatible zero1 buffers stay fresh.
+    runner.ckpt.wait()
+    step = runner.restore_latest()
+    assert step == 4, step
+    assert not np.asarray(jax.device_get(runner.opt["m"])).any()
+    logs = runner.run(2)
+    assert all(np.isfinite(r["loss"]) for r in logs)
+    print("ok elastic_resize 8->7")
+
+    # ---- shrink again: dp=5, then checkpoint + restore at dp=5 --------
+    runner.dc = DataConfig(seq_len=16, global_batch=10)
+    runner.resize((5, 1), devices=jax.devices()[:5])
+    assert runner.pc.dp == 5
+    logs = runner.run(2)                # steps 6,7; checkpoint at step 8
+    logs += runner.run(1)
+    runner.ckpt.wait()
+    assert 8 in latest_steps(d), latest_steps(d)
+    assert runner.restore_latest() == 8
+    logs = runner.run(2)
+    assert all(np.isfinite(r["loss"]) for r in logs)
+    print("ok elastic_resize 8->7->5")
+
+
 def check_conformance():
     """Acceptance sweep vs the real lax references, P in {2,3,5,6,7,8,16}
     on meshes over the first P of 16 forced host devices: max/min/mean
@@ -563,10 +625,15 @@ def check_conformance():
             x = rng.integers(-1000, 1000, (n, m)).astype(np.int32)
             r = max_r(n) if m % n else 0
             sched = build_generalized(n, r)
+            # the skew-sorted kind under an adversarial relabeling: same
+            # compiled structure replayed on permuted devices, must stay
+            # bit-exact vs lax.psum on the real mesh
+            order = tuple(np.roll(np.arange(n)[::-1], 1).tolist())
+            sorted_sched = build_sorted_generalized(n, r, order)
             nb = 2 if m > n else 1
             a2a = m % n == 0
 
-            def f(v, s=sched, nb=nb, n=n, a2a=a2a):
+            def f(v, s=sched, ss=sorted_sched, nb=nb, n=n, a2a=a2a):
                 vi = v[0]
                 vf = vi.astype(jnp.float32)
                 outs = [
@@ -579,6 +646,8 @@ def check_conformance():
                     lax.pmin(vi, "data"),
                     allreduce_flat(vf, "data", s, combine="mean"),
                     lax.psum(vf, "data") / n,
+                    allreduce_flat(vi, "data", ss, combine="sum",
+                                   n_buckets=nb),
                 ]
                 if a2a:
                     outs += [
@@ -589,15 +658,15 @@ def check_conformance():
                     ]
                 return [o[None] for o in outs]
 
-            n_out = 11 if a2a else 8
+            n_out = 12 if a2a else 9
             g = jax.jit(shard_map(
                 f, mesh=mesh, in_specs=P("data", None),
                 out_specs=[P("data", None)] * n_out))
             outs = [np.asarray(o) for o in g(x)]
             pairs = [("sum", 0, 1), ("max", 2, 3), ("min", 4, 5),
-                     ("mean", 6, 7)]
+                     ("mean", 6, 7), ("sorted_sum", 8, 1)]
             if a2a:
-                pairs += [("a2a_direct", 8, 10), ("a2a_bruck", 9, 10)]
+                pairs += [("a2a_direct", 9, 11), ("a2a_bruck", 10, 11)]
             for name, i, j in pairs:
                 assert (outs[i] == outs[j]).all(), (n, m, name)
             assert (outs[0][0] == x.sum(0)).all(), (n, m)
@@ -613,7 +682,8 @@ if __name__ == "__main__":
                   zero=check_tree_zero, hier=check_hierarchical,
                   execplan=check_execplan, ragged=check_ragged,
                   a2a=check_a2a, maxreduce=check_maxreduce,
-                  moe=check_moe_dispatch, conformance=check_conformance)
+                  moe=check_moe_dispatch, conformance=check_conformance,
+                  elastic_resize=check_elastic_resize)
     if which == "all":
         for fn in checks.values():
             fn()

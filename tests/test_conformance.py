@@ -39,8 +39,8 @@ from repro.core.monoid import (MAX, MEAN, MIN, SUM, premul_sum,  # noqa: E402
                                resolve_combine)
 from repro.core.schedule import (InvalidScheduleError, Schedule,  # noqa: E402
                                  ShapeError, _verify, build_generalized,
-                                 build_ring, max_r, ragged_sizes,
-                                 schedule_summary)
+                                 build_ring, build_sorted_generalized, max_r,
+                                 ragged_sizes, schedule_summary)
 from repro.core.simulator import simulate  # noqa: E402
 
 # non-powers-of-two deliberately over-represented: they are the paper's
@@ -75,17 +75,26 @@ def _reference(monoid, vectors):
 def test_conformance_allreduce_family(data):
     """simulate == simulate_plan == monoid ground truth, bit for bit."""
     P = data.draw(st.sampled_from(PS), label="P")
-    kind = data.draw(st.sampled_from(["generalized", "generalized", "ring"]),
+    kind = data.draw(st.sampled_from(["generalized", "generalized", "ring",
+                                      "sorted"]),
                      label="kind")
     r = data.draw(st.integers(0, max_r(P)), label="r") \
-        if kind == "generalized" else 0
+        if kind in ("generalized", "sorted") else 0
     m = data.draw(st.integers(1, 4 * P + 7), label="m")
     dtype = data.draw(st.sampled_from(DTYPES), label="dtype")
     n_buckets = data.draw(st.sampled_from([1, 2, 4]), label="n_buckets")
     monoid = data.draw(st.sampled_from(MONOIDS), label="monoid")
     if monoid.pre_scale is not None and np.dtype(dtype).kind != "f":
         dtype = np.float32        # premul of ints would truncate
-    sched = build_ring(P) if kind == "ring" else build_generalized(P, r)
+    if kind == "sorted":
+        # a drawn relabeling: the arrival-sorted kind must be bit-exact
+        # under *every* rank order, not just the model's pick
+        order = list(range(P))
+        seed = data.draw(st.integers(0, 2**31 - 1), label="order_seed")
+        np.random.default_rng(seed).shuffle(order)
+        sched = build_sorted_generalized(P, r, tuple(order))
+    else:
+        sched = build_ring(P) if kind == "ring" else build_generalized(P, r)
     vectors = _draw_vectors(data, P, m, dtype)
     want = _reference(monoid, vectors)
     ctx = (f"case P={P} kind={kind} r={r} m={m} dtype={np.dtype(dtype)} "
@@ -140,6 +149,35 @@ def test_monoid_laws(data):
     assert op(op(x, y), z) == op(x, op(y, z))
     e = monoid.identity(np.int64)
     assert op(x, e) == x and op(e, x) == x
+
+
+def test_sorted_schedule_acceptance_sweep():
+    """Acceptance criterion: the skew-sorted kind, under the cost model's
+    own order pick *and* adversarial orders, is bit-exact vs the symbolic
+    simulator for every acceptance P -- and structurally identical (same
+    steps, traffic, multiplicity) to the plain generalized schedule it
+    relabels."""
+    from repro.core.cost_model import PAPER_10GE, choose_arrival_order
+    rng = np.random.default_rng(7)
+    for P in (2, 3, 5, 6, 7, 8):
+        deltas = [float(x) for x in rng.integers(0, 400, P)]
+        for r in range(max_r(P) + 1):
+            order, _ = choose_arrival_order(P, r, 4096, PAPER_10GE, deltas)
+            adversarial = tuple(reversed(range(P)))
+            for o in (order, adversarial):
+                sched = build_sorted_generalized(P, r, o)
+                base = build_generalized(P, r)
+                assert sched.kind == "sorted" and sched.s == base.s
+                assert [st.tx_rows for st in sched.steps] \
+                    == [st.tx_rows for st in base.steps]
+                m = 3 * P + 2              # ragged on every P
+                vecs = [np.arange(m, dtype=np.int64) * (d + 1) + d
+                        for d in range(P)]
+                want = np.stack(vecs).sum(0)
+                for out in simulate(sched, vecs):
+                    assert (out == want).all(), (P, r, o)
+                for out in simulate_plan(sched, vecs, n_buckets=2):
+                    assert (out == want).all(), (P, r, o, "plan")
 
 
 def test_conformance_case_count():

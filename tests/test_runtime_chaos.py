@@ -1,0 +1,185 @@
+"""Multi-process runtime: coordinator/worker mesh, deterministic fault
+injection, recovery to P-1 with bit-exact loss continuity, skew-aware
+rescheduling.  Workers are real OS processes talking TCP; every fault is
+a REPRO_FAULTS-style spec, so each scenario is exactly reproducible."""
+import glob
+import math
+import os
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpoint import latest_steps
+from repro.runtime.coordinator import Coordinator, CoordinatorConfig
+from repro.runtime.faults import FaultPlan, parse_faults
+
+TIMEOUT_S = 60.0  # generous per-barrier budget: CI boxes stall
+
+
+def _cfg(tmp_path, name="ck", **kw):
+    kw.setdefault("P", 3)
+    kw.setdefault("dim", 8)
+    kw.setdefault("batch", 4)
+    kw.setdefault("lr", 0.2)
+    kw.setdefault("ckpt_every", 2)
+    kw.setdefault("step_timeout_s", TIMEOUT_S)
+    return CoordinatorConfig(ckpt_dir=str(tmp_path / name), **kw)
+
+
+def test_mesh_trains_and_checkpoints(tmp_path):
+    cfg = _cfg(tmp_path, ckpt_every=3)
+    with Coordinator(cfg) as c:
+        recs = c.run(6)
+    assert [r["step"] for r in recs] == list(range(6))
+    assert all(r["P"] == 3 for r in recs)
+    assert recs[-1]["loss"] < recs[0]["loss"]  # it actually learns
+    assert latest_steps(cfg.ckpt_dir) == [3, 6]
+    assert c.recoveries == []
+
+
+def test_kill_recovery_bit_exact_vs_clean_run(tmp_path):
+    """The acceptance arc: kill a worker mid-run; the mesh restores the
+    last checkpoint, re-ranks the survivors, recompiles for P-1 (prime)
+    and resumes -- with losses bit-identical to a clean coordinator
+    launched at P-1 from the same checkpoint."""
+    cfg = _cfg(tmp_path, P=4, faults="kill:rank=2,step=5")
+    with Coordinator(cfg) as c:
+        c.run(8)
+        chaos = c.final_losses()
+    [rec] = c.recoveries
+    assert rec.failed_wids == (2,)
+    assert rec.at_step == 5 and rec.restored_step == 4
+    assert rec.new_P == 3  # prime survivor count: no padding, no spares
+    assert rec.recovery_steps == 1
+
+    # clean run: fresh mesh at P-1 restoring the same checkpoint
+    clean_dir = tmp_path / "clean"
+    os.makedirs(clean_dir)
+    shutil.copytree(os.path.join(cfg.ckpt_dir, "step_00000004"),
+                    clean_dir / "step_00000004")
+    cfg2 = _cfg(tmp_path, name="clean", P=3, resume=True)
+    with Coordinator(cfg2) as c2:
+        c2.run(8)
+        clean = c2.final_losses()
+    assert c2.step == 8 and c2.recoveries == []
+    for s in range(4, 8):
+        assert chaos[s] == clean[s], (s, chaos[s], clean[s])  # bit-exact
+
+
+def test_recovery_skips_torn_checkpoint(tmp_path):
+    """A checkpoint torn after commit must not be restored: recovery
+    quarantines it and falls back to the previous valid step."""
+    cfg = _cfg(tmp_path, faults="ckpt_torn:step=4;kill:rank=1,step=5")
+    with Coordinator(cfg) as c:
+        recs = c.run(8)
+    [rec] = c.recoveries
+    assert rec.restored_step == 2  # step-4 ckpt was torn: fell back
+    assert rec.new_P == 2 and rec.recovery_steps == 3
+    assert glob.glob(os.path.join(cfg.ckpt_dir, "step_00000004.corrupt"))
+    assert all(math.isfinite(r["loss"]) for r in recs)
+    assert c.final_losses().keys() == set(range(8))
+
+
+def test_death_before_first_checkpoint_restarts_from_zero(tmp_path):
+    cfg = _cfg(tmp_path, faults="kill:rank=0,step=1", ckpt_every=50)
+    with Coordinator(cfg) as c:
+        c.run(3)
+    [rec] = c.recoveries
+    assert rec.restored_step == 0 and rec.new_P == 2
+    assert c.final_losses().keys() == set(range(3))
+
+
+def test_delay_fault_surfaces_in_skew_telemetry(tmp_path):
+    cfg = _cfg(tmp_path, faults="delay:rank=1,step=2,us=40000",
+               ckpt_every=50)
+    with Coordinator(cfg) as c:
+        recs = c.run(4)
+    assert recs[2]["skew_us"] > 5000.0  # 40ms straggler dwarfs noise
+    assert c.recoveries == []  # a straggler is not a death
+
+
+def test_skew_reschedule_flips_to_latency_leaning(tmp_path):
+    """sort_on_skew: a heavy measured straggler re-runs schedule
+    selection with the live arrival deltas; the pinned bandwidth-optimal
+    r=0 is overridden by the skew timeline's latency-leaning pick, and
+    the new spec ships with the next step barrier."""
+    cfg = _cfg(tmp_path, ckpt_every=50,
+               schedule_kind="generalized", schedule_r=0,
+               sort_on_skew=True, skew_threshold_us=5000.0,
+               faults="delay:rank=1,step=1,us=40000")
+    with Coordinator(cfg) as c:
+        recs = c.run(4)
+    assert recs[0]["schedule"].startswith("generalized,r=0")
+    assert recs[1]["skew_us"] > 5000.0
+    assert recs[-1]["schedule"] == "generalized,r=2"  # re-chosen
+    assert recs[-1]["loss"] < recs[0]["loss"]
+
+
+def test_sorted_schedule_runs_the_mesh(tmp_path):
+    """The arrival-sorted relabeled schedule drives the real multi-
+    process wire path end to end (routing permutations conjugated by the
+    relabel) and matches the plain generalized run to reduction
+    tolerance."""
+    losses = {}
+    for name, kind, order in [("base", "generalized", None),
+                              ("sorted", "sorted", (3, 1, 0, 2))]:
+        cfg = _cfg(tmp_path, name=name, P=4, dim=10, ckpt_every=50,
+                   schedule_kind=kind, schedule_r=1, schedule_order=order)
+        with Coordinator(cfg) as c:
+            recs = c.run(4)
+        losses[name] = [r["loss"] for r in recs]
+        if order:
+            assert all(r["schedule"] == "sorted,r=1,order=3-1-0-2"
+                       for r in recs)
+    np.testing.assert_allclose(losses["base"], losses["sorted"],
+                               rtol=1e-9)
+
+
+def test_fault_plan_fires_once():
+    plan = FaultPlan(parse_faults("kill:rank=1,step=3;delay:rank=1,step=3,us=5"))
+    assert plan.fire("delay", 3, 1).us == 5
+    assert plan.fire("delay", 3, 1) is None
+    assert plan.fire("kill", 3, 2) is None  # wrong rank
+    assert plan.fire("kill", 3, 1).kind == "kill"
+    assert plan.pending == ()
+
+
+def test_regression_gate_recovery_steps_is_lower_is_better():
+    """The chaos rows gate as costs: recovery_steps regresses when it
+    GROWS past base*(1+tol); speedup keys keep their floor semantics."""
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                    "benchmarks"))
+    from check_regression import compare
+    base = {"kill": {"label": "kill", "recovery_steps": 1.0,
+                     "recovered": 1.0, "speedup_execplan": 1.0}}
+    ok = {"kill": {"label": "kill", "recovery_steps": 1.0,
+                   "recovered": 1.0, "speedup_execplan": 1.2}}
+    worse = {"kill": {"label": "kill", "recovery_steps": 2.0,
+                      "recovered": 1.0, "speedup_execplan": 1.0}}
+    keys = ["recovery_steps", "recovered", "speedup_execplan"]
+    _, regs = compare(ok, base, keys, tolerance=0.35)
+    assert regs == []
+    _, regs = compare(worse, base, keys, tolerance=0.35)
+    assert [r["key"] for r in regs] == ["recovery_steps"]
+    assert regs[0]["direction"] == "<="
+    # and a *drop* in recovery_steps (faster recovery) must NOT regress
+    better = {"kill": {"label": "kill", "recovery_steps": 0.0,
+                       "recovered": 1.0, "speedup_execplan": 1.0}}
+    _, regs = compare(better, base, keys, tolerance=0.35)
+    assert regs == []
+    # speedup floor unchanged by the direction plumbing
+    slow = {"kill": {"label": "kill", "recovery_steps": 1.0,
+                     "recovered": 1.0, "speedup_execplan": 0.5}}
+    _, regs = compare(slow, base, keys, tolerance=0.35)
+    assert [r["key"] for r in regs] == ["speedup_execplan"]
+
+
+def test_bad_fault_specs_rejected():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        parse_faults("boom:step=1")
+    with pytest.raises(ValueError, match="requires rank"):
+        parse_faults("delay:step=1,us=5")
+    with pytest.raises(ValueError, match="bad fault argument"):
+        parse_faults("kill:rank=1,step=2,color=red")

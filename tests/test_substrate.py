@@ -92,6 +92,96 @@ def test_restore_incompatible_layout_keeps_fresh(tmp_path):
     np.testing.assert_array_equal(out["opt"]["m"], np.ones(6))
 
 
+# --------------------------------------------- checkpoint integrity
+def _tiny_tree(fill):
+    return {"params": {"w": np.full((4, 3), fill, np.float32),
+                       "b": np.arange(5, dtype=np.float32) * fill}}
+
+
+def _leaf_file(d, step):
+    sd = os.path.join(d, f"step_{step:08d}")
+    import json
+    with open(os.path.join(sd, "manifest.json")) as f:
+        man = json.load(f)
+    fn = man["trees"]["params"]["w"]["file"]
+    return sd, os.path.join(sd, fn)
+
+
+def test_restore_falls_back_past_torn_checkpoint(tmp_path):
+    """A leaf file truncated AFTER commit (torn disk write) must not be
+    restored: the damaged step is quarantined and restore falls back to
+    the newest earlier step that verifies."""
+    from repro.checkpoint.checkpoint import validate_checkpoint
+    d = str(tmp_path / "ckpt")
+    save(d, 1, _tiny_tree(1.0))
+    save(d, 2, _tiny_tree(2.0))
+    sd2, leaf = _leaf_file(d, 2)
+    with open(leaf, "r+b") as f:
+        f.truncate(os.path.getsize(leaf) // 2)
+    assert not validate_checkpoint(sd2)
+    assert latest_steps(d, validate=True) == [1]
+    step, out = restore(d, _tiny_tree(0.0))
+    assert step == 1
+    np.testing.assert_array_equal(out["params"]["w"],
+                                  _tiny_tree(1.0)["params"]["w"])
+    assert os.path.isdir(sd2 + ".corrupt") and not os.path.isdir(sd2)
+    assert latest_steps(d) == [1]  # the quarantined dir stops being listed
+
+
+def test_restore_explicit_damaged_step_raises(tmp_path):
+    """Silent bit rot (same-size content change) is caught by the leaf
+    checksums; asking for the damaged step explicitly raises instead of
+    quarantining."""
+    d = str(tmp_path / "ckpt")
+    save(d, 3, _tiny_tree(3.0))
+    sd, leaf = _leaf_file(d, 3)
+    blob = bytearray(open(leaf, "rb").read())
+    blob[-1] ^= 0xFF
+    with open(leaf, "wb") as f:
+        f.write(bytes(blob))
+    with pytest.raises(ValueError, match="failed validation"):
+        restore(d, _tiny_tree(0.0), step=3)
+    assert os.path.isdir(sd)  # explicit requests never quarantine
+
+
+def test_restore_garbage_manifest_and_all_damaged(tmp_path):
+    """A garbage manifest fails validation (the commit marker pins its
+    digest); with every step damaged, restore raises rather than loading
+    corrupt state."""
+    d = str(tmp_path / "ckpt")
+    save(d, 1, _tiny_tree(1.0))
+    sd = os.path.join(d, "step_00000001")
+    with open(os.path.join(sd, "manifest.json"), "w") as f:
+        f.write('{"trees": {')
+    with pytest.raises(FileNotFoundError, match="passed validation"):
+        restore(d, _tiny_tree(0.0))
+
+
+def test_legacy_checkpoint_without_checksums_restores(tmp_path):
+    """Checkpoints written before checksums existed ("ok" marker, no
+    sha256 entries) still validate by file presence and restore."""
+    import json
+    from repro.checkpoint.checkpoint import validate_checkpoint
+    d = str(tmp_path / "ckpt")
+    save(d, 4, _tiny_tree(4.0))
+    sd = os.path.join(d, "step_00000004")
+    mpath = os.path.join(sd, "manifest.json")
+    with open(mpath) as f:
+        man = json.load(f)
+    for leaves in man["trees"].values():
+        for ent in leaves.values():
+            ent.pop("sha256", None)
+    with open(mpath, "w") as f:
+        json.dump(man, f)
+    with open(os.path.join(sd, "_COMMITTED"), "w") as f:
+        f.write("ok")
+    assert validate_checkpoint(sd)
+    step, out = restore(d, _tiny_tree(0.0))
+    assert step == 4
+    np.testing.assert_array_equal(out["params"]["b"],
+                                  _tiny_tree(4.0)["params"]["b"])
+
+
 # -------------------------------------------------------------- optimizer
 def test_lr_schedule():
     oc = OptConfig(lr=1e-3, warmup_steps=10, total_steps=100,
@@ -179,3 +269,65 @@ def test_elastic_runner_single_device(tmp_path):
     assert step == 10
     logs2 = runner.run(3)
     assert np.isfinite(logs2[-1]["loss"])
+
+
+def test_straggler_watch_not_masked_by_prior_outlier():
+    """The straggler EWMA must not be contaminated by the outlier it just
+    alerted on: folding the raw spike in inflates the baseline so the
+    NEXT straggler sails under the threshold."""
+    from repro.runtime.elastic import StragglerWatch
+    w = StragglerWatch(factor=3.0, decay=0.9)
+    assert not any(w.observe(0.1) for _ in range(5))
+    base = w.value
+    assert w.observe(2.0)               # 20x: alert
+    assert w.value < base * 1.25        # clamped fold, not raw 2.0
+    assert w.observe(0.8)               # 8x original pace: still alerts
+    # a persistent regime change converges instead of alerting forever
+    alerts = [w.observe(1.0) for _ in range(40)]
+    assert not any(alerts[-10:])
+    assert abs(w.value - 1.0) < 0.1
+
+
+def test_straggler_watch_warmup_and_runner_alerts(tmp_path):
+    from repro.runtime.elastic import StragglerWatch
+    w = StragglerWatch(factor=3.0, decay=0.9, warmup=3)
+    assert not w.observe(0.1)           # seeds the baseline
+    assert not w.observe(1.0)           # 10x, but still warming up
+    w2 = StragglerWatch(factor=3.0)
+    [w2.observe(0.1) for _ in range(4)]
+    assert w2.observe(1.0)              # past warmup: alerts
+
+    # runner plumbing: an alert carries (step, dt, baseline)
+    from repro.data.pipeline import DataConfig
+    from repro.runtime.elastic import ElasticConfig, ElasticRunner
+    runner = ElasticRunner(
+        TINY, OptConfig(lr=1e-3, warmup_steps=2, total_steps=50),
+        ElasticConfig(ckpt_dir=str(tmp_path / "ck"), ckpt_every=50),
+        DataConfig(seq_len=8, global_batch=2), mesh_shape=(1, 1))
+    for dt in [0.1] * 5:
+        runner._watch_straggler(dt)
+        runner.step += 1
+    runner._watch_straggler(5.0)
+    [(step, dt, baseline)] = runner.alerts
+    assert step == 5 and dt == 5.0 and baseline == pytest.approx(0.1)
+    assert runner.step_time_ewma < 0.5  # clamped: spike didn't poison it
+
+
+_WORKER = os.path.join(os.path.dirname(__file__), "_multidevice_worker.py")
+
+
+@pytest.mark.slow
+def test_elastic_resize_prime_counts_8dev():
+    """resize() through prime dp counts 8 -> 7 -> 5 with zero1 opt-state
+    reset and restore_latest across layout changes; runs in a subprocess
+    with 8 forced host devices (see _multidevice_worker.py)."""
+    import subprocess
+    import sys
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["JAX_PLATFORMS"] = "cpu"
+    res = subprocess.run([sys.executable, _WORKER, "elastic_resize"],
+                         env=env, capture_output=True, text=True,
+                         timeout=600)
+    assert res.returncode == 0, f"worker failed:\n{res.stdout}\n{res.stderr}"
+    assert "ok elastic_resize 8->7->5" in res.stdout, res.stdout

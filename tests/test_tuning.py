@@ -379,3 +379,98 @@ def test_unstable_cells_flags_noisy_measurements():
     assert out[1]["kind"] == "generalized" and out[1]["reps_us"] == [50.0, 80.0]
     assert unstable_cells([quiet]) == []
     assert 0.0 < NOISE_THRESHOLD < 1.0
+
+
+# ---------------------------------------------------------------------------
+#  arrival deltas: persistence and the skew-aware choose() feed
+# ---------------------------------------------------------------------------
+
+
+def test_deltas_roundtrip_and_arrival_deltas(tuned_env):
+    deltas = (0.0, 12.0, 3.0, 250.0, 1.0, 0.5, 9.0, 40.0)
+    m = Measurement(
+        P=8,
+        nbytes=1 << 20,
+        kind="generalized",
+        r=1,
+        n_buckets=1,
+        us=100.0,
+        skew_us=250.0,
+        deltas_us=deltas,
+    )
+    c = TuningCache.load(tuned_env)
+    c.record(FP, m)
+    c.save()
+    assert TuningCache.load(tuned_env).lookup(FP, 8)[0].deltas_us == deltas
+    policy.invalidate()
+    # nearest-size answer, within the extrapolation cap
+    assert policy.arrival_deltas(8, 1 << 20, fingerprint=FP) == deltas
+    assert policy.arrival_deltas(8, 2 << 20, fingerprint=FP) == deltas
+    # beyond the cap / wrong operator / wrong P: no opinion
+    assert policy.arrival_deltas(8, 1 << 30, fingerprint=FP) is None
+    assert policy.arrival_deltas(8, 1 << 20, op="max", fingerprint=FP) is None
+    assert policy.arrival_deltas(4, 1 << 20, fingerprint=FP) is None
+
+
+def test_arrival_deltas_ignores_rows_without_profile(tuned_env):
+    c = TuningCache.load(tuned_env)
+    c.record(FP, meas(1 << 20, "ring", 0, 1, 50.0))  # scalar-only row
+    c.save()
+    policy.invalidate()
+    assert policy.arrival_deltas(8, 1 << 20, fingerprint=FP) is None
+
+
+def test_skewed_cells_flags_heavy_skew():
+    from repro.tuning.policy import SKEW_THRESHOLD_US, skewed_cells
+
+    calm = Measurement(
+        P=8, nbytes=1 << 20, kind="ring", r=0, n_buckets=1, us=100.0, skew_us=5.0
+    )
+    unprobed = meas(1 << 20, "generalized", 0, 1, 90.0)
+    skewed = Measurement(
+        P=8,
+        nbytes=1 << 20,
+        kind="generalized",
+        r=2,
+        n_buckets=1,
+        us=50.0,
+        skew_us=400.0,
+        deltas_us=(0.0,) * 7 + (400.0,),
+    )
+    worse = Measurement(
+        P=8, nbytes=64 << 10, kind="ring", r=0, n_buckets=1, us=10.0, skew_us=900.0
+    )
+    out = skewed_cells([calm, unprobed, skewed, worse])
+    assert [c["skew_us"] for c in out] == [900.0, 400.0]  # worst first
+    assert out[1]["deltas_us"] == [0.0] * 7 + [400.0]
+    assert skewed_cells([calm, unprobed]) == []
+    assert SKEW_THRESHOLD_US > 0
+
+
+def test_choose_uses_persisted_deltas_when_tuned(tuned_env):
+    """A heavy arrival profile persisted by the tuning grid flips a tuned
+    choose() onto the skew timeline even when the caller passes no live
+    deltas; without tuning the same query stays analytic."""
+    from repro.core.cost_model import TPU_V5E_ICI
+
+    fp = current_fingerprint()
+    c = TuningCache.load(tuned_env)
+    c.record(
+        fp,
+        Measurement(
+            P=8,
+            nbytes=512,
+            kind="generalized",
+            r=3,
+            n_buckets=1,
+            us=30.0,
+            itemsize=4,
+            skew_us=300.0,
+            deltas_us=(0.0,) * 7 + (300.0,),
+        ),
+    )
+    c.save()
+    policy.invalidate()
+    ch = choose(8, 512, TPU_V5E_ICI, tune=True)
+    assert ch.source == "skew"
+    assert choose(8, 512, TPU_V5E_ICI, tune=False).source == "model"
