@@ -54,6 +54,23 @@ Usage (what CI runs):
 ``--json PATH`` additionally writes the full machine-readable verdict
 (every comparison plus the tolerance and exit status) for downstream
 tooling; ``--json -`` writes it to stdout instead of the CSV rows.
+
+``--families`` switches the gate to *coverage* mode for the measured
+tuning grid (results/tuning.json-shaped payloads): instead of comparing
+numbers, it collects the set of schedule families (``Measurement.kind``
+values: "generalized", "ring", "traff_rounds", "dual_root", ...) each
+payload measured and fails MISWIRED (exit 2) when any family the
+committed baseline measured is absent from the regenerated smoke table.
+Same philosophy as the ROW_CLASSES guard above: once a family is in the
+committed competition, an edit to the candidate grid cannot silently
+drop it out of CI.  Timings are deliberately NOT compared -- the smoke
+table is regenerated on whatever runner CI lands on.
+
+    python benchmarks/run.py tune --smoke --out results/tuning_smoke.json
+    python benchmarks/check_regression.py --families \
+        --current results/tuning_smoke.json \
+        --baseline results/tuning.json \
+        --json family_gate.json
 """
 
 from __future__ import annotations
@@ -103,6 +120,76 @@ def load_rows(path: str) -> dict:
     with open(path) as f:
         payload = json.load(f)
     return {row["label"]: row for row in payload["results"]}
+
+
+def load_families(path: str) -> set:
+    """Schedule families a tuning payload measured, as a set of kinds.
+
+    Reads a ``results/tuning.json``-shaped payload and unions the
+    ``kind`` of every measurement in every size row (the winner's kind
+    is always among them, so it needs no special casing).
+    """
+    with open(path) as f:
+        payload = json.load(f)
+    kinds = set()
+    for row in payload["results"]:
+        for m in row.get("measurements", ()):
+            kinds.add(m["kind"])
+    return kinds
+
+
+def check_families(args) -> int:
+    """Family-coverage gate: every baseline family must still be measured.
+
+    Exit 2 (MISWIRED, same contract as the ROW_CLASSES guard) when a
+    family the committed baseline measured is missing from the current
+    run -- or when the baseline itself measures nothing, which means the
+    gate is pointed at the wrong file.
+    """
+    current = sorted(load_families(args.current))
+    baseline = sorted(load_families(args.baseline))
+    missing = sorted(set(baseline) - set(current))
+    if not baseline:
+        verdict, code = "MISWIRED", 2
+        print(
+            f"check_regression: baseline {args.baseline} measures no "
+            "schedule families -- family gate is mis-wired",
+            file=sys.stderr,
+        )
+    elif missing:
+        verdict, code = "MISWIRED", 2
+        print(
+            f"check_regression: schedule families {missing} are measured "
+            f"by the committed baseline ({args.baseline}) but absent from "
+            f"the current run ({args.current}) -- a candidate-grid edit "
+            "dropped them out of the tuning competition",
+            file=sys.stderr,
+        )
+    else:
+        verdict, code = "OK", 0
+        print(
+            f"check_regression,families,baseline={'+'.join(baseline)},"
+            f"current={'+'.join(current)},OK"
+        )
+    if args.json:
+        payload = {
+            "verdict": verdict,
+            "exit_code": code,
+            "mode": "families",
+            "current": args.current,
+            "baseline": args.baseline,
+            "baseline_families": baseline,
+            "current_families": current,
+            "missing_families": missing,
+        }
+        if args.json == "-":
+            print(json.dumps(payload, indent=2))
+        else:
+            with open(args.json, "w") as f:
+                json.dump(payload, f, indent=2)
+                f.write("\n")
+            print(f"check_regression,WROTE,{args.json}")
+    return code
 
 
 def compare(current: dict, baseline: dict, keys, tolerance: float):
@@ -212,7 +299,16 @@ def main(argv=None) -> int:
         metavar="PATH",
         help="write the machine-readable verdict here ('-' for stdout)",
     )
+    ap.add_argument(
+        "--families",
+        action="store_true",
+        help="gate schedule-family coverage of a tuning payload instead "
+        "of numeric ratios (exit 2 when a baseline family disappears)",
+    )
     args = ap.parse_args(argv)
+
+    if args.families:
+        return check_families(args)
 
     current, baseline = load_rows(args.current), load_rows(args.baseline)
     keys = [k for k in args.keys.split(",") if k]

@@ -33,8 +33,9 @@ from .cost_model import (Fabric, TPU_V5E_ICI, choose_arrival_order,
                          ragged_pipelined_schedule_cost, ragged_schedule_cost,
                          schedule_cost, skewed_schedule_cost)
 from .monoid import Monoid
-from .schedule import (Schedule, build_generalized, build_ring,
-                       build_sorted_generalized, n_steps_log)
+from .schedule import (Schedule, build_dual_root, build_generalized,
+                       build_ring, build_sorted_generalized,
+                       build_traff_rounds, n_steps_log)
 
 # The skew-aware path engages only when the measured arrival spread is
 # worth acting on: at least this fraction of the best barrier-model cost
@@ -45,7 +46,7 @@ SKEW_COST_FRACTION = 0.05
 
 @dataclass(frozen=True)
 class Choice:
-    kind: str          # "generalized" | "ring" | "sorted"
+    kind: str  # "generalized" | "ring" | "sorted" | "traff_rounds" | "dual_root"
     r: int
     cost: float        # modeled seconds, or measured seconds when tuned
     n_buckets: int = 1   # pipelined buckets for the ExecPlan executor
@@ -148,18 +149,17 @@ def _choose_model(P: int, nbytes: int, fabric: Fabric,
     """
     ragged = (nbytes // itemsize) % P != 0
     best: Optional[Choice] = None
-    for r in range(n_steps_log(P) + 1):
-        s = build_generalized(P, r)
+    candidates = [("generalized", r, build_generalized(P, r))
+                  for r in range(n_steps_log(P) + 1)]
+    candidates += [("traff_rounds", 0, build_traff_rounds(P)),
+                   ("dual_root", 0, build_dual_root(P))]
+    if allow_ring:
+        candidates.append(("ring", 0, build_ring(P)))
+    for kind, r, s in candidates:
         c = (ragged_schedule_cost(s, nbytes, fabric, itemsize, monoid)
              if ragged else schedule_cost(s, nbytes, fabric, monoid))
         if best is None or c < best.cost:
-            best = Choice("generalized", r, c)
-    if allow_ring:
-        s = build_ring(P)
-        c = (ragged_schedule_cost(s, nbytes, fabric, itemsize, monoid)
-             if ragged else schedule_cost(s, nbytes, fabric, monoid))
-        if c < best.cost:
-            best = Choice("ring", 0, c)
+            best = Choice(kind, r, c)
     # re-cost the winner with software pipelining: the bucket count that
     # overlaps its wire time with its combine time (fill/drain charged)
     sched = schedule_for(best, P)
@@ -203,16 +203,16 @@ def _choose_skewed(P: int, nbytes: int, fabric: Fabric, allow_ring: bool,
     """
     deltas = [float(d) for d in deltas_us]
     best: Optional[Choice] = None
-    for r in range(n_steps_log(P) + 1):
-        s = build_generalized(P, r)
+    candidates = [("generalized", r, build_generalized(P, r))
+                  for r in range(n_steps_log(P) + 1)]
+    candidates += [("traff_rounds", 0, build_traff_rounds(P)),
+                   ("dual_root", 0, build_dual_root(P))]
+    if allow_ring:
+        candidates.append(("ring", 0, build_ring(P)))
+    for kind, r, s in candidates:
         c = skewed_schedule_cost(s, nbytes, fabric, deltas, itemsize, monoid)
         if best is None or c < best.cost:
-            best = Choice("generalized", r, c, source="skew")
-    if allow_ring:
-        c = skewed_schedule_cost(build_ring(P), nbytes, fabric, deltas,
-                                 itemsize, monoid)
-        if c < best.cost:
-            best = Choice("ring", 0, c, source="skew")
+            best = Choice(kind, r, c, source="skew")
     if best.kind == "generalized":
         order, c = choose_arrival_order(P, best.r, nbytes, fabric, deltas,
                                         itemsize, monoid)
@@ -240,4 +240,8 @@ def schedule_for(choice: Choice, P: int) -> Schedule:
         return build_ring(P)
     if choice.kind == "sorted":
         return build_sorted_generalized(P, choice.r, choice.order)
+    if choice.kind == "traff_rounds":
+        return build_traff_rounds(P)
+    if choice.kind == "dual_root":
+        return build_dual_root(P)
     return build_generalized(P, choice.r)

@@ -130,7 +130,8 @@ class Schedule:
 
     P: int
     group: MixedRadixGroup
-    kind: str   # "generalized" | "ring" | "reduce_scatter" | "all_gather"
+    kind: str   # "generalized" | "ring" | "sorted" | "traff_rounds" |
+                # "dual_root" | "reduce_scatter" | "all_gather" | ...
     r: int                        # removed distribution steps (generalized only)
     s: int                        # result multiplicity after reduction
     steps: Tuple[CommStep, ...]
@@ -326,21 +327,31 @@ class _Builder:
         self.rows = list(new_rows)
 
 
-def _reduction_phase(b: _Builder, s: int) -> None:
+def _reduction_phase(b: _Builder, s: int,
+                     offsets: Optional[Tuple[int, ...]] = None) -> None:
     """Reduction with ``s`` shifted copies (paper sections 7-9).
 
     Copy c (c = 0..s-1) runs the base schedule with every vector re-labelled
-    by the group element ``c``; all copies share the same communication
-    operator each step so their TX sets merge (deduplicated by slot).
+    by the group element ``offsets[c]`` (default ``c``); all copies share
+    the same communication operator each step so their TX sets merge
+    (deduplicated by slot).  Copy c's fully-reduced vector ends at place
+    ``offsets[c]`` -- non-contiguous offsets are how the dual-root kind
+    plants its two roots half a ring apart.
     """
     g = b.group
     P = b.P
+    if offsets is None:
+        offsets = tuple(range(s))
+    if len(offsets) != s or len(set(offsets)) != s:
+        raise InvalidScheduleError(f"need {s} distinct copy offsets, "
+                                   f"got {offsets}")
     counts = vector_counts(P)
     L = len(counts) - 1
-    # per-copy ordered slot lists; copy c slot j: place compose(c, g_j)
+    # per-copy ordered slot lists; copy c slot j: place compose(off_c, g_j)
     copies: List[List[Slot]] = []
-    for c in range(s):
-        copies.append([Slot(place=g.compose(c, j), content=frozenset([g.compose(c, j)]))
+    for off in offsets:
+        copies.append([Slot(place=g.compose(off, j),
+                            content=frozenset([g.compose(off, j)]))
                        for j in range(P)])
 
     for i in range(L):
@@ -403,10 +414,10 @@ def _reduction_phase(b: _Builder, s: int) -> None:
         copies = new_copies
 
     full = frozenset(range(P))
-    for c in range(s):
+    for c, off in enumerate(offsets):
         assert len(copies[c]) == 1
         got = copies[c][0]
-        want = Slot(place=g.compose(c, 0), content=full)
+        want = Slot(place=g.compose(off, 0), content=full)
         if got != want:
             raise InvalidScheduleError(f"copy {c} reduced to {got}, want {want}")
 
@@ -664,6 +675,175 @@ def build_ring(P: int) -> Schedule:
     return sched
 
 
+def _traff_rs_rounds(b: _Builder) -> None:
+    """Binary-merge reduce-scatter rounds (Traff, arXiv:2410.14234).
+
+    Round k (distance ``w = 2^k``) keeps the invariant that the live
+    distributed vectors sit at places ``w*j < P`` and the vector at place
+    ``w*j`` has content ``[w*j, min(w*(j+1), P))`` -- a contiguous block,
+    so merges never double-count for *any* P, primes included.  Odd-j
+    vectors move by ``t^{-w}`` onto their even-j neighbour and merge;
+    when ``w*(j+1) >= P`` the even-j vector simply survives the round.
+    ceil(lg P) rounds, P-1 chunk-units total: Traff's optimal
+    non-pipelined round count and volume for arbitrary P.
+    """
+    g = b.group
+    P = b.P
+    w = 1
+    while w < P:
+        shift = g.inverse(w % P)
+        cur = b.rows
+        by_place = {sl.place: sl for sl in cur}
+        tx: List[Slot] = []
+        combines: Dict[Slot, Tuple[Slot, Slot]] = {}
+        new_rows: List[Slot] = []
+        for sl in cur:
+            j = sl.place // w
+            if j % 2 == 1:
+                tx.append(sl)                 # odd j: sent and consumed
+                continue
+            partner = by_place.get(sl.place + w)
+            if partner is None:
+                new_rows.append(sl)           # no odd neighbour: survives
+            else:
+                arr = Slot(place=sl.place, content=partner.content)
+                ns = Slot(place=sl.place,
+                          content=sl.content | partner.content)
+                combines[ns] = (sl, arr)
+                new_rows.append(ns)
+        new_rows.sort(key=Slot.key)
+        b.emit(shift, tx, new_rows, combines)
+        w *= 2
+
+
+def _traff_ag_rounds(b: _Builder) -> None:
+    """Mirror of :func:`_traff_rs_rounds`: doubling all-gather rounds.
+
+    Round k (descending ``w = 2^k``) starts with the result replicated at
+    every place divisible by ``2w`` and sends each copy by ``t^{+w}``
+    (when the target place exists), ending with all multiples of ``w``
+    full; after the last round every place holds the result.  P-1
+    chunk-units over ceil(lg P) rounds.
+    """
+    g = b.group
+    P = b.P
+    full = frozenset(range(P))
+    for k in range(n_steps_log(P) - 1, -1, -1):
+        w = 1 << k
+        cur = b.rows
+        tx = [sl for sl in cur if sl.place + w < P]
+        arrivals = [Slot(place=g.compose(w, sl.place), content=full)
+                    for sl in tx]
+        new_rows = sorted(list(cur) + arrivals, key=Slot.key)
+        b.emit(w % P, tx, new_rows, {})
+
+
+@lru_cache(maxsize=None)
+def build_traff_rounds(P: int) -> Schedule:
+    """Traff's optimal non-pipelined allreduce rounds (arXiv:2410.14234).
+
+    Reduce-scatter by binary merging at doubling distances 1, 2, 4, ...
+    then the mirrored doubling all-gather: ``2*ceil(lg P)`` rounds and
+    ``2*(P-1)`` chunk-units for *arbitrary* P including primes -- the
+    round- and volume-optimal non-pipelined schedule.  Same aggregate
+    cost as ``build_generalized(P, 0)`` but a different permutation step
+    table: power-of-two shifts instead of the halving ``floor(N/2)``
+    pattern, so the combine tree, the per-round ragged chunk placement
+    and the skew timeline all differ -- which is exactly why it enters
+    the tuning grid as its own family.
+
+    >>> s = build_traff_rounds(7)
+    >>> s.n_steps, s.units_sent, s.units_reduced
+    (6, 12, 6)
+    >>> sorted(st.shift for st in s.steps[:3])   # RS shifts: -1, -2, -4
+    [3, 5, 6]
+    """
+    if P < 1:
+        raise InvalidScheduleError("P must be >= 1")
+    g = CyclicGroup(P)
+    b = _Builder(g)
+    if P > 1:
+        _traff_rs_rounds(b)
+        _traff_ag_rounds(b)
+    sched = Schedule(P=P, group=g, kind="traff_rounds", r=0, s=1,
+                     steps=tuple(b.steps), initial_slots=b.initial_slots,
+                     final_slots=tuple(b.rows))
+    _verify(sched)
+    return sched
+
+
+def _dual_root_distribution(b: _Builder, h: int) -> None:
+    """Doubling broadcast from the two roots over their ring halves.
+
+    Root place 0 covers places ``[0, h)``, root place ``h`` covers
+    ``[h, P)``; distribution round k moves full copies by the shared
+    shift ``t^{+2^k}`` inside both halves at once, so both roots stay
+    active every round.  ``ceil(lg h)`` rounds (the larger half
+    dominates).
+    """
+    g = b.group
+    P = b.P
+    full = frozenset(range(P))
+    blocks = ((0, h), (h, P - h))               # (start, size) per root
+    w = 1
+    while w < h:
+        by_place = {sl.place: sl for sl in b.rows}
+        tx: List[Slot] = []
+        new_rows: List[Slot] = list(b.rows)
+        for start, size in blocks:
+            for rel in range(w, min(2 * w, size)):
+                tx.append(by_place[start + rel - w])
+                new_rows.append(Slot(place=start + rel, content=full))
+        new_rows.sort(key=Slot.key)
+        b.emit(w % P, tx, new_rows, {})
+        w *= 2
+
+
+@lru_cache(maxsize=None)
+def build_dual_root(P: int) -> Schedule:
+    """Dual-root reduction-to-all (after Traff, arXiv:2109.12626).
+
+    The reduction phase runs two relabelled copies whose roots sit half a
+    ring apart (copy offsets ``{0, ceil(P/2)}`` via
+    :func:`_reduction_phase`), producing two fully-reduced distributed
+    vectors; the distribution phase then doubles each root's copy out
+    over its own half of the place ring with one shared shift per round
+    (:func:`_dual_root_distribution`).  Total ``2*ceil(lg P) - 1``
+    rounds -- one fewer than the bandwidth-optimal AR(0) -- at the
+    bandwidth of AR(1), a distinct latency/bandwidth point for the
+    tuning grid.  The paper's *double* pipelining (the second root's
+    up-phase overlapping the first root's down-phase) is expressed by
+    the executor's existing ``n_buckets`` software pipelining over this
+    schedule's tick structure.
+
+    >>> s = build_dual_root(8)
+    >>> s.n_steps, s.s
+    (5, 2)
+    >>> sorted(sl.place for sl in s.final_slots) == list(range(8))
+    True
+    >>> build_dual_root(2).n_steps         # degenerate: one exchange
+    1
+    """
+    if P < 1:
+        raise InvalidScheduleError("P must be >= 1")
+    g = CyclicGroup(P)
+    b = _Builder(g)
+    if P == 1:
+        sched = Schedule(P=P, group=g, kind="dual_root", r=0, s=1,
+                         steps=(), initial_slots=b.initial_slots,
+                         final_slots=b.initial_slots)
+        _verify(sched)
+        return sched
+    h = (P + 1) // 2
+    _reduction_phase(b, 2, offsets=(0, h))
+    _dual_root_distribution(b, h)
+    sched = Schedule(P=P, group=g, kind="dual_root", r=0, s=2,
+                     steps=tuple(b.steps), initial_slots=b.initial_slots,
+                     final_slots=tuple(b.rows))
+    _verify(sched)
+    return sched
+
+
 # --------------------------------------------------------------------------
 #  verification
 # --------------------------------------------------------------------------
@@ -674,7 +854,8 @@ def _verify(sched: Schedule, expect_final_rows: Optional[int] = None,
     P = sched.P
     full = frozenset(range(P))
     if expect_final_rows is None and sched.kind in ("generalized", "ring",
-                                                    "sorted"):
+                                                    "sorted", "traff_rounds",
+                                                    "dual_root"):
         expect_final_rows = P
     if expect_final_rows is not None and len(sched.final_slots) != expect_final_rows:
         raise InvalidScheduleError(
@@ -682,7 +863,8 @@ def _verify(sched: Schedule, expect_final_rows: Optional[int] = None,
     for sl in sched.final_slots:
         if sl.content != full:
             raise InvalidScheduleError(f"final slot {sl} not fully reduced")
-    if sched.kind in ("generalized", "ring", "sorted"):
+    if sched.kind in ("generalized", "ring", "sorted", "traff_rounds",
+                      "dual_root"):
         places = sorted(s.place for s in sched.final_slots)
         if places != list(range(P)):
             raise InvalidScheduleError(f"final placements {places} incomplete")

@@ -3,7 +3,11 @@
 Executes a :class:`~repro.core.schedule.Schedule` over P simulated
 processes, each owning a vector of m elements.  This is the oracle used by
 the test-suite to prove numeric correctness of every schedule for arbitrary
-P and r, and by the benchmark harness to count per-step traffic.
+P and r, and by the benchmark harness to count per-step traffic.  The
+replay is kind-agnostic: every family the compiler emits -- generalized
+AR(r), ring, the arrival-sorted relabeling, Traeff's optimal rounds
+(``traff_rounds``) and the dual-root reduction-to-all (``dual_root``) --
+runs through the same step loop with no family-specific cases.
 
 The simulator mirrors exactly what the JAX ``shard_map`` executor does,
 just with explicit per-process state instead of SPMD code.

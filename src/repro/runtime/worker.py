@@ -35,8 +35,10 @@ from typing import List, Optional
 import numpy as np
 
 from repro.core.execplan import final_row_table, initial_row_table
-from repro.core.schedule import (Schedule, build_generalized, build_ring,
-                                 build_sorted_generalized, ragged_offsets,
+from repro.core.schedule import (Schedule, build_dual_root,
+                                 build_generalized, build_ring,
+                                 build_sorted_generalized,
+                                 build_traff_rounds, ragged_offsets,
                                  ragged_sizes)
 
 from .faults import FaultPlan
@@ -60,6 +62,12 @@ def build_schedule(spec: dict) -> Schedule:
         return build_ring(P)
     if kind == "sorted":
         return build_sorted_generalized(P, r, tuple(spec["order"]))
+    if kind == "traff_rounds":
+        return build_traff_rounds(P)
+    if kind == "dual_root":
+        return build_dual_root(P)
+    if kind != "generalized":
+        raise ValueError(f"unknown schedule kind in wire spec: {kind!r}")
     return build_generalized(P, r)
 
 

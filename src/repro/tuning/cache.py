@@ -127,7 +127,7 @@ class Measurement:
 
     P: int
     nbytes: int
-    kind: str  # "generalized" | "ring"
+    kind: str  # schedule family: "generalized" | "ring" | "traff_rounds" | ...
     r: int
     n_buckets: int
     us: float  # best-of-reps wallclock per call

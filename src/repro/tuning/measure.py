@@ -32,7 +32,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from repro.core.autotune import choose
 from repro.core.cost_model import HOST_CPU, Fabric
 from repro.core.monoid import MONOIDS
-from repro.core.schedule import build_generalized, build_ring, max_r
+from repro.core.schedule import (build_dual_root, build_generalized,
+                                 build_ring, build_traff_rounds, max_r)
 from repro.obs import trace as obs_trace
 from repro.obs.log import data, get_logger
 from repro.obs.skew import device_arrival_probe
@@ -82,9 +83,13 @@ def candidate_grid(P: int, nbytes: int, *, smoke: bool = False) -> List[Candidat
     [('generalized', 0, 1), ('generalized', 0, 2), ('generalized', 0, 4)]
     >>> [c for c in candidate_grid(8, 1 << 20) if c[0] == "ring"]
     [('ring', 0, 1), ('ring', 0, 2), ('ring', 0, 4)]
+    >>> sorted({c[0] for c in candidate_grid(8, 1 << 20)})
+    ['dual_root', 'generalized', 'ring', 'traff_rounds']
     """
     buckets = (1, 2) if smoke else (1, 2, 4)
     kinds: List[Tuple[str, int]] = [("generalized", r) for r in range(max_r(P) + 1)]
+    kinds.append(("traff_rounds", 0))
+    kinds.append(("dual_root", 0))
     kinds.append(("ring", 0))
     grid = []
     for kind, r in kinds:
@@ -96,7 +101,13 @@ def candidate_grid(P: int, nbytes: int, *, smoke: bool = False) -> List[Candidat
 
 
 def _schedule(kind: str, P: int, r: int):
-    return build_ring(P) if kind == "ring" else build_generalized(P, r)
+    if kind == "ring":
+        return build_ring(P)
+    if kind == "traff_rounds":
+        return build_traff_rounds(P)
+    if kind == "dual_root":
+        return build_dual_root(P)
+    return build_generalized(P, r)
 
 
 def _bench_interleaved(variants: Dict[str, object], x, iters: int, reps: int):

@@ -22,8 +22,9 @@ from repro.core.allreduce import (all_gather_flat, all_to_all_flat,  # noqa: E40
                                   hierarchical_allreduce_flat, psum_tree,
                                   reduce_scatter_flat, tree_all_gather,
                                   tree_reduce_scatter)
-from repro.core.schedule import (build_generalized, build_ring,  # noqa: E402
-                                 build_sorted_generalized, max_r)
+from repro.core.schedule import (build_dual_root, build_generalized,  # noqa: E402
+                                 build_ring, build_sorted_generalized,
+                                 build_traff_rounds, max_r)
 from repro.topology import Level, Topology, build_hierarchical  # noqa: E402
 from repro.topology.fabric import TPU_DCN  # noqa: E402
 from repro.core.cost_model import TPU_V5E_ICI  # noqa: E402
@@ -608,8 +609,9 @@ def check_elastic_resize():
 def check_conformance():
     """Acceptance sweep vs the real lax references, P in {2,3,5,6,7,8,16}
     on meshes over the first P of 16 forced host devices: max/min/mean
-    allreduce and both all-to-all kinds, divisible and ragged sizes,
-    each bit-exact vs lax.pmax / lax.pmin / lax.psum / lax.all_to_all."""
+    allreduce (the traff_rounds and dual_root families included) and
+    both all-to-all kinds, divisible and ragged sizes, each bit-exact vs
+    lax.pmax / lax.pmin / lax.psum / lax.all_to_all."""
     import jax.numpy as jnp
     from jax import lax
     from jax.sharding import Mesh
@@ -630,10 +632,13 @@ def check_conformance():
             # bit-exact vs lax.psum on the real mesh
             order = tuple(np.roll(np.arange(n)[::-1], 1).tolist())
             sorted_sched = build_sorted_generalized(n, r, order)
+            traff = build_traff_rounds(n)
+            dual = build_dual_root(n)
             nb = 2 if m > n else 1
             a2a = m % n == 0
 
-            def f(v, s=sched, ss=sorted_sched, nb=nb, n=n, a2a=a2a):
+            def f(v, s=sched, ss=sorted_sched, tr=traff, du=dual,
+                  nb=nb, n=n, a2a=a2a):
                 vi = v[0]
                 vf = vi.astype(jnp.float32)
                 outs = [
@@ -648,6 +653,13 @@ def check_conformance():
                     lax.psum(vf, "data") / n,
                     allreduce_flat(vi, "data", ss, combine="sum",
                                    n_buckets=nb),
+                    allreduce_flat(vi, "data", tr, combine="sum",
+                                   n_buckets=nb),
+                    allreduce_flat(vi, "data", du, combine="sum",
+                                   n_buckets=nb),
+                    allreduce_flat(vi, "data", tr, combine="max"),
+                    allreduce_flat(vi, "data", du, combine="min",
+                                   n_buckets=1),
                 ]
                 if a2a:
                     outs += [
@@ -658,15 +670,17 @@ def check_conformance():
                     ]
                 return [o[None] for o in outs]
 
-            n_out = 12 if a2a else 9
+            n_out = 16 if a2a else 13
             g = jax.jit(shard_map(
                 f, mesh=mesh, in_specs=P("data", None),
                 out_specs=[P("data", None)] * n_out))
             outs = [np.asarray(o) for o in g(x)]
             pairs = [("sum", 0, 1), ("max", 2, 3), ("min", 4, 5),
-                     ("mean", 6, 7), ("sorted_sum", 8, 1)]
+                     ("mean", 6, 7), ("sorted_sum", 8, 1),
+                     ("traff_sum", 9, 1), ("dual_sum", 10, 1),
+                     ("traff_max", 11, 3), ("dual_min", 12, 5)]
             if a2a:
-                pairs += [("a2a_direct", 9, 11), ("a2a_bruck", 10, 11)]
+                pairs += [("a2a_direct", 13, 15), ("a2a_bruck", 14, 15)]
             for name, i, j in pairs:
                 assert (outs[i] == outs[j]).all(), (n, m, name)
             assert (outs[0][0] == x.sum(0)).all(), (n, m)

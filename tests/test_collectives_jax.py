@@ -10,6 +10,11 @@ import sys
 
 import pytest
 
+# every test here spawns a forced-host-device worker process; under
+# pytest-xdist they all pin to one worker (--dist loadgroup) so the
+# heavyweight subprocesses never run concurrently with each other
+pytestmark = pytest.mark.xdist_group("subprocess")
+
 _WORKER = os.path.join(os.path.dirname(__file__), "_multidevice_worker.py")
 
 

@@ -38,9 +38,10 @@ from repro.core.execplan import (compile_a2a_plan, simulate_a2a,  # noqa: E402
 from repro.core.monoid import (MAX, MEAN, MIN, SUM, premul_sum,  # noqa: E402
                                resolve_combine)
 from repro.core.schedule import (InvalidScheduleError, Schedule,  # noqa: E402
-                                 ShapeError, _verify, build_generalized,
-                                 build_ring, build_sorted_generalized, max_r,
-                                 ragged_sizes, schedule_summary)
+                                 ShapeError, _verify, build_dual_root,
+                                 build_generalized, build_ring,
+                                 build_sorted_generalized, build_traff_rounds,
+                                 max_r, ragged_sizes, schedule_summary)
 from repro.core.simulator import simulate  # noqa: E402
 
 # non-powers-of-two deliberately over-represented: they are the paper's
@@ -76,7 +77,7 @@ def test_conformance_allreduce_family(data):
     """simulate == simulate_plan == monoid ground truth, bit for bit."""
     P = data.draw(st.sampled_from(PS), label="P")
     kind = data.draw(st.sampled_from(["generalized", "generalized", "ring",
-                                      "sorted"]),
+                                      "sorted", "traff_rounds", "dual_root"]),
                      label="kind")
     r = data.draw(st.integers(0, max_r(P)), label="r") \
         if kind in ("generalized", "sorted") else 0
@@ -93,8 +94,14 @@ def test_conformance_allreduce_family(data):
         seed = data.draw(st.integers(0, 2**31 - 1), label="order_seed")
         np.random.default_rng(seed).shuffle(order)
         sched = build_sorted_generalized(P, r, tuple(order))
+    elif kind == "ring":
+        sched = build_ring(P)
+    elif kind == "traff_rounds":
+        sched = build_traff_rounds(P)
+    elif kind == "dual_root":
+        sched = build_dual_root(P)
     else:
-        sched = build_ring(P) if kind == "ring" else build_generalized(P, r)
+        sched = build_generalized(P, r)
     vectors = _draw_vectors(data, P, m, dtype)
     want = _reference(monoid, vectors)
     ctx = (f"case P={P} kind={kind} r={r} m={m} dtype={np.dtype(dtype)} "
@@ -178,6 +185,80 @@ def test_sorted_schedule_acceptance_sweep():
                     assert (out == want).all(), (P, r, o)
                 for out in simulate_plan(sched, vecs, n_buckets=2):
                     assert (out == want).all(), (P, r, o, "plan")
+
+
+def test_new_family_acceptance_sweep():
+    """Acceptance criterion for the Traff-rounds and dual-root kinds:
+    bit-exact vs the symbolic simulator oracle for every acceptance P
+    (primes included), divisible and ragged sizes, every bucket count --
+    and the structural claims hold: traff_rounds runs 2*ceil(lg P)
+    rounds at 2*(P-1) chunk-units (the optimal non-pipelined figures,
+    arXiv:2410.14234), dual_root runs one round fewer with two result
+    copies after reduction (arXiv:2109.12626)."""
+    import math
+    for P in (2, 3, 5, 6, 7, 8, 16):
+        K = math.ceil(math.log2(P))
+        traff = build_traff_rounds(P)
+        assert traff.n_steps == 2 * K
+        assert traff.units_sent == 2 * (P - 1)
+        assert traff.units_reduced == P - 1
+        dual = build_dual_root(P)
+        assert dual.n_steps == 2 * K - 1
+        assert dual.s == 2
+        for sched in (traff, dual):
+            assert sorted(sl.place for sl in sched.final_slots) \
+                == list(range(P))
+            for m in (1, max(P - 1, 1), P, 3 * P + 2):
+                vecs = [np.arange(m, dtype=np.int64) * (d + 2) - d
+                        for d in range(P)]
+                want = np.stack(vecs).sum(0)
+                for out in simulate(sched, vecs):
+                    assert (out == want).all(), (P, sched.kind, m)
+                for nb in (1, 2, 4):
+                    for out in simulate_plan(sched, vecs, n_buckets=nb):
+                        assert (out == want).all(), (P, sched.kind, m, nb)
+
+
+def test_new_family_edge_cases():
+    """Degenerate corners of the new kinds, bit-exact vs oracles:
+    P=1 is a no-op, P=2 collapses to one exchange (dual_root) / two
+    rounds (traff_rounds), m < P rides the ragged split with zero-width
+    chunks, and dual_root with n_buckets=1 (pipelining disabled) matches
+    the symbolic simulator exactly."""
+    # P=1: empty step list, input passes through untouched
+    for build in (build_traff_rounds, build_dual_root):
+        s1 = build(1)
+        assert s1.n_steps == 0
+        v = [np.arange(5, dtype=np.int64)]
+        assert (simulate(s1, v)[0] == v[0]).all()
+        assert (simulate_plan(s1, v)[0] == v[0]).all()
+    # P=2 degenerate rounds: dual_root needs a single exchange (both
+    # "roots" are the two devices), traff_rounds one RS + one AG round
+    assert build_dual_root(2).n_steps == 1
+    assert build_traff_rounds(2).n_steps == 2
+    # m < P: some chunks are zero-width; still exact for every kind
+    for P in (5, 7, 8):
+        for m in (1, 2, P - 1):
+            vecs = [np.full((m,), d + 1, dtype=np.int64) for d in range(P)]
+            want = np.stack(vecs).sum(0)
+            for build in (build_traff_rounds, build_dual_root):
+                sched = build(P)
+                for out in simulate(sched, vecs):
+                    assert (out == want).all(), (P, m, sched.kind)
+                for out in simulate_plan(sched, vecs, n_buckets=1):
+                    assert (out == want).all(), (P, m, sched.kind, "plan")
+    # dual_root with pipelining disabled (n_buckets=1) on a non-trivial
+    # ragged size: the unbucketed replay is the plain schedule semantics
+    sched = build_dual_root(7)
+    rng = np.random.default_rng(3)
+    vecs = [rng.integers(-1000, 1000, (23,)).astype(np.int64)
+            for _ in range(7)]
+    want = np.stack(vecs).sum(0)
+    got_sym = simulate(sched, vecs)
+    got_plan = simulate_plan(sched, vecs, n_buckets=1)
+    for d in range(7):
+        assert (got_sym[d] == want).all()
+        assert (got_plan[d] == want).all()
 
 
 def test_conformance_case_count():
@@ -295,6 +376,7 @@ def test_resolve_combine_surface():
 _WORKER = os.path.join(os.path.dirname(__file__), "_multidevice_worker.py")
 
 
+@pytest.mark.xdist_group("subprocess")
 def test_conformance_vs_lax_16dev():
     """max/min/mean allreduce and schedule-driven all_to_all, bit-exact
     vs lax.pmax/pmin/psum/all_to_all for P in {2,3,5,6,7,8,16} incl.

@@ -11,6 +11,7 @@ import pytest
 
 
 @pytest.mark.slow
+@pytest.mark.xdist_group("subprocess")
 def test_dryrun_single_cell(tmp_path):
     env = dict(os.environ)
     env.pop("XLA_FLAGS", None)  # dryrun sets its own

@@ -12,6 +12,9 @@ import sys
 
 import pytest
 
+# subprocess-spawning module: serialized under pytest-xdist (loadgroup)
+pytestmark = pytest.mark.xdist_group("subprocess")
+
 _WORKER = os.path.join(os.path.dirname(__file__), "_parallel_worker.py")
 
 

@@ -14,6 +14,10 @@ from repro.checkpoint.checkpoint import latest_steps
 from repro.runtime.coordinator import Coordinator, CoordinatorConfig
 from repro.runtime.faults import FaultPlan, parse_faults
 
+# the Coordinator spawns real worker OS processes; serialize the module
+# under pytest-xdist so meshes never fight for cores or ports
+pytestmark = pytest.mark.xdist_group("subprocess")
+
 TIMEOUT_S = 60.0  # generous per-barrier budget: CI boxes stall
 
 
@@ -102,8 +106,10 @@ def test_delay_fault_surfaces_in_skew_telemetry(tmp_path):
 def test_skew_reschedule_flips_to_latency_leaning(tmp_path):
     """sort_on_skew: a heavy measured straggler re-runs schedule
     selection with the live arrival deltas; the pinned bandwidth-optimal
-    r=0 is overridden by the skew timeline's latency-leaning pick, and
-    the new spec ships with the next step barrier."""
+    r=0 is overridden by the skew timeline's pick -- traff_rounds, whose
+    final power-of-two rounds move the fewest bytes after the last
+    arrival (robust winner across a swept delta neighborhood) -- and the
+    new spec ships with the next step barrier and runs on the wire."""
     cfg = _cfg(tmp_path, ckpt_every=50,
                schedule_kind="generalized", schedule_r=0,
                sort_on_skew=True, skew_threshold_us=5000.0,
@@ -112,7 +118,7 @@ def test_skew_reschedule_flips_to_latency_leaning(tmp_path):
         recs = c.run(4)
     assert recs[0]["schedule"].startswith("generalized,r=0")
     assert recs[1]["skew_us"] > 5000.0
-    assert recs[-1]["schedule"] == "generalized,r=2"  # re-chosen
+    assert recs[-1]["schedule"] == "traff_rounds,r=0"  # re-chosen
     assert recs[-1]["loss"] < recs[0]["loss"]
 
 

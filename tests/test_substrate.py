@@ -317,6 +317,7 @@ _WORKER = os.path.join(os.path.dirname(__file__), "_multidevice_worker.py")
 
 
 @pytest.mark.slow
+@pytest.mark.xdist_group("subprocess")
 def test_elastic_resize_prime_counts_8dev():
     """resize() through prime dp counts 8 -> 7 -> 5 with zero1 opt-state
     reset and restore_latest across layout changes; runs in a subprocess

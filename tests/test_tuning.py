@@ -235,6 +235,7 @@ def test_choose_collective_consults_policy(tuned_env):
     assert hier.source == "model"
 
 
+@pytest.mark.xdist_group("subprocess")
 def test_tuned_choice_executes_correctly(tuned_env, tmp_path):
     """End to end: a measured Choice coming out of the cache drives the
     real shard_map executor and still reduces correctly (2 forced host
@@ -445,6 +446,87 @@ def test_skewed_cells_flags_heavy_skew():
     assert out[1]["deltas_us"] == [0.0] * 7 + [400.0]
     assert skewed_cells([calm, unprobed]) == []
     assert SKEW_THRESHOLD_US > 0
+
+
+# ---------------------------------------------------------------------------
+#  CI family-coverage gate (benchmarks/check_regression.py --families)
+# ---------------------------------------------------------------------------
+
+
+def _tuning_payload(path, kinds_per_row):
+    """Write a minimal results/tuning.json-shaped payload."""
+    payload = {
+        "results": [
+            {
+                "label": f"row{i}",
+                "measurements": [
+                    {"P": 8, "nbytes": 1 << 20, "kind": k, "r": 0, "n_buckets": 1}
+                    for k in kinds
+                ],
+            }
+            for i, kinds in enumerate(kinds_per_row)
+        ]
+    }
+    path.write_text(json.dumps(payload))
+    return path
+
+
+def test_family_gate_passes_and_fails(tmp_path):
+    """The --families gate holds the measured family set: a doctored
+    baseline carrying a family the current run never measures must exit
+    2 (MISWIRED) and name the missing family; full coverage passes."""
+    import os
+    import sys
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "benchmarks"))
+    from check_regression import load_families, main
+
+    base = _tuning_payload(
+        tmp_path / "base.json",
+        [["generalized", "ring"], ["traff_rounds", "dual_root"]],
+    )
+    cur_ok = _tuning_payload(
+        tmp_path / "cur_ok.json",
+        [["generalized", "ring", "traff_rounds", "dual_root", "extra_kind"]],
+    )
+    assert load_families(base) == {"generalized", "ring", "traff_rounds", "dual_root"}
+
+    verdict = tmp_path / "verdict.json"
+    argv = ["--families", "--baseline", str(base), "--json", str(verdict)]
+    # full coverage (extra current-only families are fine): pass
+    assert main(argv + ["--current", str(cur_ok)]) == 0
+    assert json.loads(verdict.read_text())["verdict"] == "OK"
+
+    # doctored current drops dual_root from the candidate grid: MISWIRED
+    cur_bad = _tuning_payload(
+        tmp_path / "cur_bad.json", [["generalized", "ring", "traff_rounds"]]
+    )
+    assert main(argv + ["--current", str(cur_bad)]) == 2
+    out = json.loads(verdict.read_text())
+    assert out["verdict"] == "MISWIRED"
+    assert out["missing_families"] == ["dual_root"]
+
+    # a baseline that measures nothing is a mis-wired gate, not a pass
+    empty = _tuning_payload(tmp_path / "empty.json", [])
+    assert main(["--families", "--baseline", str(empty), "--current", str(cur_ok)]) == 2
+
+
+def test_committed_tuning_table_has_competing_families():
+    """The committed table the CI gate treats as source of truth must
+    itself measure every family in the candidate grid, and at least two
+    distinct families must win cells (the point of the competition)."""
+    import os
+    import sys
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "benchmarks"))
+    from check_regression import load_families
+
+    path = os.path.join(os.path.dirname(__file__), "..", "results", "tuning.json")
+    assert load_families(path) >= {"generalized", "ring", "traff_rounds", "dual_root"}
+    with open(path) as f:
+        payload = json.load(f)
+    winners = {row["measured_winner"]["kind"] for row in payload["results"]}
+    assert len(winners) >= 2, winners
 
 
 def test_choose_uses_persisted_deltas_when_tuned(tuned_env):
