@@ -71,6 +71,19 @@ table is regenerated on whatever runner CI lands on.
         --current results/tuning_smoke.json \
         --baseline results/tuning.json \
         --json family_gate.json
+
+The serving benchmark (results/serving.json) gates the same way as the
+executor: its keys are dimensionless ratios against a same-host solo
+baseline measured in the same process (``tokens_per_s_ratio`` floor;
+``p99_ttft_ratio`` / ``p99_latency_ratio`` ceilings, being latencies),
+and its rows carry ``"bench": "serve"`` so the ROW_CLASSES guard fails
+MISWIRED if a grid edit drops every serving label out of the overlap.
+
+    python benchmarks/run.py serve --smoke --out results/serving_smoke.json
+    python benchmarks/check_regression.py \
+        --current results/serving_smoke.json \
+        --baseline results/serving.json \
+        --keys tokens_per_s_ratio,p99_ttft_ratio,p99_latency_ratio
 """
 
 from __future__ import annotations
@@ -90,8 +103,19 @@ DEFAULT_KEYS = ("speedup_execplan", "speedup_pipelined", "speedup_bruck_vs_direc
 # floor; these are costs, where the gate is a *ceiling* (cur > base *
 # (1 + tol) regresses).  recovery_steps = steps of work re-executed
 # after a failure (chaos benchmark): deterministic, so any growth is a
-# real behavior change, not noise.
-LOWER_IS_BETTER = frozenset({"recovery_steps"})
+# real behavior change, not noise.  The serving benchmark's TTFT and
+# request-latency ratios (p99 vs the same-host solo baseline's mean
+# request latency, see benchmarks/serve_worker.py) are latencies:
+# climbing is the regression.
+LOWER_IS_BETTER = frozenset(
+    {
+        "recovery_steps",
+        "p50_ttft_ratio",
+        "p99_ttft_ratio",
+        "p50_latency_ratio",
+        "p99_latency_ratio",
+    }
+)
 
 
 def is_ragged(row: dict) -> bool:
@@ -109,10 +133,16 @@ def is_a2a(row: dict) -> bool:
     return row.get("collective") == "a2a" or row.get("op") == "a2a"
 
 
+def is_serving(row: dict) -> bool:
+    """Continuous-batching serving datapoint (results/serving.json)."""
+    return row.get("bench") == "serve"
+
+
 ROW_CLASSES = (
     ("ragged", is_ragged, "the exact-split executor path"),
     ("non-sum-op", is_nonsum_op, "the monoid (non-sum combine) path"),
     ("a2a", is_a2a, "the schedule-driven all-to-all path"),
+    ("serving", is_serving, "the continuous-batching serving path"),
 )
 
 

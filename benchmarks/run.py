@@ -26,7 +26,11 @@ predicted-vs-measured model-error report, see docs/observability.md),
 grid, sum + max operators -> persistent tuning cache +
 results/tuning.json), ``chaos [--smoke] [--trace] [--out PATH]``
 (deterministic fault scenarios on the multi-process runtime mesh ->
-results/chaos.json; exact recovery_steps rows, gated lower-is-better).
+results/chaos.json; exact recovery_steps rows, gated lower-is-better),
+``serve [--smoke] [--trace] [--out PATH]`` (continuous-batching serving
+on a dp=2 x tp=2 mesh of 8 simulated CPU devices -> results/serving.json;
+p50/p99 TTFT/latency + tokens/sec per offered QPS, gated as
+dimensionless ratios vs a same-host solo baseline, see docs/serving.md).
 
 Protocol CSV rows go to stdout via ``repro.obs.log.data``; diagnostics
 go to stderr as logfmt lines filtered by ``REPRO_LOG``.
@@ -223,6 +227,22 @@ def tune_bench(smoke: bool = False, out: str = "results/tuning.json",
     _worker_bench("tune_worker.py", "tune", extra, timeout=3600)
 
 
+def serve_bench(smoke: bool = False, out: str = "results/serving.json",
+                trace: bool = False) -> None:
+    """Continuous-batching serving benchmark on a dp=2 x tp=2 mesh of 8
+    simulated CPU devices: one deterministic request mix served at each
+    offered QPS level, reporting p50/p99 TTFT/latency and tokens/sec
+    plus the dimensionless ratios vs a same-host solo (one-request-at-a-
+    time) baseline that check_regression.py gates
+    (``tokens_per_s_ratio`` floor, ``p99_ttft_ratio`` /
+    ``p99_latency_ratio`` ceilings).  Writes ``results/serving.json``;
+    ``--trace`` saves the engine.tick Chrome trace + metrics snapshot
+    next to it."""
+    extra = ["--out", out] + (["--smoke"] if smoke else []) \
+        + (["--trace"] if trace else [])
+    _worker_bench("serve_worker.py", "serve", extra)
+
+
 def chaos_bench(smoke: bool = False, out: str = "results/chaos.json",
                 trace: bool = False) -> None:
     """Deterministic fault scenarios on the real coordinator/worker
@@ -286,9 +306,14 @@ def main(argv=None) -> None:
         chaos_bench(smoke="--smoke" in argv,
                     out=_opt(argv, "--out", "results/chaos.json"),
                     trace="--trace" in argv)
+    elif mode == "serve":
+        serve_bench(smoke="--smoke" in argv,
+                    out=_opt(argv, "--out", "results/serving.json"),
+                    trace="--trace" in argv)
     else:
         raise SystemExit(
-            f"unknown mode {mode!r} (figures | executor | tune | chaos)")
+            f"unknown mode {mode!r} "
+            "(figures | executor | tune | chaos | serve)")
 
 
 if __name__ == "__main__":

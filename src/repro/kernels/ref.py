@@ -94,10 +94,13 @@ def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     GQA: Hq must be a multiple of Hkv; kv heads are repeated.
     ``window``: sliding-window attention -- query i attends to keys in
     (i_abs - window, i_abs] where i_abs = i + (Skv - Sq) (decode offset).
-    ``kv_valid``: traced scalar -- keys at index >= kv_valid are masked
-    (KV-cache decode over a fixed-size buffer).
-    ``q_positions``: (Sq,) absolute query positions overriding the
-    tail-alignment default (cache decode / prefill into a larger buffer).
+    ``kv_valid``: traced scalar or per-row ``(B,)`` vector -- keys at
+    index >= kv_valid are masked (KV-cache decode over a fixed-size
+    buffer; the vector form serves continuous batching, where every
+    batch row sits at its own sequence length).
+    ``q_positions``: (Sq,) or per-row (B, Sq) absolute query positions
+    overriding the tail-alignment default (cache decode / prefill into
+    a larger buffer).
     """
     B, Hq, Sq, D = q.shape
     Hkv, Skv = k.shape[1], k.shape[2]
@@ -109,24 +112,34 @@ def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
         scale = D ** -0.5
     logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
                         k.astype(jnp.float32)) * scale
+    # mask shape: (Sq, Skv) shared, or (B, Sq, Skv) when any constraint
+    # is per-row (vector kv_valid / 2-D q_positions)
     if q_positions is None:
         qpos = jnp.arange(Sq)[:, None] + (Skv - Sq)
     else:
-        qpos = q_positions.astype(jnp.int32)[:, None]
+        qpos = q_positions.astype(jnp.int32)[..., :, None]
     kpos = jnp.arange(Skv)[None, :]
     mask = jnp.ones((Sq, Skv), dtype=bool)
     if causal:
-        mask &= kpos <= qpos
+        mask = mask & (kpos <= qpos)
     if window is not None:
-        mask &= kpos > qpos - window
+        mask = mask & (kpos > qpos - window)
     if kv_valid is not None:
-        mask &= kpos < kv_valid
-    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+        kv_valid = jnp.asarray(kv_valid)
+        if kv_valid.ndim == 1:
+            mask = mask & (kpos[None] < kv_valid[:, None, None])
+        else:
+            mask = mask & (kpos < kv_valid)
+    if mask.ndim == 2:
+        mask = mask[None, None]
+    else:
+        mask = mask[:, None]
+    logits = jnp.where(mask, logits, -jnp.inf)
     if return_lse:
         m = jnp.max(logits, axis=-1)
         m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
         p = jnp.exp(logits - m_safe[..., None])
-        p = jnp.where(mask[None, None], p, 0.0)
+        p = jnp.where(mask, p, 0.0)
         den = jnp.sum(p, axis=-1)
         lse = jnp.where(den > 0, m_safe + jnp.log(jnp.maximum(den, 1e-30)),
                         -jnp.inf)

@@ -30,6 +30,45 @@ class KVCache(NamedTuple):
     pos: jnp.ndarray        # scalar int32: tokens already in cache
 
 
+class PagedKV(NamedTuple):
+    """Blockwise (paged) KV cache: one shared physical pool per layer.
+
+    ``k``/``v`` are ``(n_blocks, Hkv_local, block_size, hd)`` pools.
+    Which physical block backs logical block ``j`` of batch slot ``b``
+    lives OUTSIDE the cache, in the per-step :class:`PageCtx` block
+    table (host-managed by :class:`repro.serve.kv.KVBlockManager`).
+    Physical block 0 is the *garbage block*: unallocated table entries
+    and padding-token writes land there and are never read back (per-row
+    ``kv_valid`` masks everything past each slot's written length).
+
+    No ``pos`` scalar: continuous batching needs per-row positions,
+    which the engine tracks host-side and passes via ``PageCtx``.
+    """
+
+    k: jnp.ndarray
+    v: jnp.ndarray
+
+
+class PageCtx(NamedTuple):
+    """Per-step paged-decode context (all leaves are arrays, so the ctx
+    crosses ``shard_map`` as an ordinary pytree).
+
+    block_table: (B, nb_max) int32 -- physical block of each logical
+                 block per slot (0 = garbage block for unallocated).
+    lengths:     (B,) int32 -- tokens already in each slot's cache.
+    n_new:       (B,) int32 -- valid new tokens this step per slot
+                 (0 = row inactive this tick; tokens past ``n_new`` are
+                 right-padding whose cache writes are dropped).
+    reset:       (B,) bool -- slots freshly admitted this step whose
+                 recurrent state must restart from the initial state.
+    """
+
+    block_table: jnp.ndarray
+    lengths: jnp.ndarray
+    n_new: jnp.ndarray
+    reset: jnp.ndarray
+
+
 def attn_replicated(cfg, pc: ParallelConfig) -> bool:
     """True when the query-head count does not divide TP (e.g.
     recurrentgemma's 10 heads on a 16-way model axis).  Attention then
@@ -91,6 +130,7 @@ def attention_block(p, xg, cfg, pc: ParallelConfig, *,
                     window: Optional[int], positions: jnp.ndarray,
                     cache: Optional[KVCache] = None,
                     rolling: bool = False, seq_shard: bool = False,
+                    paged: Optional[PageCtx] = None,
                     attn_impl: str = "xla"
                     ) -> Tuple[jnp.ndarray, Optional[KVCache]]:
     """Temporal mixing via attention.
@@ -100,6 +140,24 @@ def attention_block(p, xg, cfg, pc: ParallelConfig, *,
     updated cache (decode path).
     """
     B, S, _ = xg.shape
+    if isinstance(cache, PagedKV):
+        assert paged is not None, "PagedKV caches need a PageCtx"
+        q, k, v = qkv_project(p, xg, cfg, pc)
+        q, k = rope(q, k, positions, theta=cfg.rope_theta)   # (B, S) pos
+        cache = paged_cache_update(cache, k, v, paged)
+        k_view, v_view = paged_view(cache, paged.block_table)
+        o = kops.attention(
+            q, k_view, v_view,
+            causal=cfg.causal,
+            window=window,
+            kv_valid=paged.lengths + paged.n_new,            # per row
+            q_positions=positions,                           # (B, S)
+            impl=attn_impl)
+        o = o.swapaxes(1, 2).reshape(B, S, -1)
+        out = jax.lax.dot_general(
+            o, p["wo"].astype(o.dtype), (((2,), (0,)), ((), ())),
+            preferred_element_type=o.dtype)
+        return out, cache
     if cache is not None and seq_shard:
         o_full, cache = seq_shard_decode(p, xg, cfg, pc,
                                          positions=positions, cache=cache,
@@ -154,6 +212,63 @@ def _cache_update(cache: KVCache, k_new, v_new, window, *, rolling: bool):
     v = lax.dynamic_update_slice(cache.v, v_new, (0, 0, cache.pos, 0))
     new = KVCache(k, v, cache.pos + S_new)
     return k, v, new, cache.pos + S_new
+
+
+def _pool_heads(cfg, pc: ParallelConfig) -> int:
+    """KV-head count of one device's cache pool (same rule as the dense
+    :func:`init_cache` without seq-sharding)."""
+    if attn_replicated(cfg, pc):
+        return cfg.n_kv_heads
+    if kv_replicated(cfg, pc) and pc.tp > 1:
+        return 1
+    return local_kv_heads(cfg, pc)
+
+
+def init_paged_pool(cfg, pc: ParallelConfig, n_blocks: int,
+                    block_size: int, dtype=COMPUTE_DTYPE) -> PagedKV:
+    """One layer's physical KV block pool (block 0 = garbage block)."""
+    shape = (n_blocks, _pool_heads(cfg, pc), block_size, cfg.hd)
+    return PagedKV(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def paged_cache_update(cache: PagedKV, k_new, v_new, ctx: PageCtx):
+    """Scatter the new token(s) of every slot into the shared pool.
+
+    Token ``t`` of row ``b`` lands at logical position ``lengths[b] +
+    t``, i.e. physical ``(block_table[b, pos // bs], :, pos % bs)``.
+    Padding tokens (``t >= n_new[b]``) are routed to an out-of-range
+    block index and dropped by the scatter -- they neither advance any
+    slot nor scribble on another slot's blocks.
+    """
+    B, H, S, hd = k_new.shape
+    nb, _, bs, _ = cache.k.shape
+    pos = ctx.lengths[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+    valid = jnp.arange(S)[None, :] < ctx.n_new[:, None]          # (B, S)
+    logical = jnp.clip(pos // bs, 0, ctx.block_table.shape[1] - 1)
+    blk = jnp.take_along_axis(ctx.block_table, logical, axis=1)  # (B, S)
+    blk = jnp.where(valid, blk, nb)          # OOB sentinel: dropped
+    off = pos % bs
+    kk = jnp.swapaxes(k_new, 1, 2).astype(cache.k.dtype)   # (B, S, H, hd)
+    vv = jnp.swapaxes(v_new, 1, 2).astype(cache.v.dtype)
+    k = cache.k.at[blk, :, off].set(kk, mode="drop")
+    v = cache.v.at[blk, :, off].set(vv, mode="drop")
+    return PagedKV(k, v)
+
+
+def paged_view(cache: PagedKV, block_table):
+    """Gather each slot's logical cache view from the pool.
+
+    Returns ``(B, H, nb_max * bs, hd)`` K/V where row ``b``'s sequence
+    axis is its own logical positions (garbage past ``kv_valid``).
+    """
+    B, nbm = block_table.shape
+    _, H, bs, hd = cache.k.shape
+    kv = []
+    for pool in (cache.k, cache.v):
+        view = pool[block_table]                  # (B, nbm, H, bs, hd)
+        view = jnp.moveaxis(view, 2, 1).reshape(B, H, nbm * bs, hd)
+        kv.append(view)
+    return kv[0], kv[1]
 
 
 def init_cache(cfg, pc: ParallelConfig, batch_local: int, max_len: int,

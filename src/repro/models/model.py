@@ -22,14 +22,16 @@ from jax import lax
 
 from repro.models import moe as moe_lib
 from repro.models import recurrent as rec
-from repro.models.attention import (attention_block, attn_replicated,
-                                    init_cache, kv_replicated)
+from repro.models.attention import (PageCtx, attention_block,
+                                    attn_replicated, init_cache,
+                                    init_paged_pool, kv_replicated)
 from repro.models.config import ModelConfig
 from repro.models.layers import (COMPUTE_DTYPE, embed_tokens, mlp_apply,
                                  norm_apply, vocab_parallel_ce)
 from repro.parallel.api import (ParallelConfig, ParamSpec, choose_fsdp_dim,
                                 fsdp_gather_tree, seq_all_gather,
-                                seq_reduce_scatter, tp_psum, tp_rank)
+                                seq_reduce_scatter, tp_decode_all_gather,
+                                tp_decode_psum, tp_psum, tp_rank)
 
 PARAM_DTYPE = jnp.float32      # master copy; cast to bf16 at use
 
@@ -301,9 +303,24 @@ def _shard_slice(x, pc: ParallelConfig, axis: int = 1):
     return lax.dynamic_slice_in_dim(x, tp_rank(pc) * n, n, axis)
 
 
+def _row_mask(mask, ndim):
+    """(B,) bool -> (B, 1, ..., 1) broadcastable over an ndim array."""
+    return mask.reshape(mask.shape + (1,) * (ndim - 1))
+
+
+def _fresh_state(kind: str, cfg: ModelConfig, pc: ParallelConfig, B: int):
+    if kind == "rglru":
+        return rec.init_rglru_state(cfg, pc, B)
+    if kind == "mlstm":
+        return rec.init_mlstm_state(cfg, pc, B)
+    if kind == "slstm":
+        return rec.init_slstm_state(cfg, pc, B)
+    raise ValueError(kind)
+
+
 def block_apply(kind: str, p, x, cfg: ModelConfig, pc: ParallelConfig, *,
                 sp: bool, positions, cache=None, rolling: bool = False,
-                seq_shard: bool = False,
+                seq_shard: bool = False, paged=None,
                 moe_layer: bool, attn_impl: str = "xla"):
     """One residual block.  x: (B, S/tp, d) if sp else (B, S, d)."""
     aux = jnp.float32(0.0)
@@ -312,11 +329,23 @@ def block_apply(kind: str, p, x, cfg: ModelConfig, pc: ParallelConfig, *,
 
     window = cfg.window if (kind == "local_attn" or cfg.window) else None
     new_cache = cache
+    recurrent = kind in ("rglru", "mlstm", "slstm")
+    if paged is not None and recurrent and cache is not None:
+        # continuous batching: a freshly admitted slot restarts its
+        # recurrent state; a row with no valid tokens this tick must
+        # keep its state frozen (its input is padding).  Rows with
+        # 0 < n_new < S are the engine's responsibility to avoid for
+        # recurrent archs (aligned chunking -- see serve/engine.py).
+        B = hg.shape[0]
+        fresh = _fresh_state(kind, cfg, pc, B)
+        cache = jax.tree.map(
+            lambda old, f: jnp.where(_row_mask(paged.reset, old.ndim),
+                                     f, old), cache, fresh)
     if kind in ("attn", "local_attn"):
         mix, new_cache = attention_block(
             p["attn"], hg, cfg, pc, window=window, positions=positions,
             cache=cache, rolling=rolling, seq_shard=seq_shard,
-            attn_impl=attn_impl)
+            paged=paged, attn_impl=attn_impl)
     elif kind == "rglru":
         mix, new_cache = rec.rglru_block(p["rnn"], hg, cfg, pc, state=cache)
     elif kind == "mlstm":
@@ -325,6 +354,15 @@ def block_apply(kind: str, p, x, cfg: ModelConfig, pc: ParallelConfig, *,
         mix, new_cache = rec.slstm_block(p["mix"], hg, cfg, pc, state=cache)
     else:
         raise ValueError(kind)
+    if paged is not None and recurrent and cache is not None:
+        active = paged.n_new > 0
+        new_cache = jax.tree.map(
+            lambda old, new: jnp.where(_row_mask(active, new.ndim),
+                                       new, old), cache, new_cache)
+
+    # decode-path psums route through the autotuned ExecPlan collectives
+    # when the serving ParallelConfig asks for them
+    _psum = tp_decode_psum if paged is not None else tp_psum
 
     full_value = (kind == "slstm"
                   or (kind in ("attn", "local_attn")
@@ -333,14 +371,14 @@ def block_apply(kind: str, p, x, cfg: ModelConfig, pc: ParallelConfig, *,
         # replicated full value: slice the SP shard instead of reducing
         out = _shard_slice(mix, pc) if sp else mix
     else:
-        out = seq_reduce_scatter(mix, pc) if sp else tp_psum(mix, pc)
+        out = seq_reduce_scatter(mix, pc) if sp else _psum(mix, pc)
 
     if cfg.parallel_residual and _block_has_mlp(cfg, kind):
         if moe_layer and cfg.moe is not None:
             mo, aux = moe_lib.moe_apply(p["mlp"], hg, cfg, pc)
         else:
             mo = mlp_apply(p["mlp"], hg, cfg, pc)
-        mo = seq_reduce_scatter(mo, pc) if sp else tp_psum(mo, pc)
+        mo = seq_reduce_scatter(mo, pc) if sp else _psum(mo, pc)
         return x + out + mo, new_cache, aux
 
     x = x + out
@@ -351,7 +389,7 @@ def block_apply(kind: str, p, x, cfg: ModelConfig, pc: ParallelConfig, *,
             mo, aux = moe_lib.moe_apply(p["mlp"], hg2, cfg, pc)
         else:
             mo = mlp_apply(p["mlp"], hg2, cfg, pc)
-        x = x + (seq_reduce_scatter(mo, pc) if sp else tp_psum(mo, pc))
+        x = x + (seq_reduce_scatter(mo, pc) if sp else _psum(mo, pc))
     return x, new_cache, aux
 
 
@@ -368,7 +406,8 @@ def _embed_inputs(params, batch, cfg: ModelConfig, pc: ParallelConfig):
 
 def forward(params, specs, batch, cfg: ModelConfig, pc: ParallelConfig, *,
             sp: bool, caches=None, pos0=None, rolling: bool = False,
-            seq_shard: bool = False, attn_impl: str = "xla"):
+            seq_shard: bool = False, paged: PageCtx = None,
+            attn_impl: str = "xla"):
     """Shared trunk.  Returns (hidden_full (B,S,d), new_caches, aux)."""
     if cfg.frontend is None:
         # vocab-parallel embed scatters straight to the SP shard: the full
@@ -379,7 +418,11 @@ def forward(params, specs, batch, cfg: ModelConfig, pc: ParallelConfig, *,
         x_full = _embed_inputs(params, batch, cfg, pc)
         S = x_full.shape[1]
         x = _shard_slice(x_full, pc) if sp else x_full
-    if pos0 is None:
+    if paged is not None:
+        # continuous batching: every row sits at its own sequence offset
+        positions = (paged.lengths[:, None]
+                     + jnp.arange(S, dtype=jnp.int32)[None, :])   # (B, S)
+    elif pos0 is None:
         positions = jnp.arange(S, dtype=jnp.int32)
     else:
         positions = pos0 + jnp.arange(S, dtype=jnp.int32)
@@ -389,7 +432,7 @@ def forward(params, specs, batch, cfg: ModelConfig, pc: ParallelConfig, *,
         c = caches["prefix"][i] if caches is not None else None
         x, nc, _ = block_apply(cfg.block_kind(i), bp, x, cfg, pc, sp=sp,
                                positions=positions, cache=c, rolling=rolling,
-                               seq_shard=seq_shard,
+                               seq_shard=seq_shard, paged=paged,
                                moe_layer=False, attn_impl=attn_impl)
         new_prefix_caches.append(nc)
 
@@ -404,7 +447,7 @@ def forward(params, specs, batch, cfg: ModelConfig, pc: ParallelConfig, *,
             return block_apply(kind, bp, xc, cfg, pc, sp=sp,
                                positions=positions, cache=c,
                                rolling=rolling, seq_shard=seq_shard,
-                               moe_layer=True,
+                               paged=paged, moe_layer=True,
                                attn_impl=attn_impl)
         if pc.remat:
             # per-BLOCK remat: the scans then save only each block's input
@@ -524,6 +567,72 @@ def init_caches(cfg: ModelConfig, pc: ParallelConfig, batch_local: int,
             lambda a: jnp.broadcast_to(
                 a[None, None], (n_cycles, cnt) + a.shape).copy(), one)
     return {"prefix": prefix, "cycles": cycles}
+
+
+def init_paged_caches(cfg: ModelConfig, pc: ParallelConfig,
+                      batch_local: int, n_blocks: int, block_size: int):
+    """Stacked cache pytree for continuous batching: attention layers get
+    a paged KV pool (``n_blocks`` fixed-size blocks indexed per-row via
+    the block table in :class:`PageCtx`; block 0 is the shared garbage
+    block backing unallocated table entries), recurrent layers keep
+    their dense per-slot states.  One pool per layer -- the scan
+    broadcast below stacks (n_cycles, cnt) independent pools -- while
+    all layers share a single block-table geometry."""
+    def cache_for(kind):
+        if kind in ("attn", "local_attn"):
+            return init_paged_pool(cfg, pc, n_blocks, block_size)
+        if kind == "rglru":
+            return rec.init_rglru_state(cfg, pc, batch_local)
+        if kind == "mlstm":
+            return rec.init_mlstm_state(cfg, pc, batch_local)
+        if kind == "slstm":
+            return rec.init_slstm_state(cfg, pc, batch_local)
+        raise ValueError(kind)
+
+    n_prefix = len(cfg.prefix_kinds)
+    prefix = [cache_for(cfg.block_kind(i)) for i in range(n_prefix)]
+    n_cycles = (cfg.n_layers - n_prefix) // len(cfg.cycle)
+    cycles = {}
+    for gi, (kind, cnt) in enumerate(cfg.cycle_groups):
+        one = cache_for(kind)
+        cycles[f"g{gi}"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(
+                a[None, None], (n_cycles, cnt) + a.shape).copy(), one)
+    return {"prefix": prefix, "cycles": cycles}
+
+
+def paged_decode_step(params, specs, tokens, caches, paged: PageCtx,
+                      cfg: ModelConfig, pc: ParallelConfig, *,
+                      attn_impl: str = "xla"):
+    """One continuous-batching tick: tokens (B, S) where row b carries
+    ``paged.n_new[b]`` valid new tokens (decode rows S_new=1, prefill
+    rows up to the chunk, idle rows 0).  Returns (logits (B, 1, V) at
+    each row's LAST valid position, new caches).
+
+    Unlike :func:`decode_step` there is no shared ``pos0``: positions,
+    KV writes and attention masks are all per-row via ``paged``; the
+    final vocab gather runs on the decode-path collectives
+    (:func:`repro.parallel.api.tp_decode_all_gather`)."""
+    top = {k: v for k, v in params.items() if k != "cycles"}
+    top_specs = {k: v for k, v in specs.items() if k != "cycles"}
+    top = fsdp_gather_tree(top, top_specs, pc)
+    params = dict(top, cycles=params["cycles"])
+
+    hidden, new_caches, _ = forward(params, specs, {"tokens": tokens}, cfg,
+                                    pc, sp=False, caches=caches, paged=paged,
+                                    attn_impl=attn_impl)
+    # row b's next-token logits live at its last valid position
+    last = jnp.clip(paged.n_new - 1, 0, hidden.shape[1] - 1)
+    hidden = jnp.take_along_axis(hidden, last[:, None, None], axis=1)
+    head = params["head"] if not cfg.tie_embeddings else {
+        "w": params["embed"]["w"].T}
+    logits = jax.lax.dot_general(
+        hidden, head["w"].astype(hidden.dtype),
+        (((2,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)            # (B, 1, V/tp)
+    if pc.tp > 1 and logits.shape[-1] != cfg.vocab:
+        logits = tp_decode_all_gather(logits, pc, axis=2)
+    return logits, new_caches
 
 
 def decode_step(params, specs, tokens, caches, pos0, cfg: ModelConfig,

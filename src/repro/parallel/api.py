@@ -33,8 +33,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.allreduce import (all_gather_flat, allreduce_tree,
-                                  hierarchical_allreduce,
+from repro.core.allreduce import (all_gather_flat, allreduce_flat,
+                                  allreduce_tree, hierarchical_allreduce,
                                   reduce_scatter_flat)
 from repro.core.cost_model import Fabric, TPU_V5E_ICI
 from repro.core.monoid import CombineLike, resolve_combine
@@ -70,6 +70,10 @@ class ParallelConfig:
     # global tracer (repro.obs.trace) when it is enabled; spans are
     # trace-time only (staging inside jit), runtime timelines come from
     # the blocking replay in repro.obs.instrument
+    decode_collectives: str = "xla"  # xla | plan  (serving decode-path TP
+    # psum / vocab all-gather: "plan" runs them on ExecPlan schedules
+    # picked by autotune.choose() at the decode message size -- the
+    # r = max_r / traff_rounds latency regime the paper targets)
     remat: bool = True
     scan_layers: bool = True
     accum_dtype = jnp.float32
@@ -252,6 +256,82 @@ def tp_psum(x, pc: ParallelConfig):
     if pc.tp == 1:
         return x
     return lax.psum(x, pc.tp_axis)
+
+
+# ---------------------------------------------------------------------------
+#  decode-time TP collectives (serving)
+# ---------------------------------------------------------------------------
+#
+# Tensor-parallel decode moves tiny messages -- a few KB of activations
+# per token step -- which is the latency-dominated corner where the
+# paper's large-r / traff_rounds schedules beat bandwidth-optimal
+# pipelines.  With ``pc.decode_collectives == "plan"`` the serve step's
+# TP psum and vocab all-gather run on ExecPlan ppermute programs whose
+# schedule is picked by :func:`repro.core.autotune.choose` at trace time
+# from the actual decode message size (consulting the measured tuning
+# table when ``pc.tuning``).  Each pick is appended to a module-level
+# log so tests and benches can assert what was chosen, including
+# ``Choice.source == "measured"``.
+
+_DECODE_CHOICE_LOG: list = []
+
+
+def decode_choice_log():
+    """Trace-time decode collective picks: [(op, nbytes, Choice), ...]."""
+    return list(_DECODE_CHOICE_LOG)
+
+
+def reset_decode_choice_log():
+    _DECODE_CHOICE_LOG.clear()
+
+
+def _decode_choice(pc: ParallelConfig, nbytes: int, itemsize: int, op: str):
+    from repro.core.autotune import choose, schedule_for
+    choice = choose(pc.tp, int(nbytes), TPU_V5E_ICI,
+                    tune=pc.tuning, itemsize=itemsize)
+    _DECODE_CHOICE_LOG.append((op, int(nbytes), choice))
+    return choice, schedule_for(choice, pc.tp)
+
+
+def tp_decode_psum(x, pc: ParallelConfig):
+    """TP psum for the decode path (see module note above)."""
+    if pc.tp == 1:
+        return x
+    if pc.decode_collectives != "plan":
+        return lax.psum(x, pc.tp_axis)
+    itemsize = jnp.dtype(x.dtype).itemsize
+    choice, sched = _decode_choice(pc, x.size * itemsize, itemsize, "psum")
+    out = allreduce_flat(x.reshape(-1), pc.tp_axis, sched,
+                         accum_dtype=pc.accum_dtype,
+                         n_buckets=choice.n_buckets)
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+def tp_decode_all_gather(x, pc: ParallelConfig, axis: int = -1):
+    """TP all-gather for the decode path (vocab-parallel logits).
+
+    A pure gather has exactly one schedule family here -- the paper's
+    distribution phase (``build_all_gather``, ceil(lg P) steps) -- so
+    unlike the psum there is no family to pick.  ``choose()`` still runs
+    at the gathered message size for its pipelining decision
+    (``n_buckets``) and so the pick lands in the decode choice log with
+    its ``source`` tag.
+    """
+    if pc.tp == 1:
+        return x
+    if pc.decode_collectives != "plan":
+        return lax.all_gather(x, pc.tp_axis, axis=axis, tiled=True)
+    from repro.core.schedule import build_all_gather
+    axis = axis % x.ndim
+    itemsize = jnp.dtype(x.dtype).itemsize
+    nbytes = int(x.size) * itemsize * pc.tp     # total gathered bytes
+    choice, _ = _decode_choice(pc, nbytes, itemsize, "all_gather")
+    moved = jnp.moveaxis(x, axis, 0)
+    g = all_gather_flat(moved.reshape(-1), pc.tp_axis,
+                        build_all_gather(pc.tp),
+                        n_buckets=choice.n_buckets)
+    g = g.reshape((pc.tp * moved.shape[0],) + moved.shape[1:])
+    return jnp.moveaxis(g, 0, axis)
 
 
 # ---------------------------------------------------------------------------

@@ -1,33 +1,56 @@
-"""Batched serving engine: chunked prefill + decode with continuous
-batching over fixed cache slots.
+"""Continuous-batching serving engine on paged KV caches.
 
-The engine owns one jitted ``serve_step`` (a shard_map program) reused for
-both prefill (S_new = chunk) and decode (S_new = 1) -- prefill chunks keep
-the compiled-shape set small.  Requests are multiplexed onto ``B`` cache
-slots; when a sequence finishes (EOS or max tokens) its slot is handed to
-the next queued request without touching the other slots' caches
-(per-slot position vector).
+Requests enter a FIFO queue and are admitted onto fixed batch *slots*
+independently: each slot prefills its own prompt (in chunks, interleaved
+with other slots' decode steps) and decodes at its own position, and a
+finished slot is recycled immediately without touching its neighbors --
+no wave barrier.  The device-side state is one jitted paged serve step
+(:func:`repro.train.step.make_paged_serve_step`): KV lives in fixed-size
+blocks indexed by a host-managed block table
+(:class:`repro.serve.kv.KVBlockManager`), so slot recycling is a table
+update, never a cache copy.
 
-Note: per-slot positions require per-batch-row cache offsets; for
-simplicity and dry-run parity the engine recycles slots in *waves* (all
-slots prefill together) unless ``continuous=True``, which tracks per-slot
-positions host-side and re-prefills individual slots.
+Every tick runs ONE step of shape ``(B, S)`` with per-row valid counts
+``n_new``: prefilling rows carry up to ``prefill_chunk`` prompt tokens,
+decoding rows carry their 1 pending token, idle rows carry 0.  S stays
+in {1, prefill_chunk} so the program compiles at most twice.  Recurrent
+archs (rglru / xLSTM) cannot mask inside a chunk, so for them ticks are
+*aligned*: a row joins a chunk tick only with a full chunk (its prompt
+tail runs at S=1) and decode rows only join S=1 ticks.
+
+Tensor-parallel decode runs its psum / vocab-gather on ExecPlan
+collectives picked by ``autotune.choose()`` at the decode message sizes
+(``decode_collectives="plan"``, the default) -- the r = max_r /
+traff_rounds latency regime that is the paper's headline result.  With a
+measured tuning table attached (``tuning=True`` +
+``REPRO_TUNING_CACHE``), the trace-time picks report
+``source="measured"``; inspect them via :attr:`Engine.decode_choices`.
+
+Sampling is deterministic per ``(seed, request uid, token index)``
+(Gumbel-max over the logits), so outputs are bit-stable regardless of
+which slot a request lands on or what shares its batch.
 """
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field, replace
-from typing import List, Optional
+from typing import Callable, Deque, List, Optional
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.models.attention import PageCtx
 from repro.models.config import ModelConfig
-from repro.models.model import init_caches
+from repro.models.model import init_paged_caches
 from repro.obs import trace as obs_trace
 from repro.obs.metrics import Histogram
-from repro.parallel.api import ParallelConfig
-from repro.train.step import make_serve_step
+from repro.parallel.api import (ParallelConfig, decode_choice_log,
+                                reset_decode_choice_log)
+from repro.serve.kv import KVBlockManager
+from repro.train.step import make_paged_serve_step
+
+_RECURRENT = ("rglru", "mlstm", "slstm")
 
 
 def _now_us() -> float:
@@ -40,6 +63,9 @@ class Request:
     max_new_tokens: int = 16
     out_tokens: List[int] = field(default_factory=list)
     done: bool = False
+    # called as stream(request, token) on every generated token
+    stream: Optional[Callable[["Request", int], None]] = None
+    uid: Optional[int] = None       # assigned at submit (sampling key)
     # lifecycle timestamps (microseconds, perf_counter epoch), recorded
     # unconditionally -- latency accounting must not require tracing on
     t_enqueue_us: Optional[float] = None
@@ -61,130 +87,255 @@ class Request:
         return self.t_done_us - self.t_enqueue_us
 
 
+@dataclass
+class _Slot:
+    """One live request's device-side coordinates."""
+    req: Request
+    fed: int = 0          # tokens written to cache/state so far
+    next_tok: int = -1    # pending decode input (last sampled token)
+    fresh: bool = True    # recurrent-state reset pending (first tick)
+
+    @property
+    def prefilling(self) -> bool:
+        return self.fed < len(self.req.prompt)
+
+
 class Engine:
     def __init__(self, cfg: ModelConfig, pc: ParallelConfig, mesh, params, *,
                  batch_slots: int = 4, max_len: int = 256,
-                 rolling: bool = False, prefill_chunk: int = 32,
+                 prefill_chunk: int = 32, block_size: int = 16,
+                 n_blocks: Optional[int] = None,
                  temperature: float = 0.0, seed: int = 0,
-                 tuning: Optional[bool] = None):
-        # ``tuning`` overrides pc.tuning for this engine: opt the serve
-        # step's collectives into the measured tuning table without
-        # rebuilding the ParallelConfig at every call site.
+                 tuning: Optional[bool] = None,
+                 decode_collectives: str = "plan",
+                 bundle=None):
+        """``batch_slots`` / ``n_blocks`` are PER DP SHARD; the global
+        batch is ``batch_slots * dp``.  ``n_blocks`` defaults to full
+        residency (every slot can hold ``max_len`` tokens) + the garbage
+        block; pass less to exercise admission under block pressure.
+        ``tuning`` / ``decode_collectives`` override the matching
+        ParallelConfig fields without rebuilding it at call sites.
+        ``bundle``: inject a prebuilt ``make_paged_serve_step`` result
+        to share one compiled program across engines (tests)."""
         if tuning is not None and tuning != pc.tuning:
             pc = replace(pc, tuning=tuning)
+        if decode_collectives != pc.decode_collectives:
+            pc = replace(pc, decode_collectives=decode_collectives)
         self.cfg, self.pc, self.mesh = cfg, pc, mesh
         self.params = params
-        self.B = batch_slots
+        self.dp = max(pc.dp, 1)
+        self.slots_per_shard = batch_slots
+        self.B = batch_slots * self.dp
         self.max_len = max_len
-        self.rolling = rolling
         self.prefill_chunk = prefill_chunk
+        self.block_size = block_size
         self.temperature = temperature
-        self.bundle = make_serve_step(cfg, pc, mesh, rolling=rolling)
-        self.rng = np.random.default_rng(seed)
+        self.seed = seed
+        # recurrent rows cannot mask mid-chunk: aligned tick scheduling
+        self.aligned = any(k in _RECURRENT for k in cfg.blocks)
+        self.nb_max = -(-max_len // block_size)
+        if n_blocks is None:
+            n_blocks = 1 + batch_slots * self.nb_max
+        self.n_blocks = n_blocks
+        self.kv = [KVBlockManager(n_blocks, block_size, self.nb_max,
+                                  batch_slots) for _ in range(self.dp)]
+        if bundle is None:
+            # fresh compile session: picks logged at trace time belong
+            # to this bundle.  An injected bundle keeps its log -- its
+            # programs (and their choices) predate this engine.
+            reset_decode_choice_log()
+            bundle = make_paged_serve_step(cfg, pc, mesh)
+        self.bundle = bundle
+        self.caches = init_paged_caches(cfg, pc, self.B,
+                                        n_blocks * self.dp, block_size)
+        self.lengths = np.zeros(self.B, np.int32)
+        self.slots: List[Optional[_Slot]] = [None] * self.B
+        self.queue: Deque[Request] = deque()
+        self._next_uid = 0
         # always-on request accounting (tracing adds spans on top)
         self._ttft = Histogram("ttft_us")
         self._latency = Histogram("request_latency_us")
         self._n_requests = 0
         self._n_tokens = 0
-        self._n_waves = 0
+        self._n_ticks = 0
+        self._n_prefill_ticks = 0
 
-    # ------------------------------------------------------------ helpers
-    def _sample(self, logits: np.ndarray) -> np.ndarray:
+    # ------------------------------------------------------------ queue
+    def submit(self, req: Request) -> Request:
+        """Enqueue one request (FIFO).  Returns it with ``uid`` set."""
+        total = len(req.prompt) + req.max_new_tokens
+        if total > self.max_len:
+            raise ValueError(f"prompt+max_new={total} exceeds "
+                             f"max_len={self.max_len}")
+        if req.t_enqueue_us is None:
+            req.t_enqueue_us = _now_us()
+        if req.uid is None:
+            req.uid = self._next_uid
+            self._next_uid += 1
+        self.queue.append(req)
+        self._n_requests += 1
+        return req
+
+    def _admit(self) -> None:
+        """Strict-FIFO admission: the queue head is admitted to the first
+        shard with a free slot AND room for its full block footprint;
+        if the head cannot be placed, nothing behind it jumps ahead."""
+        while self.queue:
+            req = self.queue[0]
+            need = len(req.prompt) + req.max_new_tokens
+            placed = False
+            for shard in range(self.dp):
+                if not self.kv[shard].fits(need):
+                    continue
+                base = shard * self.slots_per_shard
+                for local in range(self.slots_per_shard):
+                    b = base + local
+                    if self.slots[b] is None:
+                        self.kv[shard].admit(local, need)
+                        self.slots[b] = _Slot(req=req)
+                        self.lengths[b] = 0
+                        placed = True
+                        break
+                if placed:
+                    break
+            if not placed:
+                return
+            self.queue.popleft()
+
+    # ------------------------------------------------------------ ticking
+    def _plan_tick(self):
+        """Pick this tick's S and per-row (tokens, n_new)."""
+        chunk = self.prefill_chunk
+        if self.aligned:
+            # chunk ticks carry ONLY rows with >= chunk prompt tokens left
+            full = [b for b, s in enumerate(self.slots)
+                    if s is not None
+                    and len(s.req.prompt) - s.fed >= chunk]
+            if full:
+                return chunk, full
+            live = [b for b, s in enumerate(self.slots) if s is not None]
+            return 1, live
+        any_prefill = any(s is not None and s.prefilling
+                          for s in self.slots)
+        live = [b for b, s in enumerate(self.slots) if s is not None]
+        return (chunk if any_prefill else 1), live
+
+    def step(self) -> int:
+        """Admit + run one device tick.  Returns #tokens generated."""
+        self._admit()
+        if all(s is None for s in self.slots):
+            return 0
+        S, rows = self._plan_tick()
+        toks = np.zeros((self.B, S), np.int32)
+        n_new = np.zeros(self.B, np.int32)
+        reset = np.zeros(self.B, bool)
+        for b in rows:
+            s = self.slots[b]
+            if s.prefilling:
+                n = min(S, len(s.req.prompt) - s.fed)
+                toks[b, :n] = s.req.prompt[s.fed:s.fed + n]
+            else:
+                n = 1
+                toks[b, 0] = s.next_tok
+            n_new[b] = n
+            reset[b] = s.fresh
+            s.fresh = False
+        table = np.concatenate([m.table for m in self.kv], axis=0)
+        ctx = PageCtx(block_table=jnp.asarray(table),
+                      lengths=jnp.asarray(self.lengths),
+                      n_new=jnp.asarray(n_new),
+                      reset=jnp.asarray(reset))
+        prefill = bool((n_new > 1).any()) or any(
+            self.slots[b].prefilling for b in rows if self.slots[b])
+        with obs_trace.span("engine.tick", cat="serve", s=S,
+                            live=len(rows), queued=len(self.queue),
+                            prefill=prefill):
+            logits, self.caches = self.bundle.serve_step(
+                self.params, jnp.asarray(toks), self.caches, ctx)
+        self._n_ticks += 1
+        self._n_prefill_ticks += int(S > 1)
+        self.lengths += n_new
+        lg = None   # fetched lazily: pure-prefill ticks never read logits
+        emitted = 0
+        for b in rows:
+            s = self.slots[b]
+            s.fed += int(n_new[b])
+            if s.fed < len(s.req.prompt) + len(s.req.out_tokens):
+                continue      # mid-prefill: logits not meaningful yet
+            if lg is None:
+                lg = np.asarray(logits[:, 0], np.float32)
+            tok = self._sample(lg[b], s.req.uid, len(s.req.out_tokens))
+            s.req.out_tokens.append(tok)
+            s.next_tok = tok
+            self._n_tokens += 1
+            emitted += 1
+            now = _now_us()
+            if s.req.t_first_token_us is None:
+                s.req.t_first_token_us = now
+                if s.req.ttft_us is not None:
+                    self._ttft.record(s.req.ttft_us)
+            if s.req.stream is not None:
+                s.req.stream(s.req, tok)
+            if len(s.req.out_tokens) >= s.req.max_new_tokens:
+                s.req.done = True
+                s.req.t_done_us = now
+                if s.req.latency_us is not None:
+                    self._latency.record(s.req.latency_us)
+                shard, local = divmod(b, self.slots_per_shard)
+                self.kv[shard].retire(local)
+                self.slots[b] = None
+                self.lengths[b] = 0
+        return emitted
+
+    def run(self) -> None:
+        """Drive ticks until queue and slots drain."""
+        while self.queue or any(s is not None for s in self.slots):
+            self.step()
+
+    def generate(self, requests: List[Request]) -> List[Request]:
+        """Submit a batch and serve it to completion (offline mode)."""
+        for r in requests:
+            self.submit(r)
+        self.run()
+        return requests
+
+    # ------------------------------------------------------------ sampling
+    def _sample(self, logits_row: np.ndarray, uid: int, step: int) -> int:
+        """Greedy argmax, or Gumbel-max at ``temperature`` keyed by
+        (seed, uid, step): one vectorized argmax over the vocab, and the
+        draw depends only on the request identity -- not on its slot,
+        admission order, or batch mates."""
         if self.temperature <= 0:
-            return logits.argmax(-1).astype(np.int32)
-        z = logits / self.temperature
-        z = z - z.max(-1, keepdims=True)
-        p = np.exp(z)
-        p /= p.sum(-1, keepdims=True)
-        return np.array([self.rng.choice(p.shape[-1], p=row)
-                         for row in p], np.int32)
+            return int(logits_row.argmax())
+        g = np.random.default_rng(
+            np.random.SeedSequence([self.seed, uid, step]))
+        gumbel = -np.log(-np.log(g.random(logits_row.shape[-1])))
+        return int((logits_row / self.temperature + gumbel).argmax())
 
-    def _note_tokens(self, reqs: List["Request"]):
-        """Stamp first-token / done timestamps on freshly updated requests
-        and fold finished ones into the always-on latency accounting."""
-        now = _now_us()
-        for r in reqs:
-            if r.out_tokens and r.t_first_token_us is None:
-                r.t_first_token_us = now
-                if r.ttft_us is not None:
-                    self._ttft.record(r.ttft_us)
-            if r.done and r.t_done_us is None:
-                r.t_done_us = now
-                if r.latency_us is not None:
-                    self._latency.record(r.latency_us)
+    # ------------------------------------------------------------ stats
+    @property
+    def decode_choices(self):
+        """Trace-time decode collective picks: [(op, nbytes, Choice)]."""
+        return decode_choice_log()
 
     def stats(self) -> dict:
         """Always-on serving statistics (independent of tracing).
 
         ``ttft_us`` / ``request_latency_us`` are enqueue -> first-token
         and enqueue -> done distributions (count/mean/p50/p90/p99) over
-        every request this engine has finished; ``tokens`` counts
-        generated tokens.  The dict is plain JSON, merged into the
+        every finished request; ``tokens`` counts generated tokens;
+        ``ticks`` counts device steps (``prefill_ticks`` of them at
+        S = prefill_chunk).  The dict is plain JSON, merged into the
         metrics snapshot by the serving benchmarks.
         """
         return {
             "requests": self._n_requests,
-            "waves": self._n_waves,
             "tokens": self._n_tokens,
+            "ticks": self._n_ticks,
+            "prefill_ticks": self._n_prefill_ticks,
+            "queued": len(self.queue),
+            "live": sum(s is not None for s in self.slots),
+            "kv": [m.stats() for m in self.kv],
             "ttft_us": self._ttft.summary(),
             "request_latency_us": self._latency.summary(),
         }
-
-    # ------------------------------------------------------------- waves
-    def generate(self, requests: List[Request]) -> List[Request]:
-        """Serve requests in waves of B slots."""
-        now = _now_us()
-        for r in requests:
-            if r.t_enqueue_us is None:
-                r.t_enqueue_us = now
-        self._n_requests += len(requests)
-        pending = list(requests)
-        while pending:
-            wave, pending = pending[:self.B], pending[self.B:]
-            with obs_trace.span("engine.wave", cat="serve",
-                                n_requests=len(wave), queued=len(pending)):
-                self._run_wave(wave)
-            self._n_waves += 1
-        return requests
-
-    def _run_wave(self, wave: List[Request]):
-        B = self.B
-        caches = init_caches(self.cfg, self.pc, B, self.max_len,
-                             rolling=self.rolling)
-        # right-pad the wave to B slots with a dummy request
-        reqs = wave + [Request(prompt=np.zeros(1, np.int32),
-                               max_new_tokens=0)] * (B - len(wave))
-        plen = max(len(r.prompt) for r in reqs)
-        toks = np.zeros((B, plen), np.int32)
-        for i, r in enumerate(reqs):
-            toks[i, plen - len(r.prompt):] = r.prompt  # left-pad
-        pos = 0
-        logits = None
-        with obs_trace.span("engine.prefill", cat="serve", tokens=plen,
-                            chunk=self.prefill_chunk):
-            for lo in range(0, plen, self.prefill_chunk):
-                chunk = toks[:, lo:lo + self.prefill_chunk]
-                logits, caches = self.bundle.serve_step(
-                    self.params, jnp.asarray(chunk), caches, jnp.int32(pos))
-                pos += chunk.shape[1]
-            nxt = self._sample(np.asarray(logits[:, -1], np.float32))
-        max_new = max(r.max_new_tokens for r in reqs)
-        with obs_trace.span("engine.decode", cat="serve",
-                            max_new=max_new) as sp:
-            for t in range(max_new):
-                for i, r in enumerate(reqs):
-                    if not r.done and t < r.max_new_tokens:
-                        r.out_tokens.append(int(nxt[i]))
-                        self._n_tokens += 1
-                        if len(r.out_tokens) >= r.max_new_tokens:
-                            r.done = True
-                self._note_tokens(wave)
-                if all(r.done or r.max_new_tokens == 0 for r in reqs):
-                    sp.set(steps=t + 1)
-                    break
-                logits, caches = self.bundle.serve_step(
-                    self.params, jnp.asarray(nxt[:, None]), caches,
-                    jnp.int32(pos))
-                pos += 1
-                nxt = self._sample(np.asarray(logits[:, -1], np.float32))
-        return reqs

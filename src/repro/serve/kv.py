@@ -1,0 +1,111 @@
+"""Host-side paged KV-cache bookkeeping for the continuous-batching engine.
+
+The device side is a fixed pool of equal-size KV blocks per attention
+layer (:class:`repro.models.attention.PagedKV`); which physical block
+backs logical block ``j`` of batch slot ``b`` is decided here, on the
+host, and shipped to the step function as the ``(B, nb_max)`` block
+table inside :class:`repro.models.attention.PageCtx`.
+
+Allocation policy: a request reserves every block it can ever need
+(``ceil((prompt + max_new) / block_size)``) at admission and releases
+them all at retirement.  Reserving up front keeps the scheduler
+deadlock-free by construction -- an admitted request can always run to
+completion -- at the cost of holding a request in the queue until its
+whole footprint fits (the paper-relevant part of this engine is the
+decode-time collectives, not cache oversubscription).
+
+Physical block 0 is the *garbage block*: it backs unallocated table
+entries, is never handed out, and is never read back (per-row
+``kv_valid`` masking stops attention at each slot's true length).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+
+class KVBlockManager:
+    """Free-list allocator over one device pool (one per DP shard).
+
+    Invariants (checked by :meth:`check`, property-tested in
+    ``tests/test_serve_scheduler.py``):
+
+    * a physical block is owned by at most one slot at a time;
+    * block 0 is never allocated;
+    * ``owned + free == {1, ..., n_blocks - 1}`` at all times.
+    """
+
+    def __init__(self, n_blocks: int, block_size: int, nb_max: int,
+                 n_slots: int):
+        if n_blocks < 2:
+            raise ValueError("need >= 2 blocks (block 0 is the garbage "
+                             "block)")
+        self.n_blocks = int(n_blocks)
+        self.block_size = int(block_size)
+        self.nb_max = int(nb_max)
+        self.n_slots = int(n_slots)
+        # pop() hands out low block ids first
+        self._free: List[int] = list(range(n_blocks - 1, 0, -1))
+        self._owned: Dict[int, List[int]] = {s: [] for s in range(n_slots)}
+        self.table = np.zeros((n_slots, nb_max), np.int32)
+        self.peak_blocks_used = 0
+
+    # ------------------------------------------------------------ queries
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_used(self) -> int:
+        return (self.n_blocks - 1) - len(self._free)
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return -(-int(n_tokens) // self.block_size)
+
+    def fits(self, n_tokens: int) -> bool:
+        n = self.blocks_for(n_tokens)
+        return n <= self.nb_max and n <= self.n_free
+
+    # ------------------------------------------------------- alloc / free
+    def admit(self, slot: int, n_tokens: int) -> None:
+        """Reserve the full block footprint of a request entering ``slot``."""
+        assert not self._owned[slot], f"slot {slot} already occupied"
+        n = self.blocks_for(n_tokens)
+        if n > self.nb_max:
+            raise ValueError(
+                f"request needs {n} blocks > nb_max={self.nb_max}")
+        if n > self.n_free:
+            raise RuntimeError(
+                f"admit called with {self.n_free} free < {n} needed "
+                f"(callers must gate on fits())")
+        blocks = [self._free.pop() for _ in range(n)]
+        self._owned[slot] = blocks
+        self.table[slot, :n] = blocks
+        self.peak_blocks_used = max(self.peak_blocks_used, self.n_used)
+
+    def retire(self, slot: int) -> None:
+        """Release every block owned by ``slot`` (request finished)."""
+        self._free.extend(reversed(self._owned[slot]))
+        self._owned[slot] = []
+        self.table[slot, :] = 0
+
+    # ---------------------------------------------------------- invariants
+    def check(self) -> None:
+        owned = [b for blocks in self._owned.values() for b in blocks]
+        assert 0 not in owned, "garbage block handed out"
+        assert 0 not in self._free, "garbage block on the free list"
+        assert len(set(owned)) == len(owned), "block owned by two slots"
+        assert sorted(owned + self._free) == list(range(1, self.n_blocks)), \
+            "block leak: owned + free != all allocatable blocks"
+        for s, blocks in self._owned.items():
+            nz = self.table[s][self.table[s] != 0]
+            assert list(nz) == blocks, f"table row {s} out of sync"
+
+    def stats(self) -> dict:
+        return {
+            "n_blocks": self.n_blocks,
+            "block_size": self.block_size,
+            "blocks_used": self.n_used,
+            "peak_blocks_used": self.peak_blocks_used,
+        }

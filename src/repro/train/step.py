@@ -32,7 +32,8 @@ from repro.compat import shard_map
 from repro.core.allreduce import tree_reduce_scatter
 from repro.core.cost_model import Fabric, TPU_V5E_ICI
 from repro.models.config import ModelConfig
-from repro.models.model import (decode_step, init_caches, loss_and_metrics,
+from repro.models.model import (decode_step, init_caches, init_paged_caches,
+                                loss_and_metrics, paged_decode_step,
                                 param_shapes)
 from repro.parallel.api import ParallelConfig, ParamSpec, dp_grad_allreduce
 from repro.train.optimizer import (OptConfig, apply_updates_dp,
@@ -319,6 +320,68 @@ def make_serve_step(cfg: ModelConfig, pc: ParallelConfig, mesh: Mesh, *,
     shard_fn = shard_map(
         step_fn, mesh=mesh,
         in_specs=(p_specs, P(dp, None), c_specs, P()),
+        out_specs=(P(dp, None, None), c_specs),
+        check_vma=False)
+    jitted = jax.jit(shard_fn, donate_argnums=(2,))
+    return ServeBundle(jitted, p_specs, c_specs, specs, params_shapes)
+
+
+def paged_cache_pspecs(cfg: ModelConfig, pc: ParallelConfig):
+    """PartitionSpecs matching init_paged_caches' structure.
+
+    KV pools shard their ``n_blocks`` dim over DP (each DP shard serves
+    its own requests out of its own blocks; block-table entries are
+    shard-local physical indices), recurrent states shard their batch
+    dim -- conveniently the same rule: the leading non-stacked dim."""
+    dp = None if pc.dp <= 1 else (
+        pc.dp_axes if len(pc.dp_axes) > 1 else pc.dp_axes[0])
+    shapes = jax.eval_shape(
+        lambda: init_paged_caches(cfg, pc, 1, 2 * max(pc.dp, 1), 8))
+
+    def spec_of(stacked, sd):
+        nd = len(sd.shape)
+        lead = 2 if stacked else 0
+        if nd <= lead:
+            return P(*([None] * nd))
+        dims = [None] * nd
+        dims[lead] = dp
+        return P(*dims)
+
+    return {
+        "prefix": jax.tree.map(lambda sd: spec_of(False, sd),
+                               shapes["prefix"]),
+        "cycles": jax.tree.map(lambda sd: spec_of(True, sd),
+                               shapes["cycles"]),
+    }
+
+
+def make_paged_serve_step(cfg: ModelConfig, pc: ParallelConfig, mesh: Mesh,
+                          *, attn_impl: str = "xla") -> ServeBundle:
+    """One continuous-batching tick against paged caches.
+
+    The program/state separation follows ``make_serve_step``: this
+    builds the jitted shard_map *program* once; all mutable serving
+    state (the cache pytree, the host-side block tables / lengths inside
+    :class:`~repro.models.attention.PageCtx`) flows through as
+    arguments, so one compiled step serves every admission pattern.
+    Token shape ``(B, S)`` recompiles only per distinct S -- the engine
+    keeps S in {1, prefill_chunk}."""
+    from repro.models.attention import PageCtx
+    params_shapes, specs = param_shapes(cfg, pc)
+
+    def step_fn(params, tokens, caches, ctx):
+        return paged_decode_step(params, specs, tokens, caches, ctx,
+                                 cfg, pc, attn_impl=attn_impl)
+
+    p_specs = param_pspecs(params_shapes, specs, pc)
+    c_specs = paged_cache_pspecs(cfg, pc)
+    dp = None if pc.dp <= 1 else (
+        pc.dp_axes if len(pc.dp_axes) > 1 else pc.dp_axes[0])
+    ctx_specs = PageCtx(block_table=P(dp, None), lengths=P(dp),
+                        n_new=P(dp), reset=P(dp))
+    shard_fn = shard_map(
+        step_fn, mesh=mesh,
+        in_specs=(p_specs, P(dp, None), c_specs, ctx_specs),
         out_specs=(P(dp, None, None), c_specs),
         check_vma=False)
     jitted = jax.jit(shard_fn, donate_argnums=(2,))

@@ -606,6 +606,78 @@ def check_elastic_resize():
     print("ok elastic_resize 8->7->5")
 
 
+def check_serve():
+    """Continuous-batching engine on a dp=2 x tp=2 mesh: batched decode
+    on the paged cache is bit-identical to the single-request path, and
+    the TP decode collectives route through ``autotune.choose()``
+    against a measured tuning table -- the trace-time picks must report
+    ``source="measured"`` and prefer the family the table says is
+    faster (``traff_rounds`` in the fabricated ladder below)."""
+    import tempfile
+
+    from repro.launch.mesh import make_mesh, parallel_config_for
+    from repro.models.config import ModelConfig
+    from repro.models.model import init_params
+    from repro.serve.engine import Engine, Request
+    from repro.tuning import policy
+    from repro.tuning.cache import (Measurement, TuningCache,
+                                    current_fingerprint)
+
+    cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=160, vocab=256,
+                      head_dim=16, act="swiglu")
+    # fabricate a measured ladder (64 B .. ~4 MiB, x4 spacing) where
+    # traff_rounds always beats generalized(0): every decode-size query
+    # interpolates in-range, so choose() must answer from the table
+    fp = current_fingerprint()
+    cache = TuningCache()
+    for k in range(9):
+        nb = 64 * 4 ** k
+        cache.record(fp, Measurement(2, nb, "generalized", 0, 1, 9.0))
+        cache.record(fp, Measurement(2, nb, "traff_rounds", 0, 1, 5.0))
+    path = cache.save(os.path.join(
+        tempfile.mkdtemp(prefix="repro_serve_tuning_"), "tuning.json"))
+    os.environ["REPRO_TUNING_CACHE"] = str(path)
+    policy.invalidate()
+    try:
+        mesh = make_mesh((2, 2), ("data", "model"),
+                         devices=jax.devices()[:4])
+        pc = parallel_config_for(mesh, param_mode="dp", tuning=True)
+        params, _ = init_params(cfg, pc, jax.random.PRNGKey(0))
+        eng = Engine(cfg, pc, mesh, params, batch_slots=2, max_len=32,
+                     prefill_chunk=8, block_size=4)
+        rng = np.random.default_rng(3)
+        reqs = [Request(prompt=rng.integers(0, cfg.vocab, n)
+                        .astype(np.int32), max_new_tokens=4)
+                for n in (3, 9, 5, 12, 7)]
+        eng.generate(reqs)
+        for r in reqs:
+            assert r.done and len(r.out_tokens) == 4, r
+        for m in eng.kv:
+            m.check()
+            assert m.n_used == 0
+        choices = eng.decode_choices
+        assert choices, "decode collectives must trace through choose()"
+        ops = {op for op, _, _ in choices}
+        assert ops == {"psum", "all_gather"}, ops
+        for op, nbytes, c in choices:
+            assert c.source == "measured", (op, nbytes, c)
+        psum_kinds = {c.kind for op, _, c in choices if op == "psum"}
+        assert psum_kinds == {"traff_rounds"}, psum_kinds
+        # batched continuous decode == solo B=1 path, same compiled step
+        solo = Engine(cfg, pc, mesh, params, batch_slots=1, max_len=32,
+                      prefill_chunk=8, block_size=4, bundle=eng.bundle)
+        for r in reqs:
+            r2 = Request(prompt=r.prompt, max_new_tokens=4)
+            solo.generate([r2])
+            assert r2.out_tokens == r.out_tokens, \
+                (len(r.prompt), r.out_tokens, r2.out_tokens)
+    finally:
+        os.environ.pop("REPRO_TUNING_CACHE", None)
+        policy.invalidate()
+    print("ok serve")
+
+
 def check_conformance():
     """Acceptance sweep vs the real lax references, P in {2,3,5,6,7,8,16}
     on meshes over the first P of 16 forced host devices: max/min/mean
@@ -697,7 +769,7 @@ if __name__ == "__main__":
                   execplan=check_execplan, ragged=check_ragged,
                   a2a=check_a2a, maxreduce=check_maxreduce,
                   moe=check_moe_dispatch, conformance=check_conformance,
-                  elastic_resize=check_elastic_resize)
+                  elastic_resize=check_elastic_resize, serve=check_serve)
     if which == "all":
         for fn in checks.values():
             fn()

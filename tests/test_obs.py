@@ -333,8 +333,9 @@ def test_engine_stats_without_tracing():
         assert r.latency_us >= r.ttft_us
     st = eng.stats()
     assert st["requests"] == 3
-    assert st["waves"] == 2        # 3 requests over 2 slots
     assert st["tokens"] == 9
+    assert st["ticks"] > 0 and st["ticks"] >= st["prefill_ticks"]
+    assert st["live"] == 0 and st["queued"] == 0
     assert st["ttft_us"]["count"] == 3
     assert st["request_latency_us"]["count"] == 3
     assert st["request_latency_us"]["p50"] >= st["ttft_us"]["min"]
