@@ -84,6 +84,22 @@ MISWIRED if a grid edit drops every serving label out of the overlap.
         --current results/serving_smoke.json \
         --baseline results/serving.json \
         --keys tokens_per_s_ratio,p99_ttft_ratio,p99_latency_ratio
+
+The overlap benchmark (results/overlap.json) gates the backward-
+overlapped gradient sync: ``speedup_overlap`` (post-backward serialized
+step time over in-backward dispatched step time, floor) and
+``exposed_ratio`` (exposed comm over total comm, a cost, so ceiling).
+Both are same-host ratios of interleaved measurements, hence
+hardware-normalized like every other gated key.  Overlap rows carry
+``"bench": "overlap"`` so the ROW_CLASSES guard trips MISWIRED when a
+config edit drops every overlap label out of the baseline overlap.
+
+    python benchmarks/run.py executor --overlap --smoke \
+        --out results/overlap_smoke.json
+    python benchmarks/check_regression.py \
+        --current results/overlap_smoke.json \
+        --baseline results/overlap.json \
+        --keys speedup_overlap,exposed_ratio
 """
 
 from __future__ import annotations
@@ -114,6 +130,10 @@ LOWER_IS_BETTER = frozenset(
         "p99_ttft_ratio",
         "p50_latency_ratio",
         "p99_latency_ratio",
+        # exposed comm / total comm of the backward-overlapped gradient
+        # sync (overlap benchmark): a cost fraction -- climbing toward
+        # 1.0 means the in-backward dispatch stopped hiding anything
+        "exposed_ratio",
     }
 )
 
@@ -138,11 +158,17 @@ def is_serving(row: dict) -> bool:
     return row.get("bench") == "serve"
 
 
+def is_overlap(row: dict) -> bool:
+    """Backward-overlapped grad-sync datapoint (results/overlap.json)."""
+    return row.get("bench") == "overlap"
+
+
 ROW_CLASSES = (
     ("ragged", is_ragged, "the exact-split executor path"),
     ("non-sum-op", is_nonsum_op, "the monoid (non-sum combine) path"),
     ("a2a", is_a2a, "the schedule-driven all-to-all path"),
     ("serving", is_serving, "the continuous-batching serving path"),
+    ("overlap", is_overlap, "the backward-overlapped grad-sync path"),
 )
 
 

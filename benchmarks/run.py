@@ -21,7 +21,11 @@ Modes (first positional arg): ``figures`` (default), ``executor
 wallclock comparison incl. max-monoid and all-to-all rows ->
 results/executor.json; ``--trace`` additionally runs the instrumented
 per-tick replay and writes a Chrome trace + metrics snapshot +
-predicted-vs-measured model-error report, see docs/observability.md),
+predicted-vs-measured model-error report, see docs/observability.md;
+``--overlap`` reroutes to the backward-overlap benchmark: full train
+steps differing only in gradient-sync dispatch -> results/overlap.json
+with gated ``speedup_overlap`` / ``exposed_ratio`` rows, see
+docs/architecture.md "Overlap"),
 ``tune [--smoke] [--out PATH] [--cache PATH]`` (measured autotuning
 grid, sum + max operators -> persistent tuning cache +
 results/tuning.json), ``chaos [--smoke] [--trace] [--out PATH]``
@@ -214,6 +218,19 @@ def executor_bench(smoke: bool = False,
     _worker_bench("executor_worker.py", "executor", extra)
 
 
+def overlap_bench(smoke: bool = False,
+                  out: str = "results/overlap.json") -> None:
+    """Backward-overlapped gradient sync benchmark on 8 simulated CPU
+    devices: three full train steps differing only in
+    ``ParallelConfig.overlap_dispatch`` (skip = compute baseline, post =
+    serialized bucketed sync, backward = custom_vjp in-backward
+    dispatch), reduced to the gated ``speedup_overlap`` (floor) and
+    ``exposed_ratio`` (lower-is-better) rows plus the informational
+    roofline model overlay; writes ``results/overlap.json``."""
+    extra = ["--out", out] + (["--smoke"] if smoke else [])
+    _worker_bench("overlap_worker.py", "overlap", extra, timeout=3600)
+
+
 def tune_bench(smoke: bool = False, out: str = "results/tuning.json",
                cache: str = None) -> None:
     """Measured autotuning: time the (kind x r x n_buckets x size) grid on
@@ -293,6 +310,10 @@ def main(argv=None) -> None:
     if mode == "figures":
         figures()
     elif mode == "executor":
+        if "--overlap" in argv:
+            overlap_bench(smoke="--smoke" in argv,
+                          out=_opt(argv, "--out", "results/overlap.json"))
+            return
         ops = tuple(argv[i + 1] for i, a in enumerate(argv)
                     if a == "--op" and i + 1 < len(argv))
         executor_bench(smoke="--smoke" in argv,

@@ -246,7 +246,8 @@ def _final_gather(rows: List, plan: ExecPlan, d) -> jnp.ndarray:
 def allreduce_flat(x: jnp.ndarray, axis_name: AxisName,
                    sched: Schedule, *, accum_dtype=None,
                    combine: CombineFn = "auto",
-                   n_buckets: int = 1) -> jnp.ndarray:
+                   n_buckets: int = 1,
+                   tag: Optional[str] = None) -> jnp.ndarray:
     """Generalized allreduce of a flat vector using a compiled schedule.
 
     Accepts **any** length: uneven sizes run natively on the balanced
@@ -259,6 +260,8 @@ def allreduce_flat(x: jnp.ndarray, axis_name: AxisName,
     "add", "pallas" -- see
     :func:`repro.core.monoid.resolve_combine`).  Mean's divide and
     premul_sum's input scale run here, once over the whole message.
+    ``tag`` labels the executor's trace span (see
+    :func:`repro.core.execplan.execute`).
     """
     P = sched.P
     actual = axis_size(axis_name)
@@ -277,7 +280,8 @@ def allreduce_flat(x: jnp.ndarray, axis_name: AxisName,
     d = _linear_axis_index(axis_name)
     rows = _lazy_init_rows(chunks, plan, d)
     bucket_rows, u = _bucket_rows(rows, n_buckets)
-    bucket_rows = execute(plan, bucket_rows, axis_name, combine=combine)
+    bucket_rows = execute(plan, bucket_rows, axis_name, combine=combine,
+                          tag=tag)
     rows = _merge_rows(bucket_rows, u)
     out = _final_gather(rows, plan, d)                     # (P, u_max)
     out = _ragged_flatten(out, m)                          # exact (m,)
@@ -462,7 +466,9 @@ def allreduce_tree(tree, axis_name: AxisName, *,
                    accum_dtype=jnp.float32,
                    combine: CombineFn = "auto",
                    n_buckets: Optional[int] = None,
-                   tune: Optional[bool] = None):
+                   tune: Optional[bool] = None,
+                   compute_overlap_us: Optional[float] = None,
+                   tag: Optional[str] = None):
     """Allreduce (sum or mean) a pytree of arrays over ``axis_name`` using
     the generalized algorithm.
 
@@ -481,6 +487,14 @@ def allreduce_tree(tree, axis_name: AxisName, *,
     f32 accumulation cast is skipped (max/min lose nothing to the
     accumulator, and an int max must stay bit-exact past 2**24).
     ``mean`` composes only with the sum operator.
+
+    ``compute_overlap_us`` is the backward-overlap hint forwarded to the
+    autotuner (:func:`repro.core.autotune.choose`): the overlappable
+    compute still running when this collective dispatches, which makes
+    the chooser rank candidates by *exposed* rather than raw cost.  It
+    only applies when the schedule is autotuned (``r is None``).
+    ``tag`` labels the executor's trace span (per-bucket identification
+    for the overlapped gradient sync).
     """
     P = axis_size(axis_name)
     monoid, _ = resolve_combine(combine)
@@ -498,7 +512,7 @@ def allreduce_tree(tree, axis_name: AxisName, *,
         # raggedness is an *element*-count property: the executor splits
         # elements, so the chooser needs the itemsize, not just bytes
         ch = choose(P, int(nbytes), fabric, tune=tune, itemsize=itemsize,
-                    monoid=monoid)
+                    monoid=monoid, compute_overlap_us=compute_overlap_us)
         sched = schedule_for(ch, P)
         if n_buckets is None:
             n_buckets = ch.n_buckets
@@ -514,7 +528,7 @@ def allreduce_tree(tree, axis_name: AxisName, *,
                 n_buckets = choose_n_buckets(sched, int(nbytes), fabric,
                                              monoid=monoid)
     out = allreduce_flat(flat, axis_name, sched, accum_dtype=accum_dtype,
-                         combine=combine, n_buckets=n_buckets)
+                         combine=combine, n_buckets=n_buckets, tag=tag)
     if mean and monoid.name == "sum":
         out = out / P
     return _unflatten_tree(out, spec)

@@ -64,7 +64,8 @@ def _tune_default() -> bool:
 def choose(P: int, nbytes: int, fabric: Fabric = TPU_V5E_ICI,
            allow_ring: bool = True, tune: Optional[bool] = None,
            itemsize: int = 1, monoid: Optional[Monoid] = None,
-           arrival_deltas_us: Optional[Sequence[float]] = None) -> Choice:
+           arrival_deltas_us: Optional[Sequence[float]] = None,
+           compute_overlap_us: Optional[float] = None) -> Choice:
     """Pick (kind, r, n_buckets) minimizing time for an allreduce of
     ``nbytes`` over ``P`` devices.
 
@@ -106,12 +107,47 @@ source='model')
     ...            arrival_deltas_us=[0, 0, 0, 0, 0, 0, 0, 300.0])
     >>> c.source                            # heavy skew: timeline-priced
     'skew'
+
+    ``compute_overlap_us`` is the backward-overlap hint: the
+    overlappable compute (microseconds) still running when this
+    collective dispatches (the per-bucket backward remainder of the
+    backward-overlapped gradient sync).  When set and positive,
+    candidates are ranked by *exposed* cost
+    (:func:`repro.core.cost_model.overlap_exposed_cost` -- the part of
+    the collective the compute cannot hide), with the raw pipelined
+    cost as tie-break: under a generous budget many candidates fully
+    hide and the cheapest raw schedule wins, while under a tight budget
+    the ranking is unchanged from the plain model.  ``Choice.cost`` is
+    then the exposed seconds.  Measured-table lookups are skipped for
+    hinted queries (no measurement carries overlap context, see
+    :func:`repro.tuning.policy.lookup`), so the hint always answers
+    from the model.
+
+    >>> choose(8, 1 << 26, tune=False, compute_overlap_us=1e9).cost
+    0.0
+    >>> choose(8, 1 << 26, tune=False,
+    ...        compute_overlap_us=0.0)      # zero budget == plain model
+    Choice(kind='generalized', r=0, cost=0.00235581024, n_buckets=2, \
+source='model')
     """
     if P <= 1:
         return Choice("generalized", 0, 0.0)
     itemsize = max(int(itemsize), 1)
     op = monoid.name if monoid is not None else "sum"
     tuned = _tune_default() if tune is None else tune
+    if compute_overlap_us is not None and compute_overlap_us > 0.0:
+        if tuned:
+            from repro.tuning import policy  # deferred: tuning sits above core
+            measured = policy.lookup(P, int(nbytes), allow_ring=allow_ring,
+                                     itemsize=itemsize, op=op,
+                                     compute_overlap_us=compute_overlap_us)
+            if measured is not None:        # today: always None (overlap
+                return measured             # measurements do not exist yet)
+        # quantize the budget to whole microseconds so the cache key
+        # space stays bounded while a drifting per-step estimate varies
+        return _choose_overlap(P, int(nbytes), fabric, allow_ring,
+                               itemsize, monoid,
+                               int(round(compute_overlap_us)))
     deltas = arrival_deltas_us
     if deltas is None and tuned:
         from repro.tuning import policy  # deferred: tuning sits above core
@@ -181,6 +217,50 @@ def _choose_model(P: int, nbytes: int, fabric: Fabric,
     return best
 
 
+# bounded: keyed by the whole-microsecond overlap budget, whose
+# cardinality is unbounded when a drifting per-step compute estimate
+# feeds the hint
+@lru_cache(maxsize=512)
+def _choose_overlap(P: int, nbytes: int, fabric: Fabric, allow_ring: bool,
+                    itemsize: int, monoid: Optional[Monoid],
+                    overlap_us: int) -> Choice:
+    """Overlap-aware analytic pick: rank candidates by exposed cost.
+
+    Each candidate is priced at its own best bucket count (the bucket
+    sweep of :func:`_choose_model`, re-run per candidate because
+    pipelining interacts with the overlap budget: more buckets start
+    the wire earlier in the drain), then ranked by
+    ``exposed = max(0, pipelined_cost - budget)`` with the raw
+    pipelined cost as tie-break -- under a generous budget several
+    candidates expose 0.0 and the cheapest raw schedule (which frees
+    the fabric soonest) wins.  ``Choice.cost`` is the exposed seconds,
+    which is what the caller's step-time roofline adds up.
+    """
+    ragged = (nbytes // itemsize) % P != 0
+    candidates = [("generalized", r, build_generalized(P, r))
+                  for r in range(n_steps_log(P) + 1)]
+    candidates += [("traff_rounds", 0, build_traff_rounds(P)),
+                   ("dual_root", 0, build_dual_root(P))]
+    if allow_ring:
+        candidates.append(("ring", 0, build_ring(P)))
+    best: Optional[Choice] = None
+    best_raw = 0.0
+    for kind, r, s in candidates:
+        if ragged:
+            b = ragged_choose_n_buckets(s, nbytes, fabric,
+                                        itemsize=itemsize, monoid=monoid)
+            raw = ragged_pipelined_schedule_cost(s, nbytes, fabric, b,
+                                                 itemsize, monoid)
+        else:
+            b = choose_n_buckets(s, nbytes, fabric, monoid=monoid)
+            raw = (pipelined_schedule_cost(s, nbytes, fabric, b, monoid)
+                   if b > 1 else schedule_cost(s, nbytes, fabric, monoid))
+        exposed = max(0.0, raw - overlap_us * 1e-6)
+        if best is None or (exposed, raw) < (best.cost, best_raw):
+            best, best_raw = Choice(kind, r, exposed, b), raw
+    return best
+
+
 # bounded: keyed by the quantized delta tuple, whose cardinality is
 # unbounded when a long-lived runtime's arrival pattern drifts
 @lru_cache(maxsize=512)
@@ -233,6 +313,7 @@ def clear_cache() -> None:
     """Drop memoized analytic picks (tests; after fabric/table changes)."""
     _choose_model.cache_clear()
     _choose_skewed.cache_clear()
+    _choose_overlap.cache_clear()
 
 
 def schedule_for(choice: Choice, P: int) -> Schedule:

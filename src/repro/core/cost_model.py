@@ -24,7 +24,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Optional
+from typing import List, Optional
 
 from .monoid import Monoid
 from .schedule import (Schedule, ShapeError, _place_chunk_table,
@@ -335,6 +335,87 @@ def ragged_pipelined_schedule_cost(sched: Schedule, m: int, f: Fabric,
         return ragged_schedule_cost(sched, m, f, itemsize, monoid)
     return sum(t["total_s"] for t in
                ragged_tick_costs(sched, m, f, n_buckets, itemsize, monoid))
+
+
+# ---------------------------------------------------------------------------
+#  overlap roofline (backward-overlapped gradient sync)
+# ---------------------------------------------------------------------------
+
+def overlap_tick_costs(sched: Schedule, m: int, f: Fabric,
+                       n_buckets: int = 1, *,
+                       compute_us: float = 0.0,
+                       itemsize: int = 1,
+                       monoid: Optional[Monoid] = None) -> List[dict]:
+    """Per-tick timeline with an overlappable-compute budget drained
+    across it: ``ragged_tick_costs`` rows extended with ``compute_s``
+    (budget consumed at this tick), ``hidden_s`` (the part of the tick's
+    cost hidden behind that compute) and ``exposed_s`` (the remainder on
+    the critical path).
+
+    ``compute_us`` is the backward compute available to hide this
+    collective behind -- for the backward-overlapped gradient sync, the
+    per-bucket backward time between this bucket's dispatch and the end
+    of the backward pass.  The budget drains greedily in tick order
+    (earlier ticks hide first, exactly how an async dispatch overlaps),
+    so the invariants hold by construction:
+
+    * every row's ``total_s`` equals the :func:`ragged_tick_costs` row
+      (the overlay never re-prices the collective);
+    * ``sum(exposed_s) == max(0, total_cost - compute_us * 1e-6)`` --
+      the bucket-granularity roofline
+      ``exposed_comm = max(0, comm - backward_compute_per_bucket)``.
+
+    >>> from repro.core.schedule import build_generalized
+    >>> s = build_generalized(4, 1)
+    >>> rows = overlap_tick_costs(s, 4096, PAPER_10GE, compute_us=0.0)
+    >>> [abs(r["exposed_s"] - r["total_s"]) < 1e-18 for r in rows]
+    [True, True, True]
+    >>> total = ragged_schedule_cost(s, 4096, PAPER_10GE)
+    >>> half = total * 0.5e6
+    >>> rows = overlap_tick_costs(s, 4096, PAPER_10GE, compute_us=half)
+    >>> abs(sum(r["exposed_s"] for r in rows) - total * 0.5) < 1e-15
+    True
+    >>> rows = overlap_tick_costs(s, 4096, PAPER_10GE, compute_us=1e9)
+    >>> sum(r["exposed_s"] for r in rows)
+    0.0
+    """
+    budget = max(float(compute_us), 0.0) * 1e-6
+    ticks = ragged_tick_costs(sched, m, f, n_buckets, itemsize, monoid)
+    out = []
+    for t in ticks:
+        hidden = min(t["total_s"], budget)
+        budget -= hidden
+        row = dict(t)
+        row["compute_s"] = hidden
+        row["hidden_s"] = hidden
+        row["exposed_s"] = t["total_s"] - hidden
+        out.append(row)
+    return out
+
+
+def overlap_exposed_cost(sched: Schedule, m: int, f: Fabric,
+                         n_buckets: int = 1, *,
+                         compute_us: float = 0.0,
+                         itemsize: int = 1,
+                         monoid: Optional[Monoid] = None) -> float:
+    """Exposed (non-hidden) seconds of a schedule dispatched with
+    ``compute_us`` of overlappable backward compute still to run --
+    the scalar the overlap-aware tuner ranks candidates by.  Equals
+    ``max(0, ragged_pipelined_schedule_cost(...) - compute_us * 1e-6)``
+    by the :func:`overlap_tick_costs` drain invariant.
+
+    >>> from repro.core.schedule import build_generalized
+    >>> s = build_generalized(4, 1)
+    >>> overlap_exposed_cost(s, 4096, PAPER_10GE, compute_us=1e9)
+    0.0
+    >>> c0 = overlap_exposed_cost(s, 4096, PAPER_10GE, compute_us=0.0)
+    >>> abs(c0 - ragged_schedule_cost(s, 4096, PAPER_10GE)) < 1e-18
+    True
+    """
+    return sum(t["exposed_s"] for t in
+               overlap_tick_costs(sched, m, f, n_buckets,
+                                  compute_us=compute_us,
+                                  itemsize=itemsize, monoid=monoid))
 
 
 def pipelined_schedule_cost(sched: Schedule, m: float, f: Fabric,

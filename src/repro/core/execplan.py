@@ -38,13 +38,23 @@ the kernel explicitly.
 :func:`simulate_plan` is a pure-numpy runner over the *same* tables,
 used by the tests to prove the lowering bit-exact against the symbolic
 simulator oracle for every (P, r, kind).
+
+The training stack feeds this executor two ways: the post-backward path
+reduces one flat gradient tensor through a single (possibly
+multi-bucket) :func:`execute`, while the backward-overlapped path
+(:func:`repro.parallel.api.attach_overlap_sync`) dispatches one
+``execute`` per reverse-layer gradient bucket *as the backward pass
+produces it*, tagging each dispatch (``tag="grad_bucket<k>"``) so the
+trace timeline and the exposed-comm roofline
+(:func:`repro.core.cost_model.overlap_tick_costs`) can line the
+per-bucket dispatches up against backward compute.
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass
 from functools import lru_cache
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -333,7 +343,8 @@ def _pallas_combine(jobs, monoid: Monoid = None):
 
 
 def execute(plan: ExecPlan, bucket_rows: Sequence[List], axis_name, *,
-            combine: CombineLike = "auto") -> List[List]:
+            combine: CombineLike = "auto",
+            tag: Optional[str] = None) -> List[List]:
     """Replay ``plan`` over per-bucket slot-row lists inside shard_map.
 
     ``bucket_rows`` is a list of ``n_buckets`` row lists, each of length
@@ -359,6 +370,12 @@ def execute(plan: ExecPlan, bucket_rows: Sequence[List], axis_name, *,
     ``jnp.add``), "pallas" (sum via the kernel), "<op>:pallas".  The
     affine bookends of mean / premul_sum are the caller's job (they act
     on the whole message, not per step).
+
+    ``tag`` is an optional caller-supplied label recorded on the
+    ``execplan.execute`` trace span -- the backward-overlapped gradient
+    sync (:func:`repro.parallel.api.dp_grad_allreduce`) tags each
+    gradient bucket (e.g. ``"grad_bucket3"``) so per-bucket dispatches
+    are identifiable in the trace timeline.
     """
     import jax
 
@@ -377,9 +394,10 @@ def execute(plan: ExecPlan, bucket_rows: Sequence[List], axis_name, *,
     # Per-tick runtime timelines come from the blocking replay in
     # repro.obs.instrument, which follows the same tick_structure().
     ticks = tick_structure(plan, B)
+    attrs = {} if tag is None else {"tag": tag}
     with obs_trace.span("execplan.execute", cat="trace", kind=plan.kind,
                         P=plan.P, n_steps=S, n_buckets=B,
-                        n_ticks=len(ticks)):
+                        n_ticks=len(ticks), **attrs):
         _execute_ticks(plan, bucket_rows, ticks, axis_name, monoid, impl)
     return bucket_rows
 

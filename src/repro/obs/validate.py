@@ -33,12 +33,15 @@ from typing import List, Optional, Sequence
 def _sched_for(kind: str, P: int, r: int):
     from repro.core.schedule import (build_all_gather,
                                      build_bruck_all_gather,
-                                     build_generalized,
-                                     build_reduce_scatter, build_ring)
+                                     build_dual_root, build_generalized,
+                                     build_reduce_scatter, build_ring,
+                                     build_traff_rounds)
     builders = {"ring": build_ring,
                 "reduce_scatter": build_reduce_scatter,
                 "all_gather": build_all_gather,
-                "bruck_all_gather": build_bruck_all_gather}
+                "bruck_all_gather": build_bruck_all_gather,
+                "traff_rounds": build_traff_rounds,
+                "dual_root": build_dual_root}
     if kind in builders:
         return builders[kind](P)
     if kind == "generalized":
@@ -119,6 +122,58 @@ def model_error_table(reports, fabric, monoid=None) -> List[dict]:
     rows.sort(key=lambda r: (r["kind"], r["r"], r["n_buckets"],
                              r["nbytes"]))
     return rows
+
+
+def validate_overlap(sched, nbytes: int, fabric, *,
+                     compute_us: float,
+                     measured_exposed_us: float,
+                     n_buckets: int = 1, itemsize: int = 1,
+                     monoid=None) -> dict:
+    """Predicted-vs-measured overlay for the *exposed* communication of
+    one backward-overlapped dispatch.
+
+    The model side is :func:`repro.core.cost_model.overlap_tick_costs`:
+    the collective's per-tick timeline with ``compute_us`` of
+    overlappable backward compute drained across it, reduced to the
+    exposed total.  The measured side is whatever the caller timed as
+    the collective's un-hidden wallclock (the overlap benchmark derives
+    it as ``t_overlap - t_compute``).  Same ratio/log2 convention as
+    :func:`validate_ticks`, so :func:`fit_ratio` reduces a table of
+    these rows to the overlap model's single-scale miscalibration.
+
+    Golden property (the analogue of the validate_ticks doctest):
+    feeding the model's own exposed total back as "measured" is exact.
+
+    >>> from repro.core.cost_model import PAPER_10GE, overlap_exposed_cost
+    >>> from repro.core.schedule import build_generalized
+    >>> s = build_generalized(4, 1)
+    >>> pred = overlap_exposed_cost(s, 4096, PAPER_10GE,
+    ...                             compute_us=30.0) * 1e6
+    >>> row = validate_overlap(s, 4096, PAPER_10GE, compute_us=30.0,
+    ...                        measured_exposed_us=pred)
+    >>> row["ratio"]
+    1.0
+    """
+    from repro.core.cost_model import overlap_tick_costs
+    rows = overlap_tick_costs(sched, nbytes, fabric, n_buckets,
+                              compute_us=compute_us, itemsize=itemsize,
+                              monoid=monoid)
+    pred_exposed = sum(t["exposed_s"] for t in rows) * 1e6
+    pred_hidden = sum(t["hidden_s"] for t in rows) * 1e6
+    meas = max(float(measured_exposed_us), 0.0)
+    ratio = meas / pred_exposed if pred_exposed else math.inf
+    return {
+        "kind": sched.kind, "r": sched.r, "P": sched.P,
+        "n_buckets": int(n_buckets), "nbytes": int(nbytes),
+        "n_ticks": len(rows),
+        "compute_us": float(compute_us),
+        "predicted_exposed_us": pred_exposed,
+        "predicted_hidden_us": pred_hidden,
+        "predicted_total_us": pred_exposed + pred_hidden,
+        "measured_exposed_us": meas,
+        "ratio": ratio,
+        "log2_ratio": math.log2(ratio) if 0 < ratio < math.inf else None,
+    }
 
 
 def fit_ratio(rows: Sequence[dict]) -> Optional[float]:

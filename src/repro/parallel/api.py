@@ -76,6 +76,19 @@ class ParallelConfig:
     # r = max_r / traff_rounds latency regime the paper targets)
     remat: bool = True
     scan_layers: bool = True
+    overlap_bucket_bytes: Optional[int] = None  # reverse-layer gradient
+    # bucket size for the backward-overlapped sync (None = no bucketing:
+    # one post-backward flat allreduce, the historical behavior)
+    overlap_dispatch: str = "backward"  # backward | post | skip -- when
+    # bucketing is on: "backward" dispatches each bucket's allreduce
+    # from inside the backward pass via custom_vjp markers
+    # (attach_overlap_sync), "post" syncs the same buckets after the
+    # backward completes (the A/B control: identical collectives,
+    # dispatch timing is the only difference), "skip" elides DP sync
+    # entirely (benchmark compute-baseline ONLY -- grads stay unsynced)
+    overlap_compute_us: Optional[float] = None  # per-bucket backward
+    # compute estimate (us) forwarded to the autotuner as its
+    # compute_overlap_us hint; None prices buckets by raw cost
     accum_dtype = jnp.float32
 
     @property
@@ -92,7 +105,9 @@ class ParallelConfig:
 
 def dp_grad_allreduce(tree, pc: ParallelConfig, *, mean: bool = True,
                       fabric: Fabric = TPU_V5E_ICI,
-                      op: CombineLike = "sum"):
+                      op: CombineLike = "sum",
+                      compute_overlap_us: Optional[float] = None,
+                      tag: Optional[str] = None):
     """Gradient allreduce over the DP axes.
 
     With a multi-level ``pc.topology`` this routes through the
@@ -131,6 +146,11 @@ def dp_grad_allreduce(tree, pc: ParallelConfig, *, mean: bool = True,
     operators compose with ``mean=False`` only; ``pc.grad_combine``
     keeps selecting the *implementation* (Pallas vs plain elementwise)
     and composes with ``op`` as ``"<op>:pallas"``.
+
+    ``compute_overlap_us`` is the backward-overlap hint forwarded to the
+    autotuner on the flat path (the hierarchical path prices per level
+    and takes no hint today); ``tag`` labels this dispatch's executor
+    trace span (the overlapped sync passes ``"grad_bucket<k>"``).
     """
     if pc.dp == 1:
         return tree
@@ -146,10 +166,11 @@ def dp_grad_allreduce(tree, pc: ParallelConfig, *, mean: bool = True,
                          f"mean=False (mean only composes with sum)")
     if pc.trace:
         n_elems = sum(int(x.size) for x in jax.tree.leaves(tree))
+        attrs = {} if tag is None else {"tag": tag}
         sp = obs_trace.span("dp_grad_allreduce", cat="trace",
                             dp=pc.dp, n_elems=n_elems, op=monoid.name,
                             hierarchical=pc.hierarchical_dp,
-                            tuning=pc.tuning)
+                            tuning=pc.tuning, **attrs)
     else:
         sp = obs_trace._NULL_SPAN
     with sp:
@@ -170,7 +191,9 @@ def dp_grad_allreduce(tree, pc: ParallelConfig, *, mean: bool = True,
                                           tune=pc.tuning)
         return allreduce_tree(tree, pc.dp_axis_name, mean=mean, r=pc.grad_r,
                               fabric=fabric, combine=combine,
-                              n_buckets=pc.grad_n_buckets, tune=pc.tuning)
+                              n_buckets=pc.grad_n_buckets, tune=pc.tuning,
+                              compute_overlap_us=compute_overlap_us,
+                              tag=tag)
 
 
 def grads_all_finite(tree, pc: ParallelConfig, *,
@@ -203,6 +226,131 @@ def grads_all_finite(tree, pc: ParallelConfig, *,
     synced = dp_grad_allreduce(local[None], pc, mean=False, fabric=fabric,
                                op="max")
     return synced[0] == 0
+
+
+# ---------------------------------------------------------------------------
+#  backward-overlapped gradient sync (reverse-layer bucketing + markers)
+# ---------------------------------------------------------------------------
+#
+# The post-backward sync pays for *all* gradient communication after the
+# last backward FLOP -- nothing is hidden.  The overlapped path groups
+# the parameter leaves into reverse-layer-order buckets
+# (``reverse_layer_buckets``; sized by ``pc.overlap_bucket_bytes``) and
+# wraps each bucket's params in a ``jax.custom_vjp`` identity marker
+# (``attach_overlap_sync``) whose backward rule runs that bucket's
+# ``dp_grad_allreduce``.  Autodiff reaches a marker's backward rule the
+# moment every cotangent of its bucket exists, i.e. right when that
+# layer band's backward completes -- so the last layers' gradients hit
+# the wire while earlier layers are still differentiating, which is
+# exactly the producer the multi-bucket pipelined ExecPlan executor
+# wants.  ``bucketed_grad_sync`` runs the *same* per-bucket collectives
+# after the backward instead (``pc.overlap_dispatch == "post"``): the
+# two modes differ only in dispatch timing, so their results are
+# bit-identical by construction -- the A/B pair the 8-device worker's
+# bit-exactness gate and the overlap benchmark both lean on.
+
+def reverse_layer_buckets(layers, sizes, bucket_bytes):
+    """Greedy reverse-layer-order bucketing of parameter leaves.
+
+    ``layers[i]`` is leaf i's layer index (backward completes highest
+    layer first), ``sizes[i]`` its payload in bytes.  Leaves are taken
+    in descending layer order (ties: ascending leaf index, so the
+    partition is deterministic) and packed into buckets of at most
+    ``bucket_bytes``; a leaf larger than the budget gets its own
+    bucket.  Returns a list of index lists -- an exact partition of
+    ``range(len(layers))``.
+
+    >>> reverse_layer_buckets([0, 1, 1, 2], [4, 4, 4, 4], 8)
+    [[3, 1], [2, 0]]
+    >>> reverse_layer_buckets([0, 1], [4, 100], 8)   # oversize leaf
+    [[1], [0]]
+    >>> sorted(sum(reverse_layer_buckets([2, 0, 1], [9, 9, 9], 4), []))
+    [0, 1, 2]
+    """
+    if len(layers) != len(sizes):
+        raise ValueError(f"reverse_layer_buckets: {len(layers)} layers "
+                         f"vs {len(sizes)} sizes")
+    budget = max(int(bucket_bytes), 1)
+    order = sorted(range(len(layers)), key=lambda i: (-layers[i], i))
+    buckets, cur, cur_bytes = [], [], 0
+    for i in order:
+        if cur and cur_bytes + sizes[i] > budget:
+            buckets.append(cur)
+            cur, cur_bytes = [], 0
+        cur.append(i)
+        cur_bytes += int(sizes[i])
+    if cur:
+        buckets.append(cur)
+    return buckets
+
+
+def _overlap_marker(pc: ParallelConfig, fabric: Fabric, tag: str):
+    """Identity on a bucket's params whose VJP syncs the bucket's grads.
+
+    Forward is the identity (zero cost, fused away); the backward rule
+    runs this bucket's ``dp_grad_allreduce(mean=True)`` on the
+    cotangents, so gradients emerge from ``jax.grad`` already
+    DP-synced -- dispatched at the execution point where this bucket's
+    backward completed, not after the whole pass.
+    """
+    @jax.custom_vjp
+    def marker(*leaves):
+        return leaves
+
+    def fwd(*leaves):
+        return leaves, None
+
+    def bwd(_, cts):
+        synced = dp_grad_allreduce(
+            list(cts), pc, mean=True, fabric=fabric,
+            compute_overlap_us=pc.overlap_compute_us, tag=tag)
+        return tuple(synced)
+
+    marker.defvjp(fwd, bwd)
+    return marker
+
+
+def attach_overlap_sync(tree, buckets, pc: ParallelConfig, *,
+                        fabric: Fabric = TPU_V5E_ICI):
+    """Wrap each bucket of ``tree``'s leaves in its dispatch marker.
+
+    ``buckets`` is the index partition from
+    :func:`reverse_layer_buckets` over ``jax.tree.flatten(tree)``
+    order.  Apply to the *params* before the loss: the returned tree
+    computes identically forward, and under ``jax.grad`` each bucket's
+    gradient comes back DP-mean-synced by the marker's backward rule
+    (callers must then skip the post-backward ``sync_grads_dp``).
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    out = list(leaves)
+    for k, bucket in enumerate(buckets):
+        marker = _overlap_marker(pc, fabric, f"grad_bucket{k}")
+        synced = marker(*[out[i] for i in bucket])
+        for i, v in zip(bucket, synced):
+            out[i] = v
+    return jax.tree.unflatten(treedef, out)
+
+
+def bucketed_grad_sync(grads, buckets, pc: ParallelConfig, *,
+                       fabric: Fabric = TPU_V5E_ICI):
+    """Post-backward sync of the *same* per-bucket collectives.
+
+    The ``overlap_dispatch == "post"`` control arm: per bucket, the
+    identical leaf list in the identical order through the identical
+    ``dp_grad_allreduce`` call as :func:`attach_overlap_sync`'s
+    backward rule -- only the dispatch point differs, which is what
+    makes backward-vs-post bit-exact comparisons meaningful.
+    """
+    leaves, treedef = jax.tree.flatten(grads)
+    out = list(leaves)
+    for k, bucket in enumerate(buckets):
+        synced = dp_grad_allreduce(
+            [out[i] for i in bucket], pc, mean=True, fabric=fabric,
+            compute_overlap_us=pc.overlap_compute_us,
+            tag=f"grad_bucket{k}")
+        for i, v in zip(bucket, synced):
+            out[i] = v
+    return jax.tree.unflatten(treedef, out)
 
 
 def tp_rank(pc: ParallelConfig):

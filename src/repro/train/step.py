@@ -35,7 +35,9 @@ from repro.models.config import ModelConfig
 from repro.models.model import (decode_step, init_caches, init_paged_caches,
                                 loss_and_metrics, paged_decode_step,
                                 param_shapes)
-from repro.parallel.api import ParallelConfig, ParamSpec, dp_grad_allreduce
+from repro.parallel.api import (ParallelConfig, ParamSpec,
+                                attach_overlap_sync, bucketed_grad_sync,
+                                dp_grad_allreduce, reverse_layer_buckets)
 from repro.train.optimizer import (OptConfig, apply_updates_dp,
                                    apply_updates_zero1, clip_by_global_norm,
                                    init_opt_state)
@@ -106,8 +108,12 @@ def sync_grads_dp(grads, specs, pc: ParallelConfig,
         # the forward all-gather but carry a sum over DP -> divide.
         # dp-replicated leaves still need a full allreduce (mean).
         flat, treedef = jax.tree.flatten(grads)
-        sflat = jax.tree.leaves(specs)
-        assert len(flat) == len(sflat)
+        # align the specs to the *grads* treedef: flatten_up_to raises on
+        # any structural mismatch, where zip-by-position over two
+        # independent flattenings would silently pair grad leaves with
+        # the wrong ParamSpec (sharded leaves interleave with replicated
+        # ones in tree order, so a skew here re-scatters the sync)
+        sflat = treedef.flatten_up_to(specs)
         flat = [g / pc.dp if s.fsdp_dim is not None else g
                 for g, s in zip(flat, sflat)]
         repl_idx = [i for i, s in enumerate(sflat) if s.fsdp_dim is None]
@@ -127,6 +133,59 @@ def sync_grads_dp(grads, specs, pc: ParallelConfig,
 def replicate_scalar(x, pc: ParallelConfig, mesh_axes):
     """Make a scalar provably replicated for out_specs=P()."""
     return lax.pmean(x, mesh_axes)
+
+
+# ---------------------------------------------------------------------------
+#  backward-overlapped gradient sync: layer derivation + bucketing
+# ---------------------------------------------------------------------------
+
+def _leaf_layers(params_shapes):
+    """Per-leaf layer index of the params tree, in tree-flatten order.
+
+    The backward pass differentiates the model back-to-front, so the
+    leaves whose gradients complete *first* are the deepest layers.
+    Layer indices (higher = completes earlier in backward):
+
+    * ``embed``        -> 0                (its grad completes last)
+    * ``prefix[i]``    -> 1 + i
+    * ``cycles``       -> 1 + n_prefix    (the stacked scan's backward
+      emits every cycle's gradient at once, so the whole stack is one
+      band -- this is the "scan-carried" arm of the dispatch design:
+      scan-stacked archs get a single band-sized dispatch point)
+    * ``final_norm`` / ``head`` -> 2 + n_prefix  (complete first)
+
+    Dict flattening is alphabetical, NOT layer order, hence the
+    path-based derivation.  The return aligns leaf-for-leaf with
+    ``jax.tree.leaves(params_shapes)``.
+    """
+    import jax.tree_util as jtu
+    n_prefix = len(params_shapes.get("prefix", []))
+    flat, _ = jtu.tree_flatten_with_path(params_shapes)
+    layers = []
+    for path, _leaf in flat:
+        top = getattr(path[0], "key", None)
+        if top == "embed":
+            layers.append(0)
+        elif top == "prefix":
+            layers.append(1 + int(path[1].idx))
+        elif top == "cycles":
+            layers.append(1 + n_prefix)
+        else:                       # final_norm, head
+            layers.append(2 + n_prefix)
+    return layers
+
+
+def overlap_buckets_for(params_shapes, pc: ParallelConfig):
+    """Reverse-layer gradient buckets for this params tree, or ``None``
+    when the overlapped path is off (no ``overlap_bucket_bytes``, pure
+    DP only -- fsdp/zero1 reshape gradient flow themselves)."""
+    if (pc.overlap_bucket_bytes is None or pc.param_mode != "dp"
+            or pc.dp <= 1):
+        return None
+    leaves = jax.tree.leaves(params_shapes)
+    layers = _leaf_layers(params_shapes)
+    sizes = [int(sd.size) * jnp.dtype(sd.dtype).itemsize for sd in leaves]
+    return reverse_layer_buckets(layers, sizes, pc.overlap_bucket_bytes)
 
 
 # ---------------------------------------------------------------------------
@@ -152,14 +211,36 @@ def make_train_step(cfg: ModelConfig, pc: ParallelConfig, mesh: Mesh,
     """``microbatches > 1``: split the local batch and accumulate
     gradients over a scan -- activation footprint (incl. the per-layer
     residual stacks) scales with 1/microbatches while gradient sync and
-    the optimizer run once per step (standard grad accumulation)."""
+    the optimizer run once per step (standard grad accumulation).
+
+    When ``pc.overlap_bucket_bytes`` is set (pure-DP only), gradient
+    sync runs per reverse-layer bucket instead of over one post-backward
+    flat tensor; ``pc.overlap_dispatch`` picks the dispatch point:
+    ``"backward"`` (default) attaches ``custom_vjp`` markers so each
+    bucket's allreduce starts the moment its layer band's backward
+    completes, ``"post"`` runs the identical per-bucket collectives
+    after the backward (the bit-exact A/B control), ``"skip"`` elides DP
+    sync (benchmark compute-baseline only).  Gradient accumulation
+    (``microbatches > 1``) syncs once per step, so the backward-marker
+    arm falls back to the post-backward bucketed sync there.
+    """
+    if pc.overlap_dispatch not in ("backward", "post", "skip"):
+        raise ValueError(f"overlap_dispatch={pc.overlap_dispatch!r} "
+                         "(expected backward | post | skip)")
     params_shapes, specs = param_shapes(cfg, pc)
     opt_shapes = jax.eval_shape(
         partial(init_opt_state, pc=pc, specs=specs), params_shapes)
     mesh_axes = tuple(mesh.axis_names)
+    buckets = overlap_buckets_for(params_shapes, pc)
+    overlap_bwd = (buckets is not None and microbatches == 1
+                   and pc.overlap_dispatch == "backward")
 
     def grad_of(params, batch):
         def local_loss(p):
+            if overlap_bwd:
+                # identity forward; each bucket's VJP dispatches its
+                # dp_grad_allreduce as its backward completes
+                p = attach_overlap_sync(p, buckets, pc, fabric=fabric)
             return loss_and_metrics(p, specs, batch, cfg, pc,
                                     attn_impl=attn_impl)
         return jax.value_and_grad(local_loss, has_aux=True)(params)
@@ -193,7 +274,17 @@ def make_train_step(cfg: ModelConfig, pc: ParallelConfig, mesh: Mesh,
             # global mean from the psum'd (total, count) below
             (_loss, (total, count, aux)), grads = grad_of(params, batch)
         grads = sync_grads_tp(grads, specs, pc)
-        grads = sync_grads_dp(grads, specs, pc, fabric)
+        if buckets is not None:
+            if overlap_bwd or pc.overlap_dispatch == "skip":
+                # backward: the markers already synced every bucket
+                # in-backward; skip: benchmark compute baseline, grads
+                # deliberately left unsynced
+                pass
+            else:
+                grads = bucketed_grad_sync(grads, buckets, pc,
+                                           fabric=fabric)
+        else:
+            grads = sync_grads_dp(grads, specs, pc, fabric)
         if pc.param_mode == "dp":
             grads = clip_by_global_norm(grads, oc)
         elif pc.param_mode == "zero1" and pc.dp > 1:

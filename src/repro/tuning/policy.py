@@ -95,6 +95,7 @@ def lookup(
     op: str = "sum",
     fingerprint: Optional[Fingerprint] = None,
     cache_path: Optional[os.PathLike] = None,
+    compute_overlap_us: Optional[float] = None,
 ) -> Optional[Choice]:
     """Measured-fastest ``Choice`` for an allreduce of ``nbytes`` over
     ``P`` devices, or ``None`` when the table has no compatible entry.
@@ -106,8 +107,15 @@ def lookup(
     winner never answers a uniform-geometry message of another dtype.
     ``op`` is the query's combine operator: only measurements timed
     under the same operator answer (the grid times each op it covers;
-    an op with no measurements falls back to the analytic model)."""
+    an op with no measurements falls back to the analytic model).
+    ``compute_overlap_us`` marks an overlap-hinted query (the
+    backward-overlapped gradient sync ranks by *exposed* cost): the
+    grid times standalone collectives with no compute running, so no
+    measurement carries overlap context and a hinted query is never
+    answered from the table -- always ``None``, model decides."""
     if P <= 1:
+        return None
+    if compute_overlap_us is not None:
         return None
     fp = fingerprint if fingerprint is not None else _cached_fingerprint()
     meas = _load(cache_path).lookup(fp, P)
@@ -228,12 +236,22 @@ def skewed_cells(
 
 
 def best_measured(
-    meas: List[Measurement], nbytes: int, *, itemsize: int = 1, op: str = "sum"
+    meas: List[Measurement],
+    nbytes: int,
+    *,
+    itemsize: int = 1,
+    op: str = "sum",
+    compute_overlap_us: Optional[float] = None,
 ) -> Optional[Choice]:
     """Nearest-size interpolation over a measurement list (one backend,
     one P).  Exposed separately so tests can drive it without file I/O.
     Measurements whose element-ragged classification or combine operator
-    differs from the query's are dropped before bracketing.
+    differs from the query's are dropped *before* bracketing, so a
+    query outside the measured range of its own class can never be
+    answered by a wrong-class neighbor at the extrapolation boundary.
+    ``compute_overlap_us`` marks an overlap-hinted query: no
+    measurement carries overlap context, so it always returns ``None``
+    (see :func:`lookup`).
 
     >>> from repro.tuning.cache import Measurement
     >>> meas = [Measurement(8, 1024, "generalized", 1, 1, 50.0),
@@ -243,8 +261,10 @@ def best_measured(
     ('generalized', 1, 'measured')
     >>> best_measured(meas, 1 << 30) is None    # > 4x past the table
     True
+    >>> best_measured(meas, 1024, compute_overlap_us=500.0) is None
+    True
     """
-    if not meas or nbytes <= 0:
+    if not meas or nbytes <= 0 or compute_overlap_us is not None:
         return None
     ragged_q = (nbytes // max(int(itemsize), 1)) % meas[0].P != 0
     meas = [m for m in meas if m.ragged == ragged_q and m.op == op]

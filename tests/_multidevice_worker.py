@@ -761,6 +761,140 @@ def check_conformance():
     print("ok conformance")
 
 
+def check_overlap():
+    """Backward-overlapped bucketed gradient sync: the bit-exactness
+    gate of the overlap design.  For dense, scan-stacked (deep cycles)
+    and MoE archs on the 8-device mesh, three train-step arms run 3
+    steps from identical initial state:
+
+    * ``whole``    -- overlap off (one post-backward tree allreduce);
+    * ``post``     -- reverse-layer buckets synced after the backward;
+    * ``backward`` -- the same buckets dispatched in-backward via the
+      ``custom_vjp`` markers.
+
+    post and backward run *identical* per-bucket collectives over
+    identical leaf lists -- only dispatch timing differs -- so their
+    fp32 params must match bit-for-bit every step.  whole-vs-bucketed
+    changes the element->chunk assignment (different fp32 association),
+    so it is held to allclose, not bit equality."""
+    import jax.numpy as jnp
+    from jax.sharding import Mesh
+
+    from repro.models.config import ModelConfig, MoEConfig
+    from repro.models.model import init_params
+    from repro.parallel.api import ParallelConfig
+    from repro.train.optimizer import OptConfig, init_opt_state
+    from repro.train.step import make_train_step
+
+    n = len(jax.devices())
+    mesh = Mesh(np.array(jax.devices()).reshape(n, 1), ("data", "model"))
+    configs = {
+        "dense": ModelConfig(name="t", family="dense", n_layers=2,
+                             d_model=64, n_heads=4, n_kv_heads=2,
+                             d_ff=160, vocab=256, head_dim=16,
+                             act="swiglu"),
+        "scan": ModelConfig(name="t", family="dense", n_layers=6,
+                            d_model=48, n_heads=4, n_kv_heads=4,
+                            d_ff=96, vocab=128, head_dim=12,
+                            act="swiglu"),
+        "moe": ModelConfig(name="t", family="moe", n_layers=2,
+                           d_model=32, n_heads=4, n_kv_heads=4,
+                           d_ff=48, vocab=128,
+                           moe=MoEConfig(n_experts=2 * n, top_k=2,
+                                         d_expert=48)),
+    }
+    oc = OptConfig(lr=1e-3)
+    rng = np.random.default_rng(7)
+    for arch, cfg in configs.items():
+        tok = rng.integers(0, cfg.vocab, (n, 16)).astype(np.int32)
+        lab = rng.integers(0, cfg.vocab, (n, 16)).astype(np.int32)
+        batch = {"tokens": tok, "labels": lab}
+        arms = {"whole": dict(overlap_bucket_bytes=None),
+                "post": dict(overlap_bucket_bytes=32 << 10,
+                             overlap_dispatch="post"),
+                "backward": dict(overlap_bucket_bytes=32 << 10,
+                                 overlap_dispatch="backward")}
+        state = {}
+        for name, kw in arms.items():
+            pc = ParallelConfig(dp=n, tp=1, param_mode="dp", **kw)
+            bundle = make_train_step(cfg, pc, mesh, oc, donate=False)
+            params, _ = init_params(cfg, pc, jax.random.PRNGKey(0))
+            opt = init_opt_state(params, pc=pc, specs=bundle.specs)
+            losses = []
+            for _ in range(3):
+                params, opt, metrics = bundle.train_step(params, opt,
+                                                         batch)
+                losses.append(float(metrics["loss"]))
+            state[name] = (jax.device_get(params), losses)
+        p_bwd, l_bwd = state["backward"]
+        p_post, l_post = state["post"]
+        p_whole, _ = state["whole"]
+        for (pa, pb) in zip(jax.tree.leaves(p_bwd),
+                            jax.tree.leaves(p_post)):
+            assert pa.dtype == jnp.float32, pa.dtype
+            assert (np.asarray(pa) == np.asarray(pb)).all(), \
+                f"{arch}: backward vs post params not bit-identical"
+        assert l_bwd == l_post, (arch, l_bwd, l_post)
+        for (pa, pw) in zip(jax.tree.leaves(p_bwd),
+                            jax.tree.leaves(p_whole)):
+            np.testing.assert_allclose(np.asarray(pa), np.asarray(pw),
+                                       rtol=2e-5, atol=2e-5)
+        print(f"ok overlap {arch}")
+    print("ok overlap")
+
+
+def check_grad_interleave():
+    """Satellite regression for the fsdp hybrid re-assembly in
+    sync_grads_dp: a grads tree whose *tree-flatten order interleaves*
+    fsdp-sharded and dp-replicated leaves must come back with every
+    leaf matched to its own ParamSpec -- sharded leaves divided by dp
+    (their VJP already reduce-scattered a DP sum), replicated leaves
+    allreduced to the DP mean, and no cross-pairing between the two."""
+    from jax.sharding import Mesh
+
+    from repro.parallel.api import ParallelConfig, ParamSpec
+    from repro.train.step import sync_grads_dp
+
+    n = len(jax.devices())
+    mesh = Mesh(np.array(jax.devices()), ("data",))
+    pc = ParallelConfig(dp_axes=("data",), dp=n, tp=1, param_mode="fsdp")
+    rng = np.random.default_rng(11)
+    # alphabetical flatten order a,b,c,d,e interleaves the two kinds
+    specs = {"a": ParamSpec(),                 # replicated
+             "b": ParamSpec(fsdp_dim=0),       # sharded
+             "c": {"w": ParamSpec(),           # replicated (nested)
+                   "x": ParamSpec(fsdp_dim=1)},
+             "d": ParamSpec(fsdp_dim=0),
+             "e": ParamSpec()}
+    shapes = {"a": (3,), "b": (2, 5), "c": {"w": (4,), "x": (2, 2)},
+              "d": (6,), "e": (2, 3)}
+    full = jax.tree.map(
+        lambda shp: rng.standard_normal((n,) + shp).astype(np.float32),
+        shapes, is_leaf=lambda x: isinstance(x, tuple))
+
+    def f(g):
+        g = jax.tree.map(lambda v: v[0], g)
+        out = sync_grads_dp(g, specs, pc)
+        return jax.tree.map(lambda v: v[None], out)
+
+    pspecs = jax.tree.map(lambda _: P("data"), shapes,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    g = jax.jit(shard_map(f, mesh=mesh, in_specs=(pspecs,),
+                          out_specs=pspecs))
+    out = jax.device_get(g(full))
+    flat_out, _ = jax.tree.flatten(out)
+    flat_in, _ = jax.tree.flatten(full)
+    flat_specs = [specs["a"], specs["b"], specs["c"]["w"],
+                  specs["c"]["x"], specs["d"], specs["e"]]
+    for got, x, sp in zip(flat_out, flat_in, flat_specs):
+        if sp.fsdp_dim is not None:
+            want = x / n                  # per-device sum -> mean
+        else:
+            want = np.broadcast_to(x.mean(0), x.shape)  # DP mean
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+    print("ok grad_interleave")
+
+
 if __name__ == "__main__":
     which = sys.argv[1] if len(sys.argv) > 1 else "all"
     checks = dict(allreduce=check_allreduce_flat, psum=check_vs_psum,
@@ -769,7 +903,9 @@ if __name__ == "__main__":
                   execplan=check_execplan, ragged=check_ragged,
                   a2a=check_a2a, maxreduce=check_maxreduce,
                   moe=check_moe_dispatch, conformance=check_conformance,
-                  elastic_resize=check_elastic_resize, serve=check_serve)
+                  elastic_resize=check_elastic_resize, serve=check_serve,
+                  overlap=check_overlap,
+                  grad_interleave=check_grad_interleave)
     if which == "all":
         for fn in checks.values():
             fn()

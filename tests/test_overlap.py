@@ -1,0 +1,247 @@
+"""Backward-overlapped gradient sync: reverse-layer bucketing, the
+exposed-comm roofline, the overlap-hinted ``choose()`` path, and the
+8-device bit-exactness gate (``tests/_multidevice_worker.py overlap``).
+
+The bit-exactness contract being gated: the "backward" arm (per-bucket
+``custom_vjp`` dispatch) and the "post" arm (identical per-bucket
+collectives after the backward) run the same collectives over the same
+leaf lists, so their fp32 gradients -- and therefore params over 3
+steps -- must match bit-for-bit.  Whole-tree vs bucketed changes the
+element->chunk assignment (different fp32 association), so that pair
+is held to allclose instead.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.autotune import choose
+from repro.core.cost_model import (HOST_CPU, PAPER_10GE,
+                                   overlap_exposed_cost,
+                                   overlap_tick_costs, ragged_tick_costs)
+from repro.core.schedule import build_generalized, build_ring
+from repro.models.config import ModelConfig
+from repro.models.model import param_shapes
+from repro.obs.validate import fit_ratio, validate_overlap
+from repro.parallel.api import ParallelConfig, reverse_layer_buckets
+from repro.train.step import _leaf_layers, overlap_buckets_for
+
+TINY = ModelConfig(name="t", family="dense", n_layers=2, d_model=64,
+                   n_heads=4, n_kv_heads=2, d_ff=160, vocab=256,
+                   head_dim=16, act="swiglu")
+
+
+# ---------------------------------------------------------------------------
+#  reverse-layer bucketing
+# ---------------------------------------------------------------------------
+
+def test_reverse_layer_buckets_orders_deepest_first():
+    # layer 2 completes its backward first -> its leaves lead bucket 0
+    buckets = reverse_layer_buckets([0, 1, 1, 2], [4, 4, 4, 4], 8)
+    assert buckets == [[3, 1], [2, 0]]
+    flat = [i for b in buckets for i in b]
+    assert sorted(flat) == [0, 1, 2, 3]          # partition, no dupes
+
+
+def test_reverse_layer_buckets_budget_and_oversize():
+    # an oversize leaf gets its own bucket; packing never exceeds the
+    # budget except for a single leaf bigger than the whole budget
+    buckets = reverse_layer_buckets([0, 0, 0], [10, 3, 3], 8)
+    sizes = [10, 3, 3]
+    assert [i for b in buckets for i in b] == [0, 1, 2]
+    for b in buckets:
+        if len(b) > 1:
+            assert sum(sizes[i] for i in b) <= 8
+    # one huge bucket budget -> everything packs together
+    assert reverse_layer_buckets([0, 1], [4, 4], 1 << 30) == [[1, 0]]
+
+
+def test_reverse_layer_buckets_ties_stable_and_validates():
+    # equal layers keep ascending leaf order (deterministic across runs)
+    assert reverse_layer_buckets([1, 1, 1], [1, 1, 1], 10) == [[0, 1, 2]]
+    with pytest.raises(ValueError):
+        reverse_layer_buckets([0, 1], [4], 8)
+
+
+# ---------------------------------------------------------------------------
+#  layer derivation over real param trees
+# ---------------------------------------------------------------------------
+
+def test_leaf_layers_dense_tree():
+    pc = ParallelConfig(dp=8, tp=1, param_mode="dp")
+    shapes, _ = param_shapes(TINY, pc)
+    layers = _leaf_layers(shapes)
+    leaves = jax.tree.leaves(shapes)
+    assert len(layers) == len(leaves)
+    import jax.tree_util as jtu
+    flat, _ = jtu.tree_flatten_with_path(shapes)
+    by_top = {}
+    for (path, _leaf), layer in zip(flat, layers):
+        by_top.setdefault(path[0].key, set()).add(layer)
+    # embed's grad completes last (layer 0); the stacked scan is one
+    # band; final_norm/head complete first (highest layer)
+    assert by_top["embed"] == {0}
+    assert by_top["cycles"] == {1}
+    assert by_top["final_norm"] == {2}
+    assert by_top["head"] == {2}
+
+
+def test_overlap_buckets_for_gating():
+    shapes, _ = param_shapes(TINY, ParallelConfig(dp=8, tp=1,
+                                                  param_mode="dp"))
+    # off by default; off for dp=1; off for fsdp (it reshapes gradient
+    # flow itself); on only for pure DP with a byte budget
+    assert overlap_buckets_for(
+        shapes, ParallelConfig(dp=8, tp=1, param_mode="dp")) is None
+    assert overlap_buckets_for(
+        shapes, ParallelConfig(dp=1, tp=1, param_mode="dp",
+                               overlap_bucket_bytes=1 << 20)) is None
+    assert overlap_buckets_for(
+        shapes, ParallelConfig(dp=8, tp=1, param_mode="fsdp",
+                               overlap_bucket_bytes=1 << 20)) is None
+    buckets = overlap_buckets_for(
+        shapes, ParallelConfig(dp=8, tp=1, param_mode="dp",
+                               overlap_bucket_bytes=32 << 10))
+    assert buckets is not None and len(buckets) >= 2
+    assert sorted(i for b in buckets for i in b) == \
+        list(range(len(jax.tree.leaves(shapes))))
+
+
+def test_make_train_step_rejects_unknown_dispatch():
+    from jax.sharding import Mesh
+
+    from repro.train.optimizer import OptConfig
+    from repro.train.step import make_train_step
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    pc = ParallelConfig(dp=1, tp=1, overlap_dispatch="bogus")
+    with pytest.raises(ValueError, match="overlap_dispatch"):
+        make_train_step(TINY, pc, mesh, OptConfig(lr=1e-3))
+
+
+# ---------------------------------------------------------------------------
+#  exposed-comm roofline
+# ---------------------------------------------------------------------------
+
+def test_overlap_tick_costs_invariants():
+    sched = build_generalized(8, 1)
+    for n_buckets in (1, 3):
+        base = ragged_tick_costs(sched, 1 << 16, PAPER_10GE, n_buckets)
+        total = sum(t["total_s"] for t in base)
+        for compute_us in (0.0, total * 0.5e6, total * 10e6):
+            rows = overlap_tick_costs(sched, 1 << 16, PAPER_10GE,
+                                      n_buckets, compute_us=compute_us)
+            assert len(rows) == len(base)
+            for r, b in zip(rows, base):
+                # overlay never changes the underlying tick timeline
+                assert r["total_s"] == b["total_s"]
+                assert r["hidden_s"] + r["exposed_s"] == \
+                    pytest.approx(r["total_s"])
+                assert 0.0 <= r["hidden_s"] <= r["total_s"]
+            exposed = sum(r["exposed_s"] for r in rows)
+            want = max(0.0, total - compute_us * 1e-6)
+            assert exposed == pytest.approx(want)
+            assert overlap_exposed_cost(
+                sched, 1 << 16, PAPER_10GE, n_buckets,
+                compute_us=compute_us) == pytest.approx(want)
+
+
+def test_overlap_drains_budget_in_tick_order():
+    # a budget that covers exactly the first tick hides it fully and
+    # leaves every later tick fully exposed
+    sched = build_ring(8)
+    base = ragged_tick_costs(sched, 1 << 20, PAPER_10GE)
+    first_us = base[0]["total_s"] * 1e6
+    rows = overlap_tick_costs(sched, 1 << 20, PAPER_10GE,
+                              compute_us=first_us)
+    assert rows[0]["exposed_s"] == pytest.approx(0.0)
+    assert rows[1]["hidden_s"] == pytest.approx(0.0)
+
+
+# ---------------------------------------------------------------------------
+#  overlap-hinted choose()
+# ---------------------------------------------------------------------------
+
+def test_choose_hint_none_is_identical_to_default():
+    a = choose(8, 1 << 20, HOST_CPU, tune=False)
+    b = choose(8, 1 << 20, HOST_CPU, tune=False, compute_overlap_us=None)
+    assert a == b
+
+
+def test_choose_hint_cost_is_exposed_and_monotone():
+    raw = choose(8, 1 << 22, HOST_CPU, tune=False).cost
+    prev = None
+    for budget_us in (0.1, raw * 0.25e6, raw * 0.75e6, raw * 100e6):
+        ch = choose(8, 1 << 22, HOST_CPU, tune=False,
+                    compute_overlap_us=budget_us)
+        assert 0.0 <= ch.cost <= raw + 1e-12
+        if prev is not None:
+            assert ch.cost <= prev + 1e-12   # more budget, less exposed
+        prev = ch.cost
+    assert prev == 0.0                       # everything hides eventually
+
+
+# ---------------------------------------------------------------------------
+#  predicted-vs-measured overlay
+# ---------------------------------------------------------------------------
+
+def test_validate_overlap_fit_ratio_golden():
+    sched = build_generalized(8, 2)
+    rows = []
+    for compute_us in (0.0, 20.0, 200.0):
+        pred = overlap_exposed_cost(sched, 1 << 16, PAPER_10GE,
+                                    compute_us=compute_us) * 1e6
+        if pred <= 0:
+            continue
+        rows.append(validate_overlap(sched, 1 << 16, PAPER_10GE,
+                                     compute_us=compute_us,
+                                     measured_exposed_us=pred))
+    assert rows and fit_ratio(rows) == pytest.approx(1.0)
+    # 2x-miscalibrated measurements reduce to a 2x fit ratio
+    rows2 = [validate_overlap(sched, 1 << 16, PAPER_10GE,
+                              compute_us=r["compute_us"],
+                              measured_exposed_us=2 *
+                              r["predicted_exposed_us"])
+             for r in rows]
+    assert fit_ratio(rows2) == pytest.approx(2.0)
+
+
+# ---------------------------------------------------------------------------
+#  8-device subprocess gates
+# ---------------------------------------------------------------------------
+
+_WORKER = os.path.join(os.path.dirname(__file__), "_multidevice_worker.py")
+
+
+def _spawn(which, timeout):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["JAX_PLATFORMS"] = "cpu"
+    res = subprocess.run([sys.executable, _WORKER, which], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    assert res.returncode == 0, \
+        f"{which} failed:\n{res.stdout[-4000:]}\n{res.stderr[-4000:]}"
+    return res.stdout
+
+
+@pytest.mark.slow
+@pytest.mark.xdist_group("subprocess")
+def test_overlap_bit_exact_8dev():
+    """backward-vs-post bit-identical fp32 params over 3 steps for
+    dense + scan-stacked + MoE archs; allclose vs the whole-tree path
+    (see check_overlap in _multidevice_worker.py)."""
+    out = _spawn("overlap", timeout=1200)
+    for arch in ("dense", "scan", "moe"):
+        assert f"ok overlap {arch}" in out, out
+
+
+@pytest.mark.xdist_group("subprocess")
+def test_grad_sync_fsdp_interleaved_8dev():
+    """Satellite regression: sync_grads_dp's fsdp hybrid re-assembly on
+    a tree whose flatten order interleaves sharded and replicated
+    leaves (see check_grad_interleave in _multidevice_worker.py)."""
+    out = _spawn("grad_interleave", timeout=600)
+    assert "ok grad_interleave" in out, out

@@ -145,3 +145,38 @@ def test_scheduler_greedy_matches_solo(batch_slots, data):
         solo.generate([r2])
         assert r2.out_tokens == r.out_tokens, \
             (len(r.prompt), r.out_tokens, r2.out_tokens)
+
+
+def test_stats_wellformed_before_any_request_completes():
+    """Satellite regression: Engine.stats() must return a well-formed,
+    JSON-serializable snapshot with zeroed counts on a fresh engine and
+    mid-flight -- the serving benchmark snapshots stats() around every
+    QPS level, including before the first request finishes."""
+    import json
+
+    eng = _engine(2)
+    s0 = eng.stats()
+    json.dumps(s0)                       # plain JSON, no exception
+    assert s0["requests"] == 0 and s0["tokens"] == 0
+    assert s0["ticks"] == 0 and s0["prefill_ticks"] == 0
+    assert s0["queued"] == 0 and s0["live"] == 0
+    for hist in (s0["ttft_us"], s0["request_latency_us"]):
+        assert hist["count"] == 0 and hist["sum"] == 0.0
+        assert hist["mean"] is None and hist["p99"] is None
+
+    # submitted but not yet stepped: the submission counter and gauges
+    # move, finished-request distributions stay empty
+    [r] = _requests(3, [6], [4])
+    eng.submit(r)
+    s1 = eng.stats()
+    json.dumps(s1)
+    assert s1["queued"] + s1["live"] == 1
+    assert s1["requests"] == 1
+    assert s1["request_latency_us"]["count"] == 0
+
+    # one tick in (request still unfinished): still well-formed
+    eng.step()
+    s2 = eng.stats()
+    json.dumps(s2)
+    assert s2["ticks"] >= 1
+    assert s2["request_latency_us"]["count"] == 0

@@ -556,3 +556,43 @@ def test_choose_uses_persisted_deltas_when_tuned(tuned_env):
     ch = choose(8, 512, TPU_V5E_ICI, tune=True)
     assert ch.source == "skew"
     assert choose(8, 512, TPU_V5E_ICI, tune=False).source == "model"
+
+
+# ---------------------------------------------------------------------------
+#  class boundaries at the extrapolation edge + overlap-hinted queries
+# ---------------------------------------------------------------------------
+
+
+def test_out_of_range_query_with_only_wrong_op_neighbors_is_none():
+    # the sum-op class was measured only at 16 KiB; a 4 MiB sum query is
+    # 256x past it.  The max-op class has a 1 MiB neighbor within the 4x
+    # window -- it must NOT answer the sum query: class filtering happens
+    # before size bracketing, so the analytic model decides (None)
+    rows = [
+        Measurement(P=8, nbytes=16 << 10, kind="ring", r=0, n_buckets=1, us=10.0),
+        Measurement(
+            P=8, nbytes=1 << 20, kind="ring", r=0, n_buckets=1, us=90.0, op="max"
+        ),
+    ]
+    near_max = best_measured(rows, 4 << 20, op="max")
+    assert near_max is not None and near_max.source == "measured"
+    assert best_measured(rows, 4 << 20, op="sum") is None
+    # same guard for the element-ragged class: a ragged query (8193 f32
+    # elements over P=8, well inside the sum row's 4x size window)
+    # cannot borrow the divisible-geometry neighbor
+    assert best_measured(rows, 8193 * 4, itemsize=4, op="sum") is None
+
+
+def test_overlap_hinted_query_bypasses_measured_table(tuned_env):
+    # the table would answer (and flip the winner) for a plain query...
+    _flip_cache(tuned_env)
+    assert choose(8, 1 << 20, HOST_CPU, tune=True).source == "measured"
+    # ...but the grid times standalone collectives with no compute
+    # running, so an overlap-hinted query is never answered from it:
+    # both the policy layer and the tuned choose() fall back to the
+    # model's exposed-cost ranking
+    assert policy.lookup(8, 1 << 20, compute_overlap_us=1e3) is None
+    hinted = choose(8, 1 << 20, HOST_CPU, tune=True, compute_overlap_us=1e3)
+    assert hinted.source == "model"
+    raw = choose(8, 1 << 20, HOST_CPU, tune=False).cost
+    assert 0.0 <= hinted.cost <= raw
